@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: oracle wall time (CPU) + structural VMEM/roofline
+numbers for the Pallas kernels (the TPU target numbers come from §Roofline,
+not wall clock — this container is CPU-only)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import generators
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def bench_rows() -> List[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # BSR SpMM oracle vs segment-sum formulation (DiDiC hot path)
+    g = generators.two_cluster(n_per=512, p_in=0.05, p_out=0.005, seed=0)
+    bell = g.to_block_ell(block_size=128)
+    x = jnp.asarray(rng.normal(size=(bell.padded_rows, 128)).astype(np.float32))
+    from repro.kernels.bsr_spmm.ref import bell_matmul_ref
+    blocks = jnp.asarray(bell.blocks)
+    cols = jnp.asarray(bell.block_cols)
+    mask = jnp.asarray(bell.block_mask)
+    f_bell = jax.jit(lambda x: bell_matmul_ref(blocks, cols, mask, x))
+    us = _time(f_bell, x)
+    rows.append(f"kernel/bsr_spmm_ref/us_per_call,{us:.1f},N={bell.padded_rows} F=128")
+    s, r, w = g.undirected
+    sj, rj, wj = jnp.asarray(s), jnp.asarray(r), jnp.asarray(w)
+    f_seg = jax.jit(
+        lambda x: jax.ops.segment_sum(wj[:, None] * x[rj], sj, num_segments=g.n_nodes)
+    )
+    xs = x[: g.n_nodes]
+    us2 = _time(f_seg, xs)
+    rows.append(f"kernel/segment_sum_spmm/us_per_call,{us2:.1f},E={s.shape[0]}")
+    # structural: VMEM working set of the Pallas kernel per grid step
+    vmem = (128 * 128 + 2 * 128 * 128) * 4
+    rows.append(f"kernel/bsr_spmm/vmem_bytes_per_step,{vmem},3 tiles fp32 (<<16MiB)")
+
+    # EmbeddingBag oracle (DIN hot path)
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    table = jnp.asarray(rng.normal(size=(100_000, 18)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 100_000, size=(4096, 100)).astype(np.int32))
+    wgt = jnp.ones((4096, 100), jnp.float32)
+    f_bag = jax.jit(lambda t, i, w: embedding_bag_ref(t, i, w))
+    us3 = _time(f_bag, table, idx, wgt)
+    rows.append(f"kernel/embedding_bag_ref/us_per_call,{us3:.1f},B=4096 L=100 D=18")
+
+    # Flash attention oracle vs naive (LM hot path)
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jnp.asarray(rng.normal(size=(8, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    f_attn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us4 = _time(f_attn, q, k, v)
+    rows.append(f"kernel/attention_ref/us_per_call,{us4:.1f},BH=8 T=512 Dh=64 GQA2")
+    return rows

@@ -1,0 +1,301 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing harness: named variants of the three chosen cells,
+each compiled on the single-pod production mesh and measured with the same
+machinery as the baseline dry-run. Appends records to results/perf.jsonl.
+
+Chosen cells (from the baseline roofline table):
+  1. granite-3-8b × train_4k   — representative dense-LM train cell
+     (variants: attention layout, remat policy)
+  2. qwen3-moe-30b-a3b × train_4k — most collective-bound cell (399 s
+     collective term; variants: dense dispatch vs shard_map local EP)
+  3. gcn-cora × ogb_products   — most paper-representative cell
+     (variants: XLA auto-sharded message passing vs DiDiC-placed halo
+     exchange vs random-placed halo exchange — the paper's claim in
+     roofline units)
+
+Usage: PYTHONPATH=src:. python benchmarks/perf_iterations.py [--only NAME]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import collective_stats
+
+
+def _measure(step_fn, abstract_args, in_specs, mesh, probe=None):
+    from repro.distributed.sharding import to_shardings
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        lowered = jax.jit(step_fn, in_shardings=to_shardings(mesh, in_specs)).lower(*abstract_args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+    rec = {
+        "compile_s": round(time.time() - t0, 1),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total_bytes"],
+        "collective_count": coll["total_count"],
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    if probe is not None:
+        # layer probe correction (see launch/dryrun.py)
+        l_total, spec1, spec2 = probe
+        r1 = _measure(spec1.step_fn, spec1.abstract_args, spec1.in_specs, mesh)
+        r2 = _measure(spec2.step_fn, spec2.abstract_args, spec2.in_specs, mesh)
+        for key in ("flops", "bytes_accessed", "collective_bytes"):
+            rec[key] = r1[key] + (l_total - 1) * (r2[key] - r1[key])
+    return rec
+
+
+# ---------------------------------------------------------------- LM cells
+def lm_variant(arch_module, shape, mesh, **overrides):
+    from repro.configs import base
+
+    full = dataclasses.replace(arch_module.FULL, **overrides)
+    spec = base.lm_dryrun(full, shape, mesh)
+    spec1 = base.lm_dryrun(full, shape, mesh, n_layers_override=1)
+    spec2 = base.lm_dryrun(full, shape, mesh, n_layers_override=2)
+    return _measure(spec.step_fn, spec.abstract_args, spec.in_specs, mesh,
+                    probe=(full.n_layers, spec1, spec2))
+
+
+# ---------------------------------------------------------------- GCN cell
+def measure_products_halo_stats(scale: float = 0.01, n_shards: int = 16) -> dict:
+    """Measure placement statistics on a reduced products-like graph.
+
+    Returns, per placement method, the edge-cut fraction, the boundary-node
+    fraction (drives the all-gather halo), and the max pairwise ghost count
+    (drives the all-to-all halo) — all as *fractions of block size* so they
+    scale to the full ogbn-products dimensions.
+    """
+    from repro.core import metrics, partitioners
+    from repro.core.didic import DidicConfig, didic_partition
+    from repro.distributed.placement import build_layout
+    from repro.graphs import datasets
+
+    g = datasets.load("products_like", scale=scale)
+    out = {"n_nodes": g.n_nodes}
+    did, _ = didic_partition(g, DidicConfig(k=n_shards, iterations=40), seed=0)
+    rand = partitioners.random_partition(g.n_nodes, n_shards, seed=0)
+    s_arr, r_arr, _ = g.undirected
+    for name, parts in (("random", rand), ("didic", did)):
+        layout = build_layout(g, parts, n_shards)
+        shard_s = layout.old_to_new[s_arr] // layout.block
+        shard_r = layout.old_to_new[r_arr] // layout.block
+        cross = shard_s != shard_r
+        # boundary fraction: nodes exporting to any foreign shard
+        boundary = np.unique(s_arr[cross]).shape[0] / g.n_nodes
+        # pairwise ghosts: unique (sender, dst-shard) pairs, max over pairs
+        pair_key = (s_arr[cross].astype(np.int64) * n_shards + shard_r[cross])
+        per_pair = np.bincount(
+            np.unique(pair_key) % n_shards
+            + (np.unique(pair_key) // n_shards % n_shards) * n_shards,
+            minlength=n_shards * n_shards,
+        )
+        out[name] = {
+            "cut": metrics.edge_cut_fraction(g, parts),
+            "boundary_frac": float(boundary),
+            "pair_ghost_frac": float(per_pair.max() / g.n_nodes),
+        }
+    return out
+
+
+def gcn_products_halo_variant(mesh, stats: dict, exchange: str):
+    """gcn-cora × ogb_products with halo-exchange message passing.
+
+    ``exchange``: 'all_gather' broadcasts each shard's boundary rows to all
+    shards (volume S·B_max·F — cheap only when boundaries are small);
+    'all_to_all' sends each shard pair only its ghosts (volume S·Hp·F ∝
+    edge cut). Table shapes derive from *measured* placement statistics on
+    the reduced graph; index tables are ShapeDtypeStructs — lowering needs
+    shapes only, and collective volume depends only on them.
+    """
+    from repro.optim import adamw
+    n, e_dir, d_feat, d_hidden, n_cls = 2_449_029, 61_859_140, 100, 16, 7
+    from repro.distributed.sharding import batch_axes
+    data_axes = batch_axes(mesh)
+    S = 1
+    for a in data_axes:
+        S *= mesh.shape[a]
+    block = -(-n // S // 8) * 8
+    e_sym = 2 * e_dir
+    e_max = -(-e_sym // S // 8) * 8 + 64
+    b_max = max(int(stats["boundary_frac"] * n / S) + 8, 16)
+    hp_max = max(int(stats["pair_ghost_frac"] * n) + 8, 16)  # per shard pair
+    g_max = min(int(stats["cut"] * e_sym / S) + 64, e_max)
+
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "x": sds((S * block, d_feat), jnp.float32),
+        "labels": sds((S * block,), jnp.int32),
+        "edge_src": sds((S, e_max), jnp.int32),
+        "edge_dst": sds((S, e_max), jnp.int32),
+        "edge_w": sds((S, e_max), jnp.float32),
+        "edge_mask": sds((S, e_max), jnp.float32),
+        "ghost_src": sds((S, g_max), jnp.int32),
+    }
+    if exchange == "all_gather":
+        batch["boundary_idx"] = sds((S, b_max), jnp.int32)
+    else:
+        batch["pair_send_idx"] = sds((S, S, hp_max), jnp.int32)
+    bspecs = {k: (P(data_axes) if v.ndim == 1 and k == "labels" else P(data_axes, *([None] * (v.ndim - 1))))
+              for k, v in batch.items()}
+    dims = [d_feat, d_hidden, n_cls]
+    params = {f"w{i}": sds((dims[i], dims[i + 1]), jnp.float32) for i in range(2)}
+    pspecs = {k: P() for k in params}
+    opt_abs = {"m": params, "v": params, "step": sds((), jnp.int32)}
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    opt_cfg = adamw.AdamWConfig()
+
+    def spmm_body(h, esrc, edst, ew, emask, gsrc, *exchange_tabs):
+        h = h.reshape(block, -1)
+        f = h.shape[1]
+        if exchange == "all_gather":
+            (bidx,) = exchange_tabs
+            boundary = h[bidx[0]]
+            pool = jax.lax.all_gather(boundary, data_axes, tiled=False).reshape(-1, f)
+        else:
+            (psend,) = exchange_tabs
+            send = h[psend[0].reshape(-1)].reshape(S, hp_max, f)
+            pool = jax.lax.all_to_all(
+                send, data_axes, split_axis=0, concat_axis=0, tiled=False
+            ).reshape(-1, f)
+        ghosts = pool[gsrc[0]]
+        hh = jnp.concatenate([h, ghosts], axis=0)
+        contrib = (ew[0] * emask[0])[:, None] * hh[esrc[0]]
+        return jax.ops.segment_sum(contrib, edst[0], num_segments=block)
+
+    n_tabs = 6
+    smap = jax.shard_map(
+        spmm_body,
+        in_specs=(P(data_axes, None),) + tuple(
+            P(data_axes, *([None] * nd)) for nd in ([1] * 5 + ([1] if exchange == "all_gather" else [2]))
+        ),
+        out_specs=P(data_axes, None),
+        check_vma=False,
+    )
+
+    def train_step(params, opt_state, batch):
+        tabs = [batch["edge_src"], batch["edge_dst"], batch["edge_w"],
+                batch["edge_mask"], batch["ghost_src"]]
+        tabs.append(batch["boundary_idx"] if exchange == "all_gather" else batch["pair_send_idx"])
+
+        def loss_f(p):
+            h = batch["x"]
+            for i in range(2):
+                h = h @ p[f"w{i}"]
+                h = smap(h, *tabs) + h
+                if i == 0:
+                    h = jax.nn.relu(h)
+            logp = jax.nn.log_softmax(h.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+            return nll.mean()
+
+        loss, grads = jax.value_and_grad(loss_f)(params)
+        params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return _measure(train_step, (params, opt_abs, batch), (pspecs, ospecs, bspecs), mesh), dict(
+        S=S, block=block, b_max=b_max, hp_max=hp_max, g_max=g_max, cut=stats["cut"],
+        exchange=exchange,
+    )
+
+
+VARIANTS = {}
+
+
+def variant(name):
+    def deco(fn):
+        VARIANTS[name] = fn
+        return fn
+    return deco
+
+
+@variant("granite_train4k_flat_attn")
+def _v1(mesh):
+    from repro.configs import granite_3_8b as m
+    return lm_variant(m, "train_4k", mesh, attn_flat_layout=True)
+
+
+@variant("granite_train4k_bthd_attn")
+def _v2(mesh):
+    from repro.configs import granite_3_8b as m
+    return lm_variant(m, "train_4k", mesh)
+
+
+@variant("granite_train4k_bthd_noremat")
+def _v3(mesh):
+    from repro.configs import granite_3_8b as m
+    return lm_variant(m, "train_4k", mesh, remat=False)
+
+
+@variant("qwen3_train4k_dense_dispatch")
+def _v4(mesh):
+    from repro.configs import qwen3_moe_30b_a3b as m
+    return lm_variant(m, "train_4k", mesh)
+
+
+@variant("qwen3_train4k_ep_shardmap")
+def _v5(mesh):
+    from repro.configs import qwen3_moe_30b_a3b as m
+    return lm_variant(m, "train_4k", mesh, moe_impl="ep_shardmap")
+
+
+@variant("qwen3_train4k_ep_shardmap_noremat")
+def _v6(mesh):
+    from repro.configs import qwen3_moe_30b_a3b as m
+    return lm_variant(m, "train_4k", mesh, moe_impl="ep_shardmap", remat=False)
+
+
+@variant("gcn_products_halo")
+def _v7(mesh):
+    stats = measure_products_halo_stats()
+    out = {"measured_stats": stats}
+    for method in ("random", "didic"):
+        for exchange in ("all_gather", "all_to_all"):
+            rec, meta = gcn_products_halo_variant(mesh, stats[method], exchange)
+            out[f"halo_{method}_{exchange}"] = {**rec, **meta}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--out", type=str, default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for name, fn in VARIANTS.items():
+            if args.only and args.only not in name:
+                continue
+            print(f"[perf] {name} ...", flush=True)
+            try:
+                rec = fn(mesh)
+                rec["variant"] = name
+                rec["status"] = "ok"
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+                rec = {"variant": name, "status": "fail", "error": str(e)[:500]}
+            print(f"[perf] {name}: {json.dumps(rec)[:400]}")
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

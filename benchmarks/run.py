@@ -1,0 +1,66 @@
+"""Benchmark entry point — one function per paper table.
+
+Prints ``name,value,derived`` CSV. ``--scale`` / ``--full`` raise dataset
+sizes toward the paper's; default finishes on the CPU container in minutes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01,
+                    help="fraction of paper dataset sizes (1.0 = paper)")
+    ap.add_argument("--tables", type=str, default="all",
+                    help="comma list: 7.1,7.2,static,corr,insert,stress,dynamic,maint,kernels,roofline")
+    ap.add_argument("--didic-iters", type=int, default=100)
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import PaperBench
+    from repro.configs.paper_didic import PaperExperimentConfig
+
+    cfg = PaperExperimentConfig(scale=args.scale, didic_iterations=args.didic_iters)
+    bench = PaperBench(cfg)
+    want = args.tables.split(",")
+    t0 = time.time()
+
+    print("name,value,derived")
+    table_map = {
+        "7.1": bench.table_7_1,
+        "7.2": bench.tables_7_2_to_7_4,
+        "static": bench.static_traffic,
+        "corr": bench.correlation_check,
+        "insert": bench.insert_experiment,
+        "stress": bench.stress_experiment,
+        "dynamic": bench.dynamic_experiment,
+        "maint": bench.maintenance_cost,
+    }
+    if "all" in want:
+        rows = bench.all_tables()
+        for r in rows:
+            print(r.csv())
+    else:
+        for key in want:
+            if key in table_map:
+                for r in table_map[key]():
+                    print(r.csv())
+
+    if "all" in want or "kernels" in want:
+        from benchmarks.kernel_bench import bench_rows
+        for row in bench_rows():
+            print(row)
+
+    if "all" in want or "roofline" in want:
+        from benchmarks.roofline import rows_csv
+        for row in rows_csv():
+            print(row)
+
+    print(f"_total_wall_s,{time.time() - t0:.1f},", file=sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs import base
+from repro.configs.base import all_archs, all_cells, get, skipped_cells
+
+__all__ = ["base", "all_archs", "all_cells", "get", "skipped_cells"]

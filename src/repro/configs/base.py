@@ -1,0 +1,559 @@
+"""Architecture-config registry + dry-run cell builders.
+
+Every assigned architecture registers an :class:`ArchConfig` with
+* the exact published full config (used ONLY via ShapeDtypeStructs in the
+  dry-run — never allocated on this CPU container),
+* a reduced smoke config (exercised by per-arch smoke tests),
+* per-shape :class:`DryRunSpec` builders returning
+  ``(step_fn, abstract_args, in_specs)`` for ``launch/dryrun.py``.
+
+Cells = (arch × shape); skipped cells carry an explicit reason
+(DESIGN.md §5): ``long_500k`` is skipped for all five pure full-attention
+LM archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import gnn as gnn_m
+from repro.models import mace as mace_m
+from repro.models import recsys as recsys_m
+from repro.models import transformer as tf
+from repro.models.moe import MoeConfig
+from repro.optim import adamw
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    step_fn: Callable
+    abstract_args: Tuple            # pytree of ShapeDtypeStruct, positional
+    in_specs: Tuple                 # matching PartitionSpec pytree
+    kind: str                       # train | prefill | decode | serve | retrieval
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchConfig:
+    arch_id: str
+    family: str                                     # lm | gnn | recsys
+    shapes: Tuple[str, ...]
+    skipped: Dict[str, str]                         # shape -> reason
+    dryrun: Callable[[str, Mesh], DryRunSpec]       # (shape, mesh) -> spec
+    smoke: Callable[[], Dict[str, float]]           # reduced run, returns metrics
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Optional (shape, mesh, n_layers) -> DryRunSpec used by the dry-run's
+    # scan-FLOP probe correction (see lm_dryrun docstring).
+    probe: Optional[Callable[[str, Mesh, int], DryRunSpec]] = None
+    probe_layers: int = 0                           # true layer count L
+
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get(arch_id: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every runnable (arch, shape) cell."""
+    _ensure_loaded()
+    cells = []
+    for a in all_archs():
+        c = _REGISTRY[a]
+        for s in c.shapes:
+            if s not in c.skipped:
+                cells.append((a, s))
+    return cells
+
+
+def skipped_cells() -> List[Tuple[str, str, str]]:
+    _ensure_loaded()
+    out = []
+    for a in all_archs():
+        c = _REGISTRY[a]
+        for s, reason in c.skipped.items():
+            out.append((a, s, reason))
+    return out
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401  (registration side-effects)
+        deepseek_moe_16b, qwen3_moe_30b_a3b, yi_34b, deepseek_coder_33b,
+        granite_3_8b, mace, meshgraphnet, gcn_cora, graphsage_reddit, din,
+    )
+
+
+# ===========================================================================
+# LM family builders
+# ===========================================================================
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256),
+    "prefill_32k": dict(seq_len=32768, global_batch=32),
+    "decode_32k": dict(seq_len=32768, global_batch=128),
+    "long_500k": dict(seq_len=524288, global_batch=1),
+}
+LM_SKIP_LONG = (
+    "pure full-attention arch (GQA): long_500k requires sub-quadratic "
+    "attention per the assignment; skipped and documented in DESIGN.md §5"
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lm_dryrun(
+    cfg: tf.TransformerConfig, shape: str, mesh: Mesh, n_layers_override: Optional[int] = None
+) -> DryRunSpec:
+    # Megatron-style vocab padding: the embedding/lm_head vocab dim must
+    # divide the model axis; published logical vocab stays in meta.
+    # Layers stay scanned (fast compiles, the execution path). XLA cost
+    # analysis counts a scan body ONCE, so launch/dryrun.py additionally
+    # compiles 1- and 2-layer probes (via n_layers_override) and
+    # reconstructs exact per-step FLOPs/collective bytes as
+    # f(L) = f(1) + (L−1)·(f(2) − f(1)) — exact because every layer is
+    # identical and only embed/lm_head/optimizer tails are layer-count
+    # independent.
+    cfg = dataclasses.replace(
+        cfg,
+        vocab=-(-cfg.vocab // 128) * 128,
+        n_layers=n_layers_override or cfg.n_layers,
+        # probes must unroll: scan bodies are counted once at ANY length,
+        # so the 1-vs-2-layer delta only exists in unrolled form.
+        unroll=n_layers_override is not None,
+    )
+    params_abs = tf.init_abstract(cfg)
+    pspecs = shd.lm_param_specs(params_abs)
+    baxes = shd.batch_axes(mesh)
+    spec = LM_SHAPES[shape]
+    b, t = spec["global_batch"], spec["seq_len"]
+
+    if shape == "train_4k":
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        ospecs = shd.opt_state_specs(pspecs)
+        batch_abs = {
+            "tokens": _sds((b, t), jnp.int32),
+            "labels": _sds((b, t), jnp.int32),
+        }
+        bspecs = {"tokens": P(baxes, None), "labels": P(baxes, None)}
+        opt_cfg = adamw.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: tf.loss_fn(cfg, p, batch))(params)
+            params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return DryRunSpec(
+            step_fn=train_step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspecs, ospecs, bspecs),
+            kind="train",
+        )
+
+    if shape == "prefill_32k":
+        tokens_abs = _sds((b, t), jnp.int32)
+
+        def prefill_step(params, tokens):
+            logits, _ = tf.forward(cfg, params, tokens)
+            # prefill serves the next-token logits; shard the big logits
+            return jax.lax.with_sharding_constraint(
+                logits[:, -1, :], P(baxes, "model")
+            )
+
+        return DryRunSpec(
+            step_fn=prefill_step,
+            abstract_args=(params_abs, tokens_abs),
+            in_specs=(pspecs, P(baxes, None)),
+            kind="prefill",
+        )
+
+    if shape in ("decode_32k", "long_500k"):
+        cache_abs = jax.eval_shape(lambda: tf.init_kv_cache(cfg, b, t))
+        cspec = shd.kv_cache_spec(mesh)
+        token_abs = _sds((b,), jnp.int32)
+
+        def decode_step(params, token, cache):
+            logits, cache = tf.serve_step(cfg, params, token, cache, jnp.int32(t - 1))
+            return logits, cache
+
+        return DryRunSpec(
+            step_fn=decode_step,
+            abstract_args=(params_abs, token_abs, cache_abs),
+            in_specs=(pspecs, P(baxes), (cspec, cspec)),
+            kind="decode",
+        )
+    raise KeyError(shape)
+
+
+def lm_smoke(cfg_full: tf.TransformerConfig, moe: Optional[MoeConfig] = None) -> Dict[str, float]:
+    """Reduced config: few layers/narrow, one fwd+train step, NaN checks."""
+    small_moe = None
+    if moe is not None:
+        small_moe = MoeConfig(
+            n_experts=min(moe.n_experts, 8), top_k=min(moe.top_k, 2),
+            n_shared=min(moe.n_shared, 1), d_ff=64,
+        )
+    cfg = tf.TransformerConfig(
+        name=cfg_full.name + "_smoke", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=max(1, 4 * cfg_full.n_kv_heads // cfg_full.n_heads),
+        d_ff=128, vocab=211, moe=small_moe,
+    )
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    loss, grads = jax.value_and_grad(lambda p: tf.loss_fn(cfg, p, batch))(params)
+    opt = adamw.init(params)
+    params2, _, om = adamw.update(params, grads, opt, adamw.AdamWConfig())
+    logits, _ = tf.forward(cfg, params2, toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), "NaN in logits"
+    assert not bool(jnp.isnan(loss)), "NaN loss"
+    # decode one token
+    cache = tf.init_kv_cache(cfg, 2, 32)
+    lg, cache = tf.serve_step(cfg, params2, toks[:, 0], cache, jnp.int32(0))
+    assert lg.shape == (2, cfg.vocab) and not bool(jnp.isnan(lg).any())
+    return {"loss": float(loss), "grad_norm": float(om["grad_norm"])}
+
+
+# ===========================================================================
+# GNN family builders
+# ===========================================================================
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2_708, n_edges=10_556, d_feat=1_433),
+    "minibatch_lg": dict(
+        n_nodes=232_965, n_edges=114_615_892, batch_nodes=1_024, fanout=(15, 10), d_feat=602
+    ),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16),
+}
+
+
+def _r32(x: int) -> int:
+    """Round up to a multiple of 32 (pod·data shard divisibility; padding
+    nodes/edges mirrors what the partition-aware layout does on hardware)."""
+    return -(-x // 32) * 32
+
+
+def _gnn_shape_dims(shape: str) -> Dict[str, int]:
+    s = GNN_SHAPES[shape]
+    if shape == "molecule":
+        n = _r32(s["n_nodes"] * s["batch"])
+        e = _r32(s["n_edges"] * s["batch"] * 2)  # symmetrized
+        return dict(n_nodes=n, n_edges=e, d_feat=s["d_feat"], n_graphs=s["batch"])
+    if shape == "minibatch_lg":
+        # layered sample sizes: batch ← fanout[1] ← fanout[0]
+        n2 = _r32(s["batch_nodes"])
+        n1 = _r32(n2 * (s["fanout"][1] + 1))
+        n0 = _r32(n1 * (s["fanout"][0] + 1))
+        return dict(
+            n_nodes=n0, n_edges=_r32(2 * (n2 * s["fanout"][1] + n1 * s["fanout"][0])),
+            d_feat=s["d_feat"], n2=n2, n1=n1, n0=n0, fanout=s["fanout"],
+        )
+    return dict(
+        n_nodes=_r32(s["n_nodes"]), n_edges=_r32(2 * s["n_edges"]),
+        d_feat=s["d_feat"], n_graphs=1,
+    )
+
+
+def gnn_dryrun(
+    kind: str, gcfg_builder, shape: str, mesh: Mesh, n_layers_override: Optional[int] = None
+) -> DryRunSpec:
+    """Generic GNN/MACE train-step cell over the shape's graph dims."""
+    dims = _gnn_shape_dims(shape)
+    if n_layers_override is not None:
+        inner = gcfg_builder
+
+        def gcfg_builder(d):  # noqa: F811 — layer-count probe variant
+            return dataclasses.replace(inner(d), n_layers=n_layers_override, unroll=True)
+    baxes = shd.batch_axes(mesh)
+    n, e, d_feat = dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+    opt_cfg = adamw.AdamWConfig()
+
+    if kind == "mace":
+        mcfg: mace_m.MaceConfig = gcfg_builder(dims)
+        params_abs = jax.eval_shape(lambda k: mace_m.init(mcfg, k), jax.random.PRNGKey(0))
+        n_graphs = dims.get("n_graphs", 1) or 1
+        args = (
+            params_abs,
+            jax.eval_shape(adamw.init, params_abs),
+            {
+                "species": _sds((n,), jnp.int32),
+                "pos": _sds((n, 3), jnp.float32),
+                "senders": _sds((e,), jnp.int32),
+                "receivers": _sds((e,), jnp.int32),
+                "mol_id": _sds((n,), jnp.int32),
+                "energy": _sds((max(n_graphs, 1),), jnp.float32),
+            },
+        )
+        bspecs = {
+            "species": P(baxes), "pos": P(baxes, None),
+            "senders": P(baxes), "receivers": P(baxes),
+            "mol_id": P(baxes), "energy": P(),
+        }
+        pspecs = shd.replicated_specs(params_abs)
+
+        def train_step(params, opt_state, batch):
+            def loss_f(p):
+                energy, _ = mace_m.forward(
+                    mcfg, p, batch["species"], batch["pos"],
+                    batch["senders"], batch["receivers"], batch["mol_id"],
+                    n_graphs,
+                )
+                return jnp.mean((energy - batch["energy"]) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_f)(params)
+            params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return DryRunSpec(
+            step_fn=train_step,
+            abstract_args=args,
+            in_specs=(pspecs, shd.opt_state_specs(pspecs), bspecs),
+            kind="train",
+        )
+
+    gcfg: gnn_m.GnnConfig = gcfg_builder(dims)
+    params_abs = jax.eval_shape(lambda k: gnn_m.init(gcfg, k), jax.random.PRNGKey(0))
+    pspecs = shd.replicated_specs(params_abs)
+
+    if kind == "sage" and shape == "minibatch_lg":
+        n2, n1, n0 = dims["n2"], dims["n1"], dims["n0"]
+        f0, f1 = dims["fanout"]
+        args = (
+            params_abs,
+            jax.eval_shape(adamw.init, params_abs),
+            {
+                "feats": _sds((n0, d_feat), jnp.float32),
+                "nbrs0": _sds((n1, f0), jnp.int32),
+                "mask0": _sds((n1, f0), jnp.float32),
+                "nbrs1": _sds((n2, f1), jnp.int32),
+                "mask1": _sds((n2, f1), jnp.float32),
+                "labels": _sds((n2,), jnp.int32),
+            },
+        )
+        bspecs = {
+            "feats": P(baxes, None), "nbrs0": P(baxes, None), "mask0": P(baxes, None),
+            "nbrs1": P(baxes, None), "mask1": P(baxes, None), "labels": P(baxes),
+        }
+
+        def train_step(params, opt_state, batch):
+            def loss_f(p):
+                out = gnn_m.sage_forward_sampled(
+                    gcfg, p, [batch["feats"]],
+                    [batch["nbrs0"], batch["nbrs1"]],
+                    [batch["mask0"], batch["mask1"]],
+                    [n1, n2],
+                )
+                return gnn_m.node_classification_loss(out, batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_f)(params)
+            params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return DryRunSpec(train_step, args, (pspecs, shd.opt_state_specs(pspecs), bspecs), "train")
+
+    # full-graph (or sampled-subgraph) edge-list formulation
+    batch_abs = {
+        "x": _sds((n, d_feat), jnp.float32),
+        "senders": _sds((e,), jnp.int32),
+        "receivers": _sds((e,), jnp.int32),
+        "labels": _sds((n,), jnp.int32),
+    }
+    bspecs = {"x": P(baxes, None), "senders": P(baxes), "receivers": P(baxes), "labels": P(baxes)}
+    if kind == "meshgraphnet":
+        batch_abs["edge_feat"] = _sds((e, gcfg.d_edge_in), jnp.float32)
+        bspecs["edge_feat"] = P(baxes, None)
+
+    def train_step(params, opt_state, batch):
+        def loss_f(p):
+            if kind == "gcn":
+                out = gnn_m.gcn_forward(gcfg, p, batch["x"], batch["senders"], batch["receivers"])
+            elif kind == "sage":
+                out = gnn_m.sage_forward_full(gcfg, p, batch["x"], batch["senders"], batch["receivers"])
+            else:  # meshgraphnet
+                out = gnn_m.mgn_forward(
+                    gcfg, p, batch["x"], batch["edge_feat"], batch["senders"], batch["receivers"]
+                )
+                return jnp.mean((out - 0.0) ** 2)  # regression target stub=0
+            return gnn_m.node_classification_loss(out, batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_f)(params)
+        params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return DryRunSpec(train_step, (params_abs, jax.eval_shape(adamw.init, params_abs), batch_abs),
+                      (pspecs, shd.opt_state_specs(pspecs), bspecs), "train")
+
+
+# ===========================================================================
+# RecSys (DIN) builders
+# ===========================================================================
+DIN_SHAPES = {
+    "train_batch": dict(batch=65_536),
+    "serve_p99": dict(batch=512),
+    "serve_bulk": dict(batch=262_144),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000),
+}
+
+
+def din_batch_abs(cfg: recsys_m.DinConfig, b: int, with_label: bool = True):
+    d = {
+        "hist_items": _sds((b, cfg.seq_len), jnp.int32),
+        "hist_cats": _sds((b, cfg.seq_len), jnp.int32),
+        "hist_mask": _sds((b, cfg.seq_len), jnp.float32),
+        "target_item": _sds((b,), jnp.int32),
+        "target_cat": _sds((b,), jnp.int32),
+    }
+    if with_label:
+        d["label"] = _sds((b,), jnp.int32)
+    return d
+
+
+def din_batch_specs(mesh: Mesh, with_label: bool = True):
+    baxes = shd.batch_axes(mesh)
+    d = {
+        "hist_items": P(baxes, None), "hist_cats": P(baxes, None),
+        "hist_mask": P(baxes, None), "target_item": P(baxes), "target_cat": P(baxes),
+    }
+    if with_label:
+        d["label"] = P(baxes)
+    return d
+
+
+def din_dryrun(cfg: recsys_m.DinConfig, shape: str, mesh: Mesh) -> DryRunSpec:
+    params_abs = jax.eval_shape(lambda k: recsys_m.init(cfg, k), jax.random.PRNGKey(0))
+    pspecs = shd.din_param_specs(params_abs)
+    baxes = shd.batch_axes(mesh)
+    s = DIN_SHAPES[shape]
+    b = s["batch"]
+    opt_cfg = adamw.AdamWConfig()
+
+    if shape == "train_batch":
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: recsys_m.bce_loss(cfg, p, batch))(params)
+            params, opt_state, _ = adamw.update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        return DryRunSpec(
+            train_step,
+            (params_abs, jax.eval_shape(adamw.init, params_abs), din_batch_abs(cfg, b)),
+            (pspecs, shd.opt_state_specs(pspecs), din_batch_specs(mesh)),
+            "train",
+        )
+
+    if shape in ("serve_p99", "serve_bulk"):
+        def serve_step(params, batch):
+            return recsys_m.forward(cfg, params, batch)
+
+        return DryRunSpec(
+            serve_step,
+            (params_abs, din_batch_abs(cfg, b, with_label=False)),
+            (pspecs, din_batch_specs(mesh, with_label=False)),
+            "serve",
+        )
+
+    # retrieval_cand: one user vs 1M candidates — the user tower replicates
+    # (see retrieval spec below)
+    # (batch=1 can't shard); candidate scoring shards over the data axes.
+    nc = s["n_candidates"]
+
+    def retrieval_step(params, batch, cand_items, cand_cats):
+        uv = recsys_m.user_vector(cfg, params, batch)
+        return recsys_m.retrieval_scores(cfg, params, uv, cand_items, cand_cats)
+
+    replicated_batch = jax.tree.map(
+        lambda _: P(), din_batch_abs(cfg, b, with_label=False)
+    )
+    return DryRunSpec(
+        retrieval_step,
+        (params_abs, din_batch_abs(cfg, b, with_label=False),
+         _sds((nc,), jnp.int32), _sds((nc,), jnp.int32)),
+        (pspecs, replicated_batch, P(baxes), P(baxes)),
+        "retrieval",
+    )
+
+
+# ===========================================================================
+# Analytic MODEL_FLOPS per cell (§Roofline "useful compute")
+# ===========================================================================
+def analytic_model_flops(arch: str, shape: str, n_devices: int) -> Optional[float]:
+    """Hand-derived useful FLOPs per device for non-LM cells.
+
+    LM cells use 6·N_active·D directly in benchmarks/roofline.py; these
+    formulas cover the GNN and recsys families (matmul + edge-reduce terms,
+    train = 3× forward for backward, optimizer negligible).
+    """
+    cfg = get(arch)
+    if cfg.family == "lm":
+        return None  # handled via params meta
+    if cfg.family == "gnn":
+        dims = _gnn_shape_dims(shape)
+        n, e, f = dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+        if arch == "gcn-cora":
+            d, c = 16, 7
+            fwd = 2 * n * f * d + 2 * e * d + 2 * n * d * c + 2 * e * c
+        elif arch == "graphsage-reddit":
+            d, c = 128, 41
+            if shape == "minibatch_lg":
+                # sampled forward: layer i transforms n_i rows, not n_0
+                n1, n2 = dims["n1"], dims["n2"]
+                f0, f1 = dims["fanout"]
+                fwd = (
+                    n1 * f0 * f + 4 * n1 * f * d      # hop-1 gather-mean + 2 matmuls
+                    + n2 * f1 * d + 4 * n2 * d * c    # hop-2
+                )
+            else:
+                fwd = 4 * n * f * d + 2 * e * f + 4 * n * d * c + 2 * e * d
+        elif arch == "meshgraphnet":
+            d, L = 128, 15
+            per_layer = 2 * e * (3 * d * d + d * d) + 2 * n * (2 * d * d + d * d)
+            fwd = L * per_layer + 2 * n * (dims["d_feat"] * d + d * d) + 2 * e * (4 * d + d * d)
+        elif arch == "mace":
+            c, L, nrbf = 128, 2, 8
+            per_layer = (
+                2 * e * nrbf * c * 3          # radial MLPs
+                + e * c * 60                  # irrep products (s,v,T messages)
+                + 2 * n * (3 * c * c * 1 + 3 * c * c * 3 + 2 * c * c * 9)  # mixes
+            )
+            fwd = L * per_layer + 2 * n * c * c
+        else:
+            return None
+        return 3.0 * fwd / n_devices  # train step ≈ 3× forward
+    if cfg.family == "recsys":
+        s = DIN_SHAPES[shape]
+        b = s["batch"]
+        d2 = 2 * 18                      # item‖cat embedding
+        seq = 100
+        attn = 2 * b * seq * (4 * d2 * 80 + 80 * 40 + 40)
+        mlp = 2 * b * (2 * d2 * 200 + 200 * 80 + 80)
+        fwd = attn + mlp
+        if shape == "train_batch":
+            return 3.0 * fwd / n_devices
+        if shape == "retrieval_cand":
+            return (2 * b * s["n_candidates"] * d2 + fwd / seq) / n_devices
+        return fwd / n_devices
+    return None

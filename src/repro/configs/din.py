@@ -1,0 +1,41 @@
+"""din [recsys] — embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+target-attention interaction [arXiv:1706.06978; paper]."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import recsys as recsys_m
+
+FULL = recsys_m.DinConfig(
+    name="din", n_items=1_000_000, n_cats=10_000, embed_dim=18, seq_len=100,
+    attn_mlp=(80, 40), mlp=(200, 80),
+)
+
+
+def smoke():
+    from repro.data.pipeline import din_batch
+    cfg = recsys_m.DinConfig(n_items=500, n_cats=20, seq_len=10)
+    p = recsys_m.init(cfg, jax.random.PRNGKey(0))
+    b = {k: jnp.asarray(v) for k, v in din_batch(8, 10, 500, 20).items()}
+    logits = recsys_m.forward(cfg, p, b)
+    assert logits.shape == (8,) and not bool(jnp.isnan(logits).any())
+    loss = recsys_m.bce_loss(cfg, p, b)
+    grads = jax.grad(lambda pp: recsys_m.bce_loss(cfg, pp, b))(p)
+    assert all(not bool(jnp.isnan(v).any()) for v in jax.tree.leaves(grads))
+    uv = recsys_m.user_vector(cfg, p, b)
+    scores = recsys_m.retrieval_scores(cfg, p, uv, jnp.arange(100), jnp.arange(100) % 20)
+    assert scores.shape == (8, 100) and not bool(jnp.isnan(scores).any())
+    return {"loss": float(loss)}
+
+
+base.register(base.ArchConfig(
+    arch_id="din",
+    family="recsys",
+    shapes=tuple(base.DIN_SHAPES),
+    skipped={},
+    dryrun=functools.partial(base.din_dryrun, FULL),
+    smoke=smoke,
+))

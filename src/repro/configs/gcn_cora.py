@@ -1,0 +1,50 @@
+"""gcn-cora [gnn] — 2L d_hidden=16 mean aggregation sym-norm
+[arXiv:1609.02907; paper]."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.models import gnn as gnn_m
+
+
+def _cfg(dims):
+    return gnn_m.GnnConfig(
+        name="gcn-cora", kind="gcn", n_layers=2,
+        d_in=dims["d_feat"], d_hidden=16, d_out=7, aggregator="mean",
+    )
+
+
+def smoke():
+    from repro.graphs import generators
+    from repro.data.pipeline import gnn_features
+    g = generators.two_cluster(n_per=40, seed=0)
+    s, r, _ = g.undirected
+    cfg = gnn_m.GnnConfig(kind="gcn", d_in=8, d_hidden=16, d_out=4)
+    p = gnn_m.init(cfg, jax.random.PRNGKey(0))
+    x, labels = gnn_features(g.n_nodes, 8, 4, parts_hint=g.node_attrs["block"])
+    out = gnn_m.gcn_forward(cfg, p, jnp.asarray(x), jnp.asarray(s), jnp.asarray(r))
+    assert out.shape == (g.n_nodes, 4)
+    assert not bool(jnp.isnan(out).any())
+    loss = gnn_m.node_classification_loss(out, jnp.asarray(labels))
+    g_ = jax.grad(
+        lambda pp: gnn_m.node_classification_loss(
+            gnn_m.gcn_forward(cfg, pp, jnp.asarray(x), jnp.asarray(s), jnp.asarray(r)),
+            jnp.asarray(labels),
+        )
+    )(p)
+    assert all(not bool(jnp.isnan(v).any()) for v in jax.tree.leaves(g_))
+    return {"loss": float(loss)}
+
+
+base.register(base.ArchConfig(
+    arch_id="gcn-cora",
+    family="gnn",
+    shapes=tuple(base.GNN_SHAPES),
+    skipped={},
+    dryrun=functools.partial(base.gnn_dryrun, "gcn", _cfg),
+    smoke=smoke,
+))

@@ -1,0 +1,56 @@
+"""graphsage-reddit [gnn] — 2L d_hidden=128 mean aggregation,
+sample_sizes=25-10 (arch) / fanout 15-10 (assigned minibatch shape)
+[arXiv:1706.02216; paper]."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.models import gnn as gnn_m
+
+
+def _cfg(dims):
+    return gnn_m.GnnConfig(
+        name="graphsage-reddit", kind="sage", n_layers=2,
+        d_in=dims["d_feat"], d_hidden=128, d_out=41, aggregator="mean",
+    )
+
+
+def smoke():
+    from repro.graphs import generators
+    from repro.graphs.sampler import NeighborSampler
+    from repro.data.pipeline import gnn_features
+    g = generators.twitter_social(scale=0.002, seed=0)
+    cfg = gnn_m.GnnConfig(kind="sage", d_in=16, d_hidden=32, d_out=5)
+    p = gnn_m.init(cfg, jax.random.PRNGKey(0))
+    x, labels = gnn_features(g.n_nodes, 16, 5)
+    # full-graph path
+    s, r, _ = g.undirected
+    out = gnn_m.sage_forward_full(cfg, p, jnp.asarray(x), jnp.asarray(s), jnp.asarray(r))
+    assert out.shape == (g.n_nodes, 5) and not bool(jnp.isnan(out).any())
+    # sampled path with a real neighbor sampler
+    ns = NeighborSampler(g, (5, 3), seed=0)
+    batch = np.arange(16)
+    blocks = ns.sample_batch(batch)
+    out2 = gnn_m.sage_forward_sampled(
+        cfg, p, [jnp.asarray(x[blocks[0].src_nodes])],
+        [jnp.asarray(b.neighbors) for b in blocks],
+        [jnp.asarray(b.mask) for b in blocks],
+        [b.n_targets for b in blocks],
+    )
+    assert out2.shape == (16, 5) and not bool(jnp.isnan(out2).any())
+    loss = gnn_m.node_classification_loss(out2, jnp.asarray(labels[batch]))
+    return {"loss": float(loss)}
+
+
+base.register(base.ArchConfig(
+    arch_id="graphsage-reddit",
+    family="gnn",
+    shapes=tuple(base.GNN_SHAPES),
+    skipped={},
+    dryrun=functools.partial(base.gnn_dryrun, "sage", _cfg),
+    smoke=smoke,
+))

@@ -1,0 +1,48 @@
+"""meshgraphnet [gnn] — 15L d_hidden=128 sum aggregation mlp_layers=2
+[arXiv:2010.03409]."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import gnn as gnn_m
+
+
+def _cfg(dims):
+    return gnn_m.GnnConfig(
+        name="meshgraphnet", kind="meshgraphnet", n_layers=15,
+        d_in=dims["d_feat"], d_hidden=128, d_out=3, aggregator="sum",
+        mlp_layers=2, d_edge_in=4,
+    )
+
+
+def smoke():
+    from repro.graphs import generators
+    g = generators.mesh_graph(10, 10, seed=0)
+    s, r, _ = g.undirected
+    cfg = gnn_m.GnnConfig(kind="meshgraphnet", n_layers=3, d_in=4, d_hidden=32,
+                          d_out=2, d_edge_in=3)
+    p = gnn_m.init(cfg, jax.random.PRNGKey(0))
+    nf = jax.random.normal(jax.random.PRNGKey(1), (g.n_nodes, 4))
+    ef = jax.random.normal(jax.random.PRNGKey(2), (s.shape[0], 3))
+    out = gnn_m.mgn_forward(cfg, p, nf, ef, jnp.asarray(s), jnp.asarray(r))
+    assert out.shape == (g.n_nodes, 2) and not bool(jnp.isnan(out).any())
+    loss = jnp.mean(out ** 2)
+    grads = jax.grad(lambda pp: jnp.mean(
+        gnn_m.mgn_forward(cfg, pp, nf, ef, jnp.asarray(s), jnp.asarray(r)) ** 2))(p)
+    assert all(not bool(jnp.isnan(v).any()) for v in jax.tree.leaves(grads))
+    return {"loss": float(loss)}
+
+
+base.register(base.ArchConfig(
+    arch_id="meshgraphnet",
+    family="gnn",
+    shapes=tuple(base.GNN_SHAPES),
+    skipped={},
+    dryrun=functools.partial(base.gnn_dryrun, "meshgraphnet", _cfg),
+    smoke=smoke,
+    probe=functools.partial(base.gnn_dryrun, "meshgraphnet", _cfg),
+    probe_layers=15,
+))

@@ -1,0 +1,30 @@
+"""The paper's own experiment configuration (datasets × partitioners × k).
+
+Not an assigned architecture — this is the reproduction config consumed by
+benchmarks/paper_tables.py and examples/partition_and_serve.py.
+"""
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.didic import DidicConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperExperimentConfig:
+    datasets: Tuple[str, ...] = ("filesystem", "gis", "twitter")
+    scale: float = 0.01            # fraction of paper dataset sizes (CPU box)
+    partition_counts: Tuple[int, ...] = (2, 4)
+    n_ops: int = 2_000             # evaluation-log length (paper: 10 000)
+    n_ops_gis: int = 300           # A* is sequential-host-bound
+    didic_iterations: int = 100    # paper: 100 initial
+    dynamism_levels: Tuple[float, ...] = (0.01, 0.02, 0.05, 0.10, 0.25)
+    seed: int = 0
+
+    def didic(self, dataset: str, k: int) -> DidicConfig:
+        # trees need the widest assignment smoothing (DESIGN.md §didic)
+        cap = 256 if dataset == "filesystem" else 64
+        return DidicConfig(k=k, iterations=self.didic_iterations, smooth_cap=cap)
+
+
+DEFAULT = PaperExperimentConfig()

@@ -1,0 +1,9 @@
+from repro.core import didic, didic_distributed, dynamism, framework, metrics, partitioners, traffic
+from repro.core.didic import DidicConfig, DidicState, didic_partition, didic_refine
+from repro.core.framework import PartitionedGraphService
+
+__all__ = [
+    "didic", "didic_distributed", "dynamism", "framework", "metrics", "partitioners", "traffic",
+    "DidicConfig", "DidicState", "didic_partition", "didic_refine",
+    "PartitionedGraphService",
+]

@@ -1,0 +1,312 @@
+"""DiDiC — Distributed Diffusive Clustering (paper §4.1.3), TPU-native.
+
+The thesis presents DiDiC vertex-at-a-time (Fig. 4.2). The algorithm is a
+pair of coupled diffusion systems per partition ``c``:
+
+  secondary (disturbance, Eq. 4.7):
+      y_e(c) = wt(e)·α(e)·( l_u(c)/b_u(c) − l_v(c)/b_v(c) )
+      l_u ← l_u − Σ_e y_e ,  b_u(c) = 10 if u ∈ π_c else 1
+  primary (Eq. 4.6):
+      x_e(c) = wt(e)·α(e)·( w_u(c) − w_v(c) )
+      w_u ← w_u + l_u − Σ_e x_e
+  assignment (Eq. 4.8):  π(v) = argmax_c w_v(c)
+
+**Hardware adaptation (DESIGN.md §2)**: one inner step over *all* k systems
+is a sparse-matrix product. With the symmetrized edge list and the per-edge
+coefficient ``c_e = wt(e)·α(e)``:
+
+      Σ_e x_e  =  deg_c ⊙ W  −  A_c @ W        (A_c = weighted adjacency)
+
+so a DiDiC step is ``W ← W + L − deg_c⊙W + A_c@W`` on an ``N×k`` load
+matrix — a segment-sum (oracle path) or a 128×128 block-sparse SpMM on the
+MXU (``repro.kernels.bsr_spmm`` path). Flow scale α uses Metropolis weights
+``α(e) = 1/(1 + max(D_u, D_v))`` (D = weighted degree), which bounds the
+per-vertex outflow below 1 and keeps both systems stable on any graph.
+
+**Synchronous-vectorization adaptations.** The thesis's algorithm runs
+asynchronously, one vertex at a time, on a JVM. A literal synchronous
+whole-graph translation has four failure modes, each observed and fixed here
+(all validated against planted-community graphs and the paper's own
+datasets; see EXPERIMENTS.md):
+
+1. *Mass drift* — each system's primary mass grows by its secondary mass
+   per primary step, so with a random start the heaviest system wins argmax
+   everywhere. Fix: fresh per-member secondary seeds each iteration
+   (Eq. 4.5 applied per iteration) + a column-common rescale of ``w``.
+2. *Winner-take-all absorption* — per-member seeding alone lets locally
+   dominant systems absorb everything (the classic label-propagation
+   collapse). Fix: per-system balance scalars β_c fitted each iteration so
+   argmax yields near-equal sizes — exactly Bubble-FOS/C's ScaleBalance
+   operation from the same disturbed-diffusion literature DiDiC cites.
+3. *Self-pinning / parity oscillation* — a vertex's own drain spike pins it
+   to its current system; on bipartite structures (trees!) synchronous
+   updates flip in lock-step forever. Fix: assign by the *neighborhood-
+   diffused* load (removing the self-spike) and commit each vertex's new
+   label with probability ``commit_prob`` (stochastic asynchrony, which is
+   what the distributed algorithm does naturally).
+4. *Kernel-width freezing* — assignment domains freeze once they reach the
+   diffusion kernel's width, stranding the cut far above optimum on trees.
+   Fix: anneal the assignment-smoothing depth (a 50 %-lazy random walk
+   whose per-step transfer is degree-independent) from 1 to
+   ``smooth_cap`` steps, doubling every ``smooth_double_every`` iterations —
+   domains coarsen until the cut stabilizes.
+
+With these, reduced-scale reproductions land in the paper's bands
+(edge cut @ k=2/4 — GIS ≈0.1 %/2 % vs paper 1.9 %/3.2 %; Twitter ≈24 %/38 %
+vs paper 25 %/37 %; filesystem ≈1–6 % vs paper 2.4 %/3.6 %), while the
+un-adapted literal form stalls at random-level cuts (~50 %/75 %).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structure import Graph
+
+__all__ = ["DidicConfig", "DidicState", "didic_partition", "didic_refine", "make_spmm"]
+
+_BENEFIT = 10.0     # b_u(c) for members of π_c (paper Eq. 4.7)
+_INIT_LOAD = 100.0  # initial load per vertex in its own system (Eq. 4.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class DidicConfig:
+    """DiDiC hyper-parameters (paper defaults: T=100 initial, T=1 repair)."""
+
+    k: int = 4
+    iterations: int = 100        # T
+    primary_steps: int = 11      # ψ
+    secondary_steps: int = 9     # ρ
+    smooth_cap: int = 64         # max assignment-smoothing depth
+    smooth_double_every: int = 10
+    commit_prob: float = 0.9     # stochastic-asynchrony commit probability
+    balance_iters: int = 8       # ScaleBalance fitting iterations
+    balance_exp: float = 0.25    # ScaleBalance damping exponent
+    use_kernel: bool = False     # BSR SpMM Pallas path instead of segment_sum
+    block_size: int = 128
+
+
+@dataclasses.dataclass
+class DidicState:
+    """Carried diffusion state — checkpointable alongside model state."""
+
+    w: jax.Array      # [N, k] primary loads
+    l: jax.Array      # [N, k] secondary loads
+    parts: jax.Array  # [N] int32 current assignment
+    beta: jax.Array   # [k] balance scalars
+
+
+def _edge_coefficients(graph: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Symmetrized edges + Metropolis-scaled coefficients + coeff degree."""
+    s, r, wt = graph.undirected
+    deg = graph.weighted_degree
+    alpha = 1.0 / (1.0 + np.maximum(deg[s], deg[r]))
+    ce = (wt * alpha).astype(np.float32)
+    degc = np.zeros(graph.n_nodes, dtype=np.float64)
+    np.add.at(degc, s, ce)
+    return s.astype(np.int32), r.astype(np.int32), ce, degc.astype(np.float32)
+
+
+def _spmm_segment(ce: jax.Array, s: jax.Array, r: jax.Array, n: int, x: jax.Array) -> jax.Array:
+    """A_c @ X via gather + segment_sum over the symmetrized COO edges."""
+    contrib = ce[:, None] * jnp.take(x, r, axis=0)
+    return jax.ops.segment_sum(contrib, s, num_segments=n)
+
+
+def make_spmm(graph: Graph, config: DidicConfig) -> Tuple[Callable[[jax.Array], jax.Array], jax.Array]:
+    """Return (spmm(X) -> A_c @ X, degc) for the DiDiC coefficient matrix.
+
+    Cached *on the graph object* (lifetime-tied — an id()-keyed global
+    cache would alias recycled addresses) so repeated partition/refine
+    calls reuse one jitted step: maintenance iterations must not pay a
+    fresh trace+compile (the paper's ~1 % maintenance-cost claim is about
+    computation, not compilation).
+    """
+    cache = graph.__dict__.setdefault("_didic_spmm_cache", {})
+    cache_key = (config.use_kernel, config.block_size)
+    if cache_key in cache:
+        return cache[cache_key]
+    _SPMM_CACHE = cache  # write-through alias used below
+    s, r, ce, degc = _edge_coefficients(graph)
+    if config.use_kernel:
+        from repro.kernels.bsr_spmm import ops as bsr_ops
+
+        coeff_graph = Graph(
+            n_nodes=graph.n_nodes, senders=s, receivers=r, edge_weight=ce, name="didic_coeff"
+        )
+        bell = coeff_graph.to_block_ell(block_size=config.block_size, undirected=False)
+        kernel_mm = bsr_ops.make_bell_matmul(bell)
+
+        def spmm_fn(x: jax.Array) -> jax.Array:
+            pad = bell.padded_rows - x.shape[0]
+            xp = jnp.pad(x, ((0, pad), (0, 0)))
+            return kernel_mm(xp)[: x.shape[0]]
+
+        _SPMM_CACHE[cache_key] = (spmm_fn, jnp.asarray(degc))
+        return _SPMM_CACHE[cache_key]
+    s_j, r_j, ce_j = jnp.asarray(s), jnp.asarray(r), jnp.asarray(ce)
+    n = graph.n_nodes
+
+    def spmm_segment_fn(x: jax.Array) -> jax.Array:  # plain def: carries the
+        return _spmm_segment(ce_j, s_j, r_j, n, x)   # step cache attribute
+
+    _SPMM_CACHE[cache_key] = (spmm_segment_fn, jnp.asarray(degc))
+    return _SPMM_CACHE[cache_key]
+
+
+def _make_step(spmm: Callable, degc: jax.Array, config: DidicConfig):
+    """Build the jitted single-iteration function (closes over the graph).
+
+    Cached on the spmm callable (which the graph owns), so the step's
+    lifetime is tied to the graph's — no id() aliasing.
+    """
+    cache = getattr(spmm, "_didic_step_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            spmm._didic_step_cache = cache
+        except AttributeError:  # functools.partial accepts attributes; be safe
+            pass
+    if config in cache:
+        return cache[config]
+    k = config.k
+    safe_deg = jnp.maximum(degc, 1e-6)
+
+    @jax.jit
+    def step(w, l, parts, beta, key, smooth_steps):
+        n = w.shape[0]
+        onehot = (parts[:, None] == jnp.arange(k, dtype=parts.dtype)[None, :]).astype(w.dtype)
+        # Fresh per-member secondary seed (Eq. 4.5 each iteration; fix #1),
+        # with an ε-floor: a system that loses all members would otherwise
+        # seed zero load forever and stay dead — the ε keeps every system
+        # faintly alive so the ScaleBalance scalars can revive it (matters
+        # on community-free graphs, where partitions otherwise collapse).
+        l = _INIT_LOAD * onehot + 0.01
+        benefit = jnp.where(onehot > 0, _BENEFIT, 1.0).astype(w.dtype)
+
+        def secondary(l, _):
+            lb = l / benefit
+            return l - degc[:, None] * lb + spmm(lb), None
+
+        def primary(carry, _):
+            w, l = carry
+            l, _ = jax.lax.scan(secondary, l, None, length=config.secondary_steps)
+            w_new = w + l - degc[:, None] * w + spmm(w)
+            return (w_new, l), None
+
+        (w, l), _ = jax.lax.scan(primary, (w, l), None, length=config.primary_steps)
+        w = w / jnp.maximum(w.mean(), 1e-6)  # column-common rescale (fix #1)
+
+        # Annealed lazy-random-walk assignment smoothing (fixes #3, #4).
+        def smooth_body(_, x):
+            return 0.5 * x + 0.5 * spmm(x) / safe_deg[:, None]
+
+        smoothed = jax.lax.fori_loop(0, smooth_steps, smooth_body, w)
+
+        # ScaleBalance (fix #2): fit β so argmax sizes approach N/k.
+        tgt = n / k
+
+        def bal(_, beta):
+            p = jnp.argmax(smoothed * beta[None, :], axis=1)
+            sizes = jnp.bincount(p, length=k).astype(w.dtype)
+            return jnp.clip(
+                beta * (tgt / jnp.maximum(sizes, 1.0)) ** config.balance_exp, 1e-3, 1e3
+            )
+
+        beta = jax.lax.fori_loop(0, config.balance_iters, bal, beta)
+        new_parts = jnp.argmax(smoothed * beta[None, :], axis=1).astype(jnp.int32)
+        commit = jax.random.bernoulli(key, config.commit_prob, (n,))
+        parts = jnp.where(commit, new_parts, parts)
+        return w, l, parts, beta
+
+    cache[config] = step
+    return step
+
+
+def _init_state(n: int, k: int, parts0: jax.Array) -> DidicState:
+    onehot = (parts0[:, None] == jnp.arange(k, dtype=parts0.dtype)[None, :]).astype(jnp.float32)
+    load = _INIT_LOAD * onehot
+    return DidicState(
+        w=load, l=load, parts=parts0.astype(jnp.int32), beta=jnp.ones((k,), jnp.float32)
+    )
+
+
+def _smooth_schedule(config: DidicConfig, iterations: int, start_wide: bool) -> np.ndarray:
+    if start_wide:
+        return np.full(iterations, config.smooth_cap, dtype=np.int32)
+    sched = np.minimum(
+        1 << (np.arange(iterations) // max(config.smooth_double_every, 1)),
+        config.smooth_cap,
+    )
+    return sched.astype(np.int32)
+
+
+def _run_iterations(
+    state: DidicState,
+    spmm: Callable,
+    degc: jax.Array,
+    config: DidicConfig,
+    iterations: int,
+    seed: int,
+    start_wide: bool = False,
+) -> DidicState:
+    step = _make_step(spmm, degc, config)
+    schedule = _smooth_schedule(config, iterations, start_wide)
+    key = jax.random.PRNGKey(seed)
+    w, l, parts, beta = state.w, state.l, state.parts, state.beta
+    for it in range(iterations):
+        key, sub = jax.random.split(key)
+        w, l, parts, beta = step(w, l, parts, beta, sub, jnp.int32(schedule[it]))
+    return DidicState(w=w, l=l, parts=parts, beta=beta)
+
+
+def didic_partition(
+    graph: Graph,
+    config: DidicConfig,
+    seed: int = 0,
+    init_parts: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, DidicState]:
+    """Partition ``graph`` into ``config.k`` parts from a random start.
+
+    Matches the paper's evaluation setup: random initial assignment, then
+    ``config.iterations`` DiDiC iterations (100 for the static experiment).
+    Returns (parts[N] int32 on host, final DidicState).
+    """
+    if init_parts is None:
+        rng = np.random.default_rng(seed)
+        init_parts = rng.integers(0, config.k, size=graph.n_nodes)
+    parts0 = jnp.asarray(np.asarray(init_parts, dtype=np.int32))
+    spmm, degc = make_spmm(graph, config)
+    state = _init_state(graph.n_nodes, config.k, parts0)
+    state = _run_iterations(state, spmm, degc, config, config.iterations, seed)
+    return np.asarray(state.parts), state
+
+
+def didic_refine(
+    graph: Graph,
+    parts: np.ndarray,
+    config: DidicConfig,
+    state: Optional[DidicState] = None,
+    iterations: int = 1,
+    seed: int = 0,
+) -> Tuple[np.ndarray, DidicState]:
+    """Repair/maintain an existing partitioning (paper Stress/Dynamic exps).
+
+    Seeds loads from ``parts`` (the degraded assignment); one iteration is
+    the paper's maintenance budget. Runs at full smoothing width so the
+    repair sees existing large-scale structure instead of re-coarsening.
+    """
+    parts_j = jnp.asarray(np.asarray(parts, dtype=np.int32))
+    spmm, degc = make_spmm(graph, config)
+    if state is None:
+        state = _init_state(graph.n_nodes, config.k, parts_j)
+    else:
+        state = DidicState(w=state.w, l=state.l, parts=parts_j, beta=state.beta)
+    state = _run_iterations(state, spmm, degc, config, iterations, seed, start_wide=True)
+    return np.asarray(state.parts), state

@@ -1,0 +1,226 @@
+"""The paper's partitioning-framework abstractions (§3.1, Fig. 3.1).
+
+Four components compose the runtime:
+
+* :class:`InsertPartitioner`    — allocates entities to partitions at write
+  time (policies: random / fewest-vertices / least-traffic, §6.4),
+* :class:`RuntimeLogger`        — per-partition ``InstanceInfo`` metrics
+  (vertices, edges, local vs global traffic — §5.2),
+* :class:`RuntimePartitioner`   — re-partitions at runtime (wraps DiDiC),
+* :class:`MigrationScheduler`   — decides *when* migration runs and emits
+  migration commands (vertex→partition deltas).
+
+:class:`PartitionedGraphService` is the emulator-style facade (§5.3.2): one
+logical graph + a partition map, serving the same measurements as the
+thesis's ``PGraphDatabaseServiceEmulator``. The distributed runtime
+(`repro.distributed.placement`) consumes the same partition map to place
+GNN shards on mesh devices — the framework is shared between the paper
+reproduction and the large-scale training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core.didic import DidicConfig, DidicState, didic_partition, didic_refine
+from repro.core.dynamism import DynamismLog, apply_dynamism, generate_dynamism
+from repro.core.traffic import OpLog, TrafficResult, execute_ops, generate_ops
+from repro.graphs.structure import Graph
+
+__all__ = [
+    "InstanceInfo",
+    "InsertPartitioner",
+    "RuntimeLogger",
+    "RuntimePartitioner",
+    "MigrationScheduler",
+    "PartitionedGraphService",
+]
+
+
+@dataclasses.dataclass
+class InstanceInfo:
+    """Per-partition runtime metrics (paper §5.2)."""
+
+    n_vertices: int = 0
+    n_edges: int = 0
+    local_traffic: int = 0
+    global_traffic: int = 0
+
+
+class InsertPartitioner:
+    """Insert-Partitioning component: allocate new entities to partitions."""
+
+    def __init__(self, method: str = "random", k: int = 4, seed: int = 0):
+        self.method = method
+        self.k = k
+        self._seed = seed
+
+    def allocate(
+        self,
+        parts: np.ndarray,
+        amount: float,
+        vertex_traffic: Optional[np.ndarray] = None,
+    ) -> DynamismLog:
+        log = generate_dynamism(
+            parts, amount, self.method, self.k, vertex_traffic=vertex_traffic, seed=self._seed
+        )
+        self._seed += 1
+        return log
+
+
+class RuntimeLogger:
+    """Runtime-Logging component: accumulates InstanceInfo per partition."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self.reset()
+
+    def reset(self) -> None:
+        self.infos: List[InstanceInfo] = [InstanceInfo() for _ in range(self.k)]
+
+    def observe_structure(self, graph: Graph, parts: np.ndarray) -> None:
+        counts = metrics.partition_counts(graph, parts, self.k)
+        for i in range(self.k):
+            self.infos[i].n_vertices = int(counts["vertices"][i])
+            self.infos[i].n_edges = int(counts["edges"][i])
+
+    def observe_traffic(self, result: TrafficResult) -> None:
+        global_total = result.global_
+        # Global traffic is attributed proportionally to partition traffic
+        # share (the emulator counts a cross-partition action on both ends).
+        for i in range(self.k):
+            served = int(result.per_partition[i])
+            self.infos[i].local_traffic += served
+        # store aggregate for degradation detection
+        self._last_percent_global = result.percent_global
+
+    def percent_global(self) -> float:
+        return getattr(self, "_last_percent_global", 0.0)
+
+    def load_balance_cv(self) -> Dict[str, float]:
+        return {
+            "vertices": metrics.coefficient_of_variation(
+                np.array([i.n_vertices for i in self.infos])
+            ),
+            "edges": metrics.coefficient_of_variation(np.array([i.n_edges for i in self.infos])),
+            "traffic": metrics.coefficient_of_variation(
+                np.array([i.local_traffic for i in self.infos])
+            ),
+        }
+
+
+class RuntimePartitioner:
+    """Runtime-Partitioning component: DiDiC initial + maintenance passes."""
+
+    def __init__(self, config: DidicConfig):
+        self.config = config
+        self.state: Optional[DidicState] = None
+
+    def initial(self, graph: Graph, seed: int = 0) -> np.ndarray:
+        parts, self.state = didic_partition(graph, self.config, seed=seed)
+        return parts
+
+    def maintain(self, graph: Graph, parts: np.ndarray, iterations: int = 1) -> np.ndarray:
+        parts, self.state = didic_refine(
+            graph, parts, self.config, state=self.state, iterations=iterations
+        )
+        return parts
+
+
+@dataclasses.dataclass
+class MigrationCommand:
+    vertices: np.ndarray
+    target: int
+
+
+class MigrationScheduler:
+    """Migration-Scheduler component.
+
+    Decides when the Partition-Mapping produced by runtime partitioning is
+    applied. Policy: migrate when the fraction of vertices wanting to move
+    exceeds ``min_move_fraction`` AND the observed global-traffic share has
+    degraded ``degradation_factor``× over the best seen (or on an explicit
+    interval — the paper's Dynamic experiment uses a fixed interval).
+    """
+
+    def __init__(self, min_move_fraction: float = 0.002, degradation_factor: float = 1.25):
+        self.min_move_fraction = min_move_fraction
+        self.degradation_factor = degradation_factor
+        self.best_percent_global = np.inf
+        self.history: List[Dict] = []
+
+    def should_migrate(self, percent_global: float) -> bool:
+        self.best_percent_global = min(self.best_percent_global, percent_global)
+        return percent_global > self.best_percent_global * self.degradation_factor
+
+    def plan(self, old_parts: np.ndarray, new_parts: np.ndarray) -> List[MigrationCommand]:
+        moved = np.nonzero(old_parts != new_parts)[0]
+        if moved.shape[0] < self.min_move_fraction * old_parts.shape[0]:
+            return []
+        cmds = []
+        for target in np.unique(new_parts[moved]):
+            vs = moved[new_parts[moved] == target]
+            cmds.append(MigrationCommand(vertices=vs, target=int(target)))
+        self.history.append({"time": time.time(), "n_moved": int(moved.shape[0])})
+        return cmds
+
+    @staticmethod
+    def apply(parts: np.ndarray, cmds: List[MigrationCommand]) -> np.ndarray:
+        out = parts.copy()
+        for c in cmds:
+            out[c.vertices] = c.target
+        return out
+
+
+class PartitionedGraphService:
+    """Emulator-style partitioned graph database (paper §5.3.2).
+
+    One logical graph, a partition map, and the measurement machinery.
+    Drives the Static / Insert / Stress / Dynamic experiments and is reused
+    by the distributed placement layer.
+    """
+
+    def __init__(self, graph: Graph, k: int, didic: Optional[DidicConfig] = None):
+        self.graph = graph
+        self.k = k
+        self.parts = np.zeros(graph.n_nodes, dtype=np.int32)
+        self.logger = RuntimeLogger(k)
+        self.runtime = RuntimePartitioner(didic or DidicConfig(k=k))
+        self.scheduler = MigrationScheduler()
+
+    # -- partitioning -------------------------------------------------------
+    def partition_with(self, parts: np.ndarray) -> "PartitionedGraphService":
+        assert parts.shape[0] == self.graph.n_nodes
+        self.parts = parts.astype(np.int32)
+        self.logger.observe_structure(self.graph, self.parts)
+        return self
+
+    def partition_didic(self, seed: int = 0) -> "PartitionedGraphService":
+        return self.partition_with(self.runtime.initial(self.graph, seed=seed))
+
+    def maintain(self, iterations: int = 1) -> None:
+        self.parts = self.runtime.maintain(self.graph, self.parts, iterations=iterations)
+        self.logger.observe_structure(self.graph, self.parts)
+
+    # -- workload -----------------------------------------------------------
+    def run_ops(self, ops: OpLog) -> TrafficResult:
+        result = execute_ops(self.graph, ops, self.parts, self.k)
+        self.logger.observe_traffic(result)
+        return result
+
+    def make_ops(self, n_ops: int = 10_000, seed: int = 0, pattern: Optional[str] = None) -> OpLog:
+        return generate_ops(self.graph, n_ops=n_ops, seed=seed, pattern=pattern)
+
+    # -- dynamism -----------------------------------------------------------
+    def apply_dynamism(self, log: DynamismLog) -> None:
+        self.parts = apply_dynamism(self.parts, log)
+        self.logger.observe_structure(self.graph, self.parts)
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> Dict[str, float]:
+        return metrics.partition_report(self.graph, self.parts, self.k)

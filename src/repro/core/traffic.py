@@ -1,0 +1,353 @@
+"""Access-pattern traffic simulator (paper §6.2, Ch. 7 measurements).
+
+Reproduces the thesis's ``neo4j_access_simulator``: per-dataset synthetic,
+*non-uniform* access patterns are generated once into a deterministic,
+replayable operation log (the "evaluation log"), then executed against a
+partitioned graph while counting:
+
+* **total traffic**  — one unit per graph action (index lookup, property
+  read, edge retrieval, endpoint retrieval — paper §6.2.1),
+* **global traffic** — actions that require two partitions to communicate
+  (an edge traversal whose endpoints live on different partitions),
+* **per-partition traffic** — units attributed to the partition serving
+  each action (drives the load-balance CV of Tables 7.2–7.4),
+* **per-vertex traffic** — feeds the ``least_traffic`` insert method.
+
+Per-step action counts follow the paper's tables:
+  File system (Table 6.1): T_L = 2, T_PG = 1
+  GIS        (Table 6.3): T_L = 8, T_PG = 1
+  Twitter    (Table 6.4): T_L = 2, T_PG = 1
+
+Execution is vectorized level-synchronous BFS for the file-system and
+Twitter patterns; the GIS pattern runs a real A* (heapq) per operation,
+matching the paper's algorithm choice (§6.2.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.graphs.generators import FS_FILE, FS_FOLDER, _CITIES
+from repro.graphs.structure import Graph
+
+__all__ = [
+    "OpLog",
+    "TrafficResult",
+    "generate_ops",
+    "execute_ops",
+    "pattern_for",
+]
+
+
+@dataclasses.dataclass
+class OpLog:
+    """A replayable evaluation log (paper §6.1: deterministic, reusable)."""
+
+    pattern: str              # filesystem | gis_short | gis_long | twitter
+    starts: np.ndarray        # [n_ops]
+    ends: np.ndarray          # [n_ops] (unused by twitter: -1)
+    t_l: int                  # local actions per traversal step
+    t_pg: int                 # potentially-global actions per step
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.starts.shape[0])
+
+
+@dataclasses.dataclass
+class TrafficResult:
+    per_op_total: np.ndarray      # [n_ops] traffic units
+    per_op_global: np.ndarray     # [n_ops] global (inter-partition) units
+    per_partition: np.ndarray     # [k] units served per partition
+    per_vertex: np.ndarray        # [N] units served per vertex
+
+    @property
+    def total(self) -> float:
+        return float(self.per_op_total.sum())
+
+    @property
+    def global_(self) -> float:
+        return float(self.per_op_global.sum())
+
+    @property
+    def percent_global(self) -> float:
+        """T_G% of Eq. 7.2."""
+        return self.global_ / max(self.total, 1e-12)
+
+    def sorted_percent_global(self) -> np.ndarray:
+        """Per-op global fraction, sorted desc (the Figs 7.1–7.3 curves)."""
+        frac = self.per_op_global / np.maximum(self.per_op_total, 1e-12)
+        return np.sort(frac)[::-1]
+
+
+# ===========================================================================
+# Operation-log generation
+# ===========================================================================
+def _gen_filesystem(graph: Graph, n_ops: int, seed: int) -> OpLog:
+    """End ∝ degree among files/folders; start = random ancestor (§6.2.1)."""
+    rng = np.random.default_rng(seed)
+    nt = graph.node_attrs["node_type"]
+    parent = graph.node_attrs["parent"]
+    depth = graph.node_attrs["depth"].astype(np.int64)
+    candidates = np.nonzero((nt == FS_FILE) | (nt == FS_FOLDER))[0]
+    p = graph.degree[candidates].astype(np.float64)
+    p /= p.sum()
+    ends = rng.choice(candidates, size=n_ops, p=p)
+
+    # Walk up 1..(depth(end) − 2) levels (root folder of the user sits at
+    # depth 2: org→user→root-folder). Start must be a folder.
+    max_up = np.maximum(depth[ends] - 2, 1)
+    ups = (rng.integers(0, 1 << 30, size=n_ops) % max_up) + 1
+    starts = ends.copy()
+    remaining = ups.copy()
+    for _ in range(int(depth.max()) + 1):
+        step = remaining > 0
+        starts = np.where(step & (parent[starts] >= 0), parent[starts], starts)
+        remaining = np.maximum(remaining - 1, 0)
+    # Clamp to folders (ends that were files walked ≥1 level so starts are
+    # folders except degenerate roots).
+    bad = nt[starts] != FS_FOLDER
+    starts[bad] = np.where(parent[starts[bad]] >= 0, parent[starts[bad]], starts[bad])
+    return OpLog("filesystem", starts.astype(np.int64), ends.astype(np.int64), t_l=2, t_pg=1)
+
+
+def _city_distance(graph: Graph) -> np.ndarray:
+    lon = graph.node_attrs["lon"].astype(np.float64)
+    lat = graph.node_attrs["lat"].astype(np.float64)
+    cxy = np.array([[c[1], c[2]] for c in _CITIES])
+    d = np.min(
+        np.sqrt((lon[:, None] - cxy[None, :, 0]) ** 2 + (lat[:, None] - cxy[None, :, 1]) ** 2),
+        axis=1,
+    )
+    return d
+
+
+def _gen_gis(graph: Graph, n_ops: int, seed: int, variant: str) -> OpLog:
+    """Start near cities; short ends via random walk (mean 11), long ends
+    near (usually different) cities (§6.2.2)."""
+    rng = np.random.default_rng(seed)
+    d = _city_distance(graph)
+    p = np.exp(-d / 0.15)
+    p /= p.sum()
+    starts = rng.choice(graph.n_nodes, size=n_ops, p=p)
+    if variant == "long":
+        ends = rng.choice(graph.n_nodes, size=n_ops, p=p)
+        return OpLog("gis_long", starts.astype(np.int64), ends.astype(np.int64), t_l=8, t_pg=1)
+    # short: random walk from start, exponential length (mean 11).
+    indptr, indices, _ = graph.undirected_csr
+    lengths = np.maximum(rng.exponential(11.0, size=n_ops).astype(np.int64), 1)
+    ends = starts.copy()
+    max_len = int(lengths.max())
+    for step in range(max_len):
+        act = lengths > step
+        deg = indptr[ends + 1] - indptr[ends]
+        ok = act & (deg > 0)
+        pick = indptr[ends[ok]] + (rng.integers(0, 1 << 30, size=int(ok.sum())) % deg[ok])
+        ends[ok] = indices[pick]
+    return OpLog("gis_short", starts.astype(np.int64), ends.astype(np.int64), t_l=8, t_pg=1)
+
+
+def _gen_twitter(graph: Graph, n_ops: int, seed: int) -> OpLog:
+    """Start ∝ out-degree; friend-of-a-friend = 2-hop out-BFS (§6.2.3)."""
+    rng = np.random.default_rng(seed)
+    p = (graph.out_degree + 1e-9).astype(np.float64)
+    p /= p.sum()
+    starts = rng.choice(graph.n_nodes, size=n_ops, p=p)
+    return OpLog("twitter", starts.astype(np.int64), np.full(n_ops, -1, dtype=np.int64), t_l=2, t_pg=1)
+
+
+_PATTERNS = {
+    "filesystem": _gen_filesystem,
+    "twitter": _gen_twitter,
+}
+
+
+def pattern_for(graph: Graph) -> str:
+    if "node_type" in graph.node_attrs:
+        return "filesystem"
+    if "lon" in graph.node_attrs:
+        return "gis_short"
+    return "twitter"
+
+
+def generate_ops(graph: Graph, n_ops: int = 10_000, seed: int = 0, pattern: Optional[str] = None) -> OpLog:
+    pattern = pattern or pattern_for(graph)
+    if pattern in ("gis_short", "gis_long"):
+        return _gen_gis(graph, n_ops, seed, pattern.split("_")[1])
+    return _PATTERNS[pattern](graph, n_ops, seed)
+
+
+# ===========================================================================
+# Execution
+# ===========================================================================
+def _ragged_ranges(deg: np.ndarray) -> np.ndarray:
+    """Vectorized concatenation of [arange(d) for d in deg]."""
+    if deg.size == 0 or deg.sum() == 0:
+        return np.empty(0, dtype=np.int64)
+    cs = np.cumsum(deg)
+    return np.arange(cs[-1], dtype=np.int64) - np.repeat(cs - deg, deg)
+
+
+def _account(
+    res_arrays, op_ids, src, dst, parts, t_l, t_pg
+) -> None:
+    """Attribute one traversal step per (op, src→dst edge)."""
+    per_op_total, per_op_global, per_partition, per_vertex = res_arrays
+    units = t_l + t_pg
+    np.add.at(per_op_total, op_ids, units)
+    cross = (parts[src] != parts[dst]).astype(np.int64)
+    np.add.at(per_op_global, op_ids, cross)
+    np.add.at(per_partition, parts[src], t_l)
+    np.add.at(per_partition, parts[dst], t_pg)
+    np.add.at(per_vertex, src, t_l)
+    np.add.at(per_vertex, dst, t_pg)
+
+
+def _filtered_children_csr(graph: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Out-CSR restricted to folder→{file,folder} edges (BFS universe)."""
+    nt = graph.node_attrs["node_type"]
+    keep = (nt[graph.senders] == FS_FOLDER) & (
+        (nt[graph.receivers] == FS_FOLDER) | (nt[graph.receivers] == FS_FILE)
+    )
+    s, r = graph.senders[keep], graph.receivers[keep]
+    order = np.argsort(s, kind="stable")
+    indices = r[order].astype(np.int64)
+    counts = np.bincount(s, minlength=graph.n_nodes)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return indptr, indices
+
+
+def _execute_bfs_down(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+    """Vectorized level-synchronous BFS from each start until end found."""
+    indptr, indices = _filtered_children_csr(graph)
+    n_ops = ops.n_ops
+    per_op_total = np.zeros(n_ops, dtype=np.int64)
+    per_op_global = np.zeros(n_ops, dtype=np.int64)
+    per_partition = np.zeros(k, dtype=np.int64)
+    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
+    res = (per_op_total, per_op_global, per_partition, per_vertex)
+
+    f_ops = np.arange(n_ops, dtype=np.int64)
+    f_verts = ops.starts.copy()
+    max_depth = int(graph.node_attrs["depth"].max()) + 2
+    for _ in range(max_depth):
+        if f_ops.shape[0] == 0:
+            break
+        deg = indptr[f_verts + 1] - indptr[f_verts]
+        has = deg > 0
+        if not has.any():
+            break
+        rep_ops = np.repeat(f_ops[has], deg[has])
+        # gather all children
+        starts_ = indptr[f_verts[has]]
+        offs = _ragged_ranges(deg[has])
+        child = indices[np.repeat(starts_, deg[has]) + offs]
+        parent_v = np.repeat(f_verts[has], deg[has])
+        _account(res, rep_ops, parent_v, child, parts, ops.t_l, ops.t_pg)
+        # ops whose end appeared at this level are done
+        found = child == ops.ends[rep_ops]
+        done_ops = np.unique(rep_ops[found])
+        keep_mask = ~np.isin(rep_ops, done_ops)
+        f_ops = rep_ops[keep_mask]
+        f_verts = child[keep_mask]
+    return TrafficResult(*res)
+
+
+def _execute_twitter(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+    indptr, indices, _ = graph.csr  # directed out-edges ("follows")
+    n_ops = ops.n_ops
+    per_op_total = np.zeros(n_ops, dtype=np.int64)
+    per_op_global = np.zeros(n_ops, dtype=np.int64)
+    per_partition = np.zeros(k, dtype=np.int64)
+    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
+    res = (per_op_total, per_op_global, per_partition, per_vertex)
+
+    f_ops = np.arange(n_ops, dtype=np.int64)
+    f_verts = ops.starts.copy()
+    for _hop in range(2):
+        deg = (indptr[f_verts + 1] - indptr[f_verts]).astype(np.int64)
+        has = deg > 0
+        if not has.any():
+            break
+        rep_ops = np.repeat(f_ops[has], deg[has])
+        starts_ = indptr[f_verts[has]].astype(np.int64)
+        offs = _ragged_ranges(deg[has])
+        child = indices[np.repeat(starts_, deg[has]) + offs].astype(np.int64)
+        parent_v = np.repeat(f_verts[has], deg[has])
+        _account(res, rep_ops, parent_v, child, parts, ops.t_l, ops.t_pg)
+        f_ops, f_verts = rep_ops, child
+    return TrafficResult(*res)
+
+
+def _execute_gis_astar(
+    graph: Graph, ops: OpLog, parts: np.ndarray, k: int, max_expansions: int = 50_000
+) -> TrafficResult:
+    """Real A* per operation over the undirected weighted road graph."""
+    indptr, indices, weights = graph.undirected_csr
+    lon = graph.node_attrs["lon"].astype(np.float64)
+    lat = graph.node_attrs["lat"].astype(np.float64)
+    n_ops = ops.n_ops
+    per_op_total = np.zeros(n_ops, dtype=np.int64)
+    per_op_global = np.zeros(n_ops, dtype=np.int64)
+    per_partition = np.zeros(k, dtype=np.int64)
+    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
+    units = ops.t_l + ops.t_pg
+
+    for i in range(n_ops):
+        src, dst = int(ops.starts[i]), int(ops.ends[i])
+        if src == dst:
+            continue
+        tx, ty = lon[dst], lat[dst]
+        g_score: Dict[int, float] = {src: 0.0}
+        closed = set()
+        h0 = ((lon[src] - tx) ** 2 + (lat[src] - ty) ** 2) ** 0.5
+        heap = [(h0, src)]
+        expansions = 0
+        while heap and expansions < max_expansions:
+            _, u = heapq.heappop(heap)
+            if u in closed:
+                continue
+            if u == dst:
+                break
+            closed.add(u)
+            expansions += 1
+            gu = g_score[u]
+            pu = parts[u]
+            lo, hi = indptr[u], indptr[u + 1]
+            n_edges_here = hi - lo
+            if n_edges_here:
+                per_op_total[i] += units * n_edges_here
+                per_partition[pu] += ops.t_l * n_edges_here
+                per_vertex[u] += ops.t_l * n_edges_here
+            for e in range(lo, hi):
+                v = int(indices[e])
+                pv = parts[v]
+                per_partition[pv] += ops.t_pg
+                per_vertex[v] += ops.t_pg
+                if pv != pu:
+                    per_op_global[i] += 1
+                if v in closed:
+                    continue
+                cand = gu + float(weights[e])
+                if cand < g_score.get(v, np.inf):
+                    g_score[v] = cand
+                    h = ((lon[v] - tx) ** 2 + (lat[v] - ty) ** 2) ** 0.5
+                    heapq.heappush(heap, (cand + h, v))
+    return TrafficResult(per_op_total, per_op_global, per_partition, per_vertex)
+
+
+def execute_ops(graph: Graph, ops: OpLog, parts: np.ndarray, k: Optional[int] = None) -> TrafficResult:
+    """Run an evaluation log against a partitioning and measure traffic."""
+    k = int(parts.max()) + 1 if k is None else k
+    parts = np.asarray(parts, dtype=np.int64)
+    if ops.pattern == "filesystem":
+        return _execute_bfs_down(graph, ops, parts, k)
+    if ops.pattern in ("gis_short", "gis_long"):
+        return _execute_gis_astar(graph, ops, parts, k)
+    if ops.pattern == "twitter":
+        return _execute_twitter(graph, ops, parts, k)
+    raise ValueError(f"unknown pattern {ops.pattern!r}")

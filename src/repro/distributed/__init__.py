@@ -1,0 +1,3 @@
+from repro.distributed import expert_placement, halo, placement, sharding
+
+__all__ = ["expert_placement", "halo", "placement", "sharding"]

@@ -1,0 +1,103 @@
+"""DiDiC-driven expert placement for MoE (beyond-paper, DESIGN.md §5).
+
+Token→expert routing induces a dynamic bipartite access graph; experts
+that co-activate on the same tokens benefit from living on the same
+model-axis device group (a top-k token whose experts straddle devices
+pays cross-device combine latency; co-located experts share the psum).
+
+This is the thesis's Insert/Runtime-Partitioning loop applied to expert
+placement:
+
+* Runtime-Logging  — accumulate an expert co-activation graph from router
+  top-k outputs (edge weight = #tokens choosing both experts),
+* Runtime-Partitioning — DiDiC partitions the co-activation graph into
+  ``n_groups`` = model-axis size groups,
+* Migration-Scheduler — the resulting permutation re-orders the expert
+  stacks (an all-to-all of expert weights between optimizer steps).
+
+``co_location_fraction`` is the quality metric: fraction of top-k pairs
+served within one group (the MoE analogue of the paper's T_G%).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.didic import DidicConfig, didic_partition
+from repro.graphs.structure import Graph
+
+__all__ = [
+    "coactivation_graph",
+    "didic_expert_groups",
+    "co_location_fraction",
+    "expert_permutation",
+]
+
+
+def coactivation_graph(expert_idx: np.ndarray, n_experts: int) -> Graph:
+    """Build the expert co-activation graph from router top-k choices.
+
+    ``expert_idx [N_tokens, k]`` → weighted undirected graph over experts
+    where w(e1,e2) = number of tokens routed to both.
+    """
+    n, k = expert_idx.shape
+    senders, receivers = [], []
+    for i in range(k):
+        for j in range(i + 1, k):
+            senders.append(expert_idx[:, i])
+            receivers.append(expert_idx[:, j])
+    s = np.concatenate(senders)
+    r = np.concatenate(receivers)
+    keep = s != r
+    return Graph(
+        n_nodes=n_experts,
+        senders=s[keep].astype(np.int32),
+        receivers=r[keep].astype(np.int32),
+        edge_weight=np.ones(int(keep.sum()), np.float32),
+        name="expert_coactivation",
+    )
+
+
+def didic_expert_groups(
+    graph: Graph, n_groups: int, iterations: int = 40, seed: int = 0
+) -> np.ndarray:
+    """Partition experts into device groups with DiDiC."""
+    cfg = DidicConfig(k=n_groups, iterations=iterations, smooth_cap=16)
+    parts, _ = didic_partition(graph, cfg, seed=seed)
+    return parts
+
+
+def co_location_fraction(expert_idx: np.ndarray, groups: np.ndarray) -> float:
+    """Fraction of (token, expert-pair) co-activations inside one group."""
+    n, k = expert_idx.shape
+    total, inside = 0, 0
+    g = groups[expert_idx]  # [N, k]
+    for i in range(k):
+        for j in range(i + 1, k):
+            total += n
+            inside += int((g[:, i] == g[:, j]).sum())
+    return inside / max(total, 1)
+
+
+def expert_permutation(groups: np.ndarray, n_groups: int) -> np.ndarray:
+    """Expert order such that each device group holds contiguous experts.
+
+    Groups are balanced by folding overflow round-robin (expert counts per
+    group may be uneven; the EP layout needs exactly E/n_groups each).
+    """
+    e = groups.shape[0]
+    per = e // n_groups
+    buckets = [list(np.nonzero(groups == g)[0]) for g in range(n_groups)]
+    # rebalance: move overflow to the least-filled buckets
+    overflow = []
+    for b in buckets:
+        while len(b) > per:
+            overflow.append(b.pop())
+    for b in buckets:
+        while len(b) < per and overflow:
+            b.append(overflow.pop())
+    perm = np.concatenate([np.array(b, dtype=np.int64) for b in buckets])
+    assert perm.shape[0] == e
+    return perm

@@ -1,0 +1,132 @@
+"""Sharding rules per architecture family (DP/TP/EP/SP over the mesh).
+
+Mesh axes (launch/mesh.py): single-pod ``("data", "model")`` = (16, 16);
+multi-pod ``("pod", "data", "model")`` = (2, 16, 16). ``batch_axes()``
+returns the composite data-parallel axes for the active mesh rank.
+
+LM rules (Megatron-style TP + DP, EP for MoE):
+  embed [V, D]            → (model, None)       vocab-sharded embedding
+  attn wq/wk/wv [D, H·dh] → (None, model)       head-sharded
+  attn wo [H·dh, D]       → (model, None)
+  ffn w_gate/up [D, F]    → (None, model)
+  ffn w_down [F, D]       → (model, None)
+  moe experts [E, …]      → (model, None, None) expert-parallel
+  tokens [B, T]           → (batch_axes, None)
+  kv cache [L,B,T,Hkv,dh] → (None, batch_axes, model, None, None)
+                            — cache length sharded over model (split-K
+                            decode); kv-head counts (4–16) can't cover a
+                            16-wide model axis, sequence always can.
+
+Stacked-layer params carry a leading L axis → prepend None.
+
+GNN rules: node/edge tables shard over the data axes (DiDiC-aligned, see
+placement.py); model params replicate (they're KBs).
+
+DIN rules: embedding tables row-shard over model; batch over data.
+
+Optimizer state mirrors parameter specs (m/v same shape).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _lm_leaf_spec(path: str, ndim: int) -> P:
+    """Spec for one LM parameter leaf, by name pattern (see module doc)."""
+    stacked = ".layers." in path or path.startswith("layers.")
+    base: Tuple[Optional[str], ...]
+    if "embed" in path and "species" not in path:
+        base = ("model", None)
+    elif "lm_head" in path:
+        base = (None, "model")
+    elif any(k in path for k in ("wq", "wk", "wv", "w_gate", "w_up")):
+        base = (None, "model")
+    elif any(k in path for k in ("wo", "w_down")):
+        base = ("model", None)
+    elif "router" in path:
+        base = (None, None)
+    else:
+        base = ()
+    # MoE routed-expert stacks have an extra leading E axis under "moe"
+    # (the always-on shared expert is a plain SwiGLU and keeps TP rules).
+    if ".moe." in path and ".shared." not in path and any(
+        k in path for k in ("w_gate", "w_up", "w_down")
+    ):
+        base = ("model",) + (None,) * 2
+    pad = ndim - len(base) - (1 if stacked else 0)
+    spec = ((None,) if stacked else ()) + (None,) * max(pad, 0) + base
+    spec = spec[-ndim:] if len(spec) > ndim else spec + (None,) * (ndim - len(spec))
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def lm_param_specs(params_shape: PyTree) -> PyTree:
+    """PartitionSpec pytree for LM params (works on shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_leaf_spec(_path_str(path), len(leaf.shape)), params_shape
+    )
+
+
+def replicated_specs(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda leaf: P(), tree)
+
+
+def opt_state_specs(param_specs: PyTree) -> PyTree:
+    """AdamW state mirrors params; step replicates."""
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None)
+
+
+def kv_cache_spec(mesh: Mesh) -> P:
+    return P(None, batch_axes(mesh), "model", None, None)
+
+
+def gnn_node_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None)
+
+
+def din_param_specs(params_shape: PyTree) -> PyTree:
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        if "item_embed" in p or "cat_embed" in p:
+            return P("model", None)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

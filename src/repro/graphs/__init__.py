@@ -1,0 +1,8 @@
+from repro.graphs.structure import BlockEll, Graph, coalesce_edges, symmetrize
+from repro.graphs.sampler import NeighborSampler, SampledBlock
+from repro.graphs import generators, datasets
+
+__all__ = [
+    "BlockEll", "Graph", "coalesce_edges", "symmetrize",
+    "NeighborSampler", "SampledBlock", "generators", "datasets",
+]

@@ -1,0 +1,278 @@
+"""Graph containers and format conversions.
+
+The framework stores graphs in COO form (host-side ``numpy``), and derives:
+
+* CSR / CSC views for host-side traversal and neighbor sampling,
+* symmetrized (undirected) edge lists for diffusion (DiDiC operates on
+  undirected weighted graphs, paper §3.2),
+* a padded block-ELL (BELL) layout — block-sparse adjacency with
+  MXU-aligned dense blocks — consumed by the ``bsr_spmm`` Pallas kernel.
+
+Device arrays are produced on demand; the canonical representation stays on
+host so multi-million-edge graphs never pay device transfer until needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "BlockEll",
+    "coalesce_edges",
+    "symmetrize",
+]
+
+
+def coalesce_edges(
+    senders: np.ndarray,
+    receivers: np.ndarray,
+    weights: Optional[np.ndarray],
+    n_nodes: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sort edges by (sender, receiver), merge duplicates (summing weights)."""
+    senders = np.asarray(senders, dtype=np.int64)
+    receivers = np.asarray(receivers, dtype=np.int64)
+    if weights is None:
+        weights = np.ones(senders.shape[0], dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32)
+    key = senders * n_nodes + receivers
+    order = np.argsort(key, kind="stable")
+    key, senders, receivers, weights = key[order], senders[order], receivers[order], weights[order]
+    uniq, inv = np.unique(key, return_inverse=True)
+    merged_w = np.zeros(uniq.shape[0], dtype=np.float32)
+    np.add.at(merged_w, inv, weights)
+    first = np.searchsorted(key, uniq)
+    return senders[first].astype(np.int32), receivers[first].astype(np.int32), merged_w
+
+
+def symmetrize(
+    senders: np.ndarray, receivers: np.ndarray, weights: np.ndarray, n_nodes: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Return the undirected (symmetrized, coalesced, loop-free) edge set."""
+    s = np.concatenate([senders, receivers])
+    r = np.concatenate([receivers, senders])
+    w = np.concatenate([weights, weights])
+    keep = s != r
+    return coalesce_edges(s[keep], r[keep], w[keep], n_nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEll:
+    """Padded block-ELL (a.k.a. BELL) block-sparse matrix layout.
+
+    ``blocks[i, j]`` is the dense ``(bs, bs)`` block at block-row ``i``, slot
+    ``j``; ``block_cols[i, j]`` its block-column (or ``-1`` for padding). The
+    layout is rectangular so a Pallas grid can walk it with scalar-prefetched
+    indices; padded slots carry zero blocks and column index 0 with a zero
+    mask so arithmetic stays branch-free.
+    """
+
+    blocks: np.ndarray       # [n_block_rows, max_nnzb, bs, bs] float32
+    block_cols: np.ndarray   # [n_block_rows, max_nnzb] int32 (0 where padded)
+    block_mask: np.ndarray   # [n_block_rows, max_nnzb] float32 {0,1}
+    n_rows: int              # logical (unpadded) row count
+    n_cols: int
+    block_size: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def max_nnzb(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_block_rows * self.block_size
+
+    def density(self) -> float:
+        nnzb = float(self.block_mask.sum())
+        total = (self.padded_rows / self.block_size) ** 2
+        return nnzb / max(total, 1.0)
+
+    def to_dense(self) -> np.ndarray:
+        bs = self.block_size
+        out = np.zeros((self.padded_rows, self.padded_rows), dtype=self.blocks.dtype)
+        for i in range(self.n_block_rows):
+            for j in range(self.max_nnzb):
+                if self.block_mask[i, j] > 0:
+                    c = int(self.block_cols[i, j])
+                    out[i * bs:(i + 1) * bs, c * bs:(c + 1) * bs] += self.blocks[i, j]
+        return out[: self.n_rows, : self.n_cols]
+
+
+@dataclasses.dataclass
+class Graph:
+    """A directed, weighted multigraph with optional node metadata.
+
+    ``senders[e] -> receivers[e]`` with weight ``edge_weight[e]``. Node
+    metadata (``node_type``, coordinates, ...) lives in ``node_attrs`` — the
+    generators populate what their access patterns / hardcoded partitioners
+    need (paper §6.2).
+    """
+
+    n_nodes: int
+    senders: np.ndarray            # [E] int32
+    receivers: np.ndarray          # [E] int32
+    edge_weight: np.ndarray        # [E] float32
+    node_attrs: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    name: str = "graph"
+
+    def __post_init__(self) -> None:
+        self.senders = np.asarray(self.senders, dtype=np.int32)
+        self.receivers = np.asarray(self.receivers, dtype=np.int32)
+        if self.edge_weight is None:
+            self.edge_weight = np.ones(self.senders.shape[0], dtype=np.float32)
+        self.edge_weight = np.asarray(self.edge_weight, dtype=np.float32)
+        assert self.senders.shape == self.receivers.shape == self.edge_weight.shape
+
+    # ------------------------------------------------------------------ basic
+    @property
+    def n_edges(self) -> int:
+        return int(self.senders.shape[0])
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.senders, minlength=self.n_nodes).astype(np.int32)
+
+    @cached_property
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.receivers, minlength=self.n_nodes).astype(np.int32)
+
+    @cached_property
+    def degree(self) -> np.ndarray:
+        return self.out_degree + self.in_degree
+
+    # ------------------------------------------------------- undirected view
+    @cached_property
+    def undirected(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(senders, receivers, weights) of the symmetrized loop-free graph.
+
+        Both edge directions are present, so ``segment_sum`` over this list
+        implements one full undirected neighbor reduction — the primitive of
+        DiDiC diffusion (paper Eq. 4.6/4.7).
+        """
+        return symmetrize(self.senders, self.receivers, self.edge_weight, self.n_nodes)
+
+    @cached_property
+    def weighted_degree(self) -> np.ndarray:
+        """d(v) = sum of undirected incident edge weights (paper Eq. 3.4)."""
+        s, _, w = self.undirected
+        d = np.zeros(self.n_nodes, dtype=np.float64)
+        np.add.at(d, s, w)
+        return d.astype(np.float32)
+
+    # ------------------------------------------------------------- CSR views
+    @cached_property
+    def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(indptr, indices, weights) over *directed* out-edges."""
+        order = np.argsort(self.senders, kind="stable")
+        indices = self.receivers[order]
+        weights = self.edge_weight[order]
+        counts = np.bincount(self.senders, minlength=self.n_nodes)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        return indptr, indices, weights
+
+    @cached_property
+    def undirected_csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        s, r, w = self.undirected
+        order = np.argsort(s, kind="stable")
+        indices = r[order]
+        weights = w[order]
+        counts = np.bincount(s, minlength=self.n_nodes)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        return indptr, indices, weights
+
+    # ------------------------------------------------------------ BELL view
+    def to_block_ell(self, block_size: int = 128, undirected: bool = True) -> BlockEll:
+        """Pack the (weighted) adjacency into the BELL layout for ``bsr_spmm``.
+
+        Rows/cols are zero-padded to a multiple of ``block_size``. The block
+        at (bi, bj) is dense ``A[bi*bs:(bi+1)*bs, bj*bs:(bj+1)*bs]``.
+        """
+        if undirected:
+            s, r, w = self.undirected
+        else:
+            s, r, w = self.senders, self.receivers, self.edge_weight
+        bs = block_size
+        nbr = -(-self.n_nodes // bs)  # ceil
+        bi = s // bs
+        bj = r // bs
+        pair = bi.astype(np.int64) * nbr + bj
+        uniq_pairs, inv = np.unique(pair, return_inverse=True)
+        # per block-row slot assignment
+        u_bi = (uniq_pairs // nbr).astype(np.int64)
+        u_bj = (uniq_pairs % nbr).astype(np.int64)
+        slot_of_pair = np.zeros(uniq_pairs.shape[0], dtype=np.int64)
+        row_counts = np.bincount(u_bi, minlength=nbr)
+        max_nnzb = max(int(row_counts.max(initial=0)), 1)
+        # stable slot index within each block row
+        order = np.argsort(u_bi, kind="stable")
+        slot_running = np.arange(uniq_pairs.shape[0])
+        row_starts = np.concatenate([[0], np.cumsum(row_counts)])
+        slot_of_pair[order] = slot_running - row_starts[u_bi[order]]
+        blocks = np.zeros((nbr, max_nnzb, bs, bs), dtype=np.float32)
+        block_cols = np.zeros((nbr, max_nnzb), dtype=np.int32)
+        block_mask = np.zeros((nbr, max_nnzb), dtype=np.float32)
+        block_cols[u_bi, slot_of_pair] = u_bj.astype(np.int32)
+        block_mask[u_bi, slot_of_pair] = 1.0
+        e_slot = slot_of_pair[inv]
+        np.add.at(blocks, (bi, e_slot, s % bs, r % bs), w)
+        return BlockEll(
+            blocks=blocks,
+            block_cols=block_cols,
+            block_mask=block_mask,
+            n_rows=self.n_nodes,
+            n_cols=self.n_nodes,
+            block_size=bs,
+        )
+
+    # ------------------------------------------------------------- utilities
+    def subgraph(self, node_mask: np.ndarray) -> "Graph":
+        """Induced subgraph; nodes renumbered densely."""
+        node_mask = np.asarray(node_mask, dtype=bool)
+        new_id = np.full(self.n_nodes, -1, dtype=np.int64)
+        kept = np.nonzero(node_mask)[0]
+        new_id[kept] = np.arange(kept.shape[0])
+        e_keep = node_mask[self.senders] & node_mask[self.receivers]
+        attrs = {k: v[kept] for k, v in self.node_attrs.items() if v.shape[0] == self.n_nodes}
+        return Graph(
+            n_nodes=int(kept.shape[0]),
+            senders=new_id[self.senders[e_keep]],
+            receivers=new_id[self.receivers[e_keep]],
+            edge_weight=self.edge_weight[e_keep],
+            node_attrs=attrs,
+            name=self.name + "_sub",
+        )
+
+    def clustering_stats(self, sample: int = 2000, seed: int = 0) -> float:
+        """Approximate global clustering coefficient by vertex sampling."""
+        indptr, indices, _ = self.undirected_csr
+        rng = np.random.default_rng(seed)
+        nodes = rng.choice(self.n_nodes, size=min(sample, self.n_nodes), replace=False)
+        coeffs = []
+        for v in nodes:
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            d = nbrs.shape[0]
+            if d < 2:
+                coeffs.append(0.0)
+                continue
+            nbr_set = set(nbrs.tolist())
+            links = 0
+            for u in nbrs:
+                row = indices[indptr[u]:indptr[u + 1]]
+                links += sum(1 for x in row if int(x) in nbr_set)
+            coeffs.append(links / (d * (d - 1)))
+        return float(np.mean(coeffs)) if coeffs else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"Graph({self.name}): |V|={self.n_nodes:,} |E|={self.n_edges:,} "
+            f"avg_out_deg={self.n_edges / max(self.n_nodes, 1):.2f}"
+        )

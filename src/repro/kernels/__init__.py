@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework compute hot spots.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit wrapper / dispatch), <name>/ref.py (pure-jnp oracle).
+CPU runs use interpret=True; TPU is the compile target.
+"""
+
+from repro.kernels import bsr_spmm, embedding_bag, flash_attention
+
+__all__ = ["bsr_spmm", "embedding_bag", "flash_attention"]

@@ -1,0 +1,5 @@
+from repro.kernels.bsr_spmm.kernel import bell_matmul
+from repro.kernels.bsr_spmm.ref import bell_matmul_ref
+from repro.kernels.bsr_spmm import ops
+
+__all__ = ["bell_matmul", "bell_matmul_ref", "ops"]

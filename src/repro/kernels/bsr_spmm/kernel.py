@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: block-ELL sparse-matrix × dense-matrix product.
+
+This is the paper's compute hot spot, TPU-adapted (DESIGN.md §2): DiDiC
+diffusion (``A_c @ W`` on an N×k load matrix) and GCN aggregation
+(``Ã @ X``) are both SpMM with a graph adjacency. Instead of a CUDA-style
+per-edge scatter, the adjacency is packed into MXU-aligned dense blocks
+(default 128×128) in a *padded block-ELL* layout, and the kernel walks each
+block-row's nonzero blocks with **scalar-prefetched** block-column indices
+choosing which X tile to stream from HBM — the canonical TPU block-sparse
+pattern (cf. MegaBlocks-style grouped GEMM, adapted to graph adjacencies).
+
+Grid: ``(n_block_rows, max_nnz_per_row, F_tiles)``; TPU executes the grid
+sequentially, so the output tile stays resident in VMEM while the ``j``
+axis accumulates partial products. Padded slots multiply by a prefetched
+0/1 mask — branch-free.
+
+VMEM budget per step: A-block ``bs²`` + X-tile ``bs·Ft`` + out-tile
+``bs·Ft`` (all f32) = 128·128·4 × 3 ≈ 196 KiB ≪ 16 MiB, leaving room for
+double-buffered pipelining of the j axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bell_spmm_kernel(cols_ref, mask_ref, a_ref, x_ref, o_ref):
+    """One (block-row i, slot j, f-tile) step: o += mask · A[i,j] @ X[cols[i,j]]."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m = mask_ref[i, j].astype(x_ref.dtype)
+    a = a_ref[0, 0] * m
+    o_ref[...] += jax.lax.dot_general(
+        a,
+        x_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "f_tile", "interpret"))
+def bell_matmul(
+    blocks: jax.Array,       # [nbr, maxnnz, bs, bs]
+    block_cols: jax.Array,   # [nbr, maxnnz] int32
+    block_mask: jax.Array,   # [nbr, maxnnz] int32 (0/1)
+    x: jax.Array,            # [nbr*bs, F]
+    *,
+    block_size: int = 128,
+    f_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    nbr, maxnnz = block_cols.shape
+    bs = block_size
+    n, f = x.shape
+    assert n == nbr * bs, (n, nbr, bs)
+    f_pad = (-f) % f_tile
+    if f_pad:
+        x = jnp.pad(x, ((0, 0), (0, f_pad)))
+    ft = x.shape[1] // f_tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # cols, mask
+        grid=(nbr, maxnnz, ft),
+        in_specs=[
+            # A block for (i, j): indexed by grid position directly.
+            pl.BlockSpec((1, 1, bs, bs), lambda i, j, ff, cols, mask: (i, j, 0, 0)),
+            # X tile chosen by the prefetched block-column index.
+            pl.BlockSpec((bs, f_tile), lambda i, j, ff, cols, mask: (cols[i, j], ff)),
+        ],
+        out_specs=pl.BlockSpec((bs, f_tile), lambda i, j, ff, cols, mask: (i, ff)),
+    )
+
+    out = pl.pallas_call(
+        _bell_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nbr * bs, x.shape[1]), x.dtype),
+        interpret=interpret,
+    )(block_cols.astype(jnp.int32), block_mask.astype(jnp.int32), blocks, x)
+    return out[:, :f] if f_pad else out

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the BELL SpMM kernel.
+
+``make_bell_matmul(bell)`` closes over a host-side
+:class:`repro.graphs.structure.BlockEll` and returns a jitted
+``X -> A @ X`` callable backed by the Pallas kernel (interpret mode on CPU,
+compiled on TPU). ``bell_matmul_auto`` dispatches kernel vs oracle by a
+flag so callers can A/B the paths.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structure import BlockEll
+from repro.kernels.bsr_spmm.kernel import bell_matmul
+from repro.kernels.bsr_spmm.ref import bell_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def make_bell_matmul(bell: BlockEll, use_kernel: bool = True) -> Callable[[jax.Array], jax.Array]:
+    """Return a jitted ``x [padded_rows, F] -> A @ x`` callable."""
+    blocks = jnp.asarray(bell.blocks)
+    cols = jnp.asarray(bell.block_cols, dtype=jnp.int32)
+    mask = jnp.asarray(bell.block_mask.astype(np.int32))
+    bs = bell.block_size
+    interpret = not _on_tpu()
+
+    if use_kernel:
+
+        @jax.jit
+        def mm(x: jax.Array) -> jax.Array:
+            return bell_matmul(blocks, cols, mask, x, block_size=bs, interpret=interpret)
+
+    else:
+        maskf = jnp.asarray(bell.block_mask)
+
+        @jax.jit
+        def mm(x: jax.Array) -> jax.Array:
+            return bell_matmul_ref(blocks, cols, maskf, x)
+
+    return mm

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the BELL block-sparse SpMM kernel.
+
+Computes ``Y = A @ X`` where A is given in padded block-ELL layout
+(``blocks [nbr, maxnnz, bs, bs]``, ``block_cols [nbr, maxnnz]``,
+``block_mask [nbr, maxnnz]``) and X is dense ``[nbr*bs, F]``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bell_matmul_ref(
+    blocks: jnp.ndarray,
+    block_cols: jnp.ndarray,
+    block_mask: jnp.ndarray,
+    x: jnp.ndarray,
+) -> jnp.ndarray:
+    nbr, maxnnz, bs, _ = blocks.shape
+    f = x.shape[1]
+    xb = x.reshape(nbr, bs, f)
+    # gather the X block for every (row, slot): [nbr, maxnnz, bs, f]
+    gathered = xb[block_cols]
+    out = jnp.einsum(
+        "rnab,rnbf->raf",
+        blocks * block_mask[:, :, None, None].astype(blocks.dtype),
+        gathered.astype(blocks.dtype),
+    )
+    return out.reshape(nbr * bs, f).astype(x.dtype)

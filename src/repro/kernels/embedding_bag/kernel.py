@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: EmbeddingBag — scalar-prefetched gather-reduce.
+
+RecSys hot path (DESIGN.md §6): DIN's behavior-sequence pooling and every
+sparse-feature lookup reduce ragged bags of embedding rows. The TPU
+adaptation replaces random-access ``scatter/gather`` with a
+scalar-prefetched row gather: bag indices live in SMEM ahead of the grid,
+and each grid step streams exactly one table row tile into VMEM, chosen by
+``indices[b, l]`` — HBM traffic is exactly one row per bag element, the
+roofline minimum for this op.
+
+Grid: ``(B, L, D_tiles)``; the output row (bag) stays VMEM-resident across
+the ``l`` axis and accumulates ``weight · row``. Padding slots carry weight
+0 (branch-free).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embedding_bag_kernel(idx_ref, w_ref, table_ref, o_ref):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[b, l].astype(o_ref.dtype)
+    o_ref[...] += w * table_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def embedding_bag(
+    table: jax.Array,    # [V, D]
+    indices: jax.Array,  # [B, L] int32 (0 where padded)
+    weights: jax.Array,  # [B, L] float (0 where padded)
+    *,
+    d_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, l = indices.shape
+    v, d = table.shape
+    d_pad = (-d) % d_tile
+    if d_pad:
+        table = jnp.pad(table, ((0, 0), (0, d_pad)))
+    dt = table.shape[1] // d_tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # indices, weights
+        grid=(b, l, dt),
+        in_specs=[
+            pl.BlockSpec((1, d_tile), lambda bb, ll, dd, idx, w: (idx[bb, ll], dd)),
+        ],
+        out_specs=pl.BlockSpec((1, d_tile), lambda bb, ll, dd, idx, w: (bb, dd)),
+    )
+    out = pl.pallas_call(
+        _embedding_bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, table.shape[1]), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), weights, table)
+    return out[:, :d] if d_pad else out

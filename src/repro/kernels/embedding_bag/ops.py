@@ -1,0 +1,33 @@
+"""jit'd public wrapper for EmbeddingBag — dispatches kernel vs oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag_auto(
+    table: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    use_kernel: bool = False,
+    mode: str = "sum",
+) -> jax.Array:
+    """EmbeddingBag with ``sum`` or ``mean`` pooling.
+
+    ``use_kernel=False`` (default) runs the pure-jnp oracle — the right
+    choice under jit on CPU and for training (the kernel's backward pass is
+    the oracle's). The kernel path is for TPU serving and validation.
+    """
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=table.dtype)
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        weights = weights / denom
+    if use_kernel:
+        return embedding_bag(table, indices, weights, interpret=jax.default_backend() != "tpu")
+    return embedding_bag_ref(table, indices, weights)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native ``nn.EmbeddingBag``; the oracle is the canonical
+``jnp.take`` + weighted sum. ``indices [B, L]`` (padded), ``weights [B, L]``
+(0 at padding), ``table [V, D]`` → ``out [B, D]``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, indices: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0)          # [B, L, D]
+    return jnp.einsum("bl,bld->bd", weights.astype(table.dtype), rows)

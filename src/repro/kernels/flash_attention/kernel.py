@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+LM hot path. Tiled over (batch·head, q_block, kv_block) with the output
+tile VMEM-resident across the kv axis; running max / denominator / weighted
+accumulator live in VMEM scratch (the FlashAttention-2 schedule adapted to
+the TPU grid: the sequential grid replaces the CUDA persistent-CTA loop,
+and ``preferred_element_type=f32`` keeps MXU accumulation in f32 even for
+bf16 inputs).
+
+GQA is handled in the kv BlockSpec index map: q head ``h`` streams kv head
+``h // group`` — no materialized ``repeat`` (which would multiply HBM
+traffic by the group size; that saving is itself one of the §Perf levers).
+
+Causality skips whole kv blocks above the diagonal via ``pl.when`` —
+compute for the skipped blocks is never issued, so the causal kernel does
+~half the FLOPs of the bidirectional one, as it should.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, bq, bk, n_kv_blocks, causal, q_offset, kv_len):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq + q_offset
+    k_start = ik * bk
+    block_needed = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(block_needed)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kpos < kv_len  # mask zero-padded keys past the true length
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            valid = valid & (kpos <= qpos)
+        s = jnp.where(valid, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "block_q", "block_k", "group", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [BHq, Tq, Dh]
+    k: jax.Array,  # [BHkv, Tk, Dh]
+    v: jax.Array,  # [BHkv, Tk, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    group: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    bhq, tq, dh = q.shape
+    bhkv, tk, _ = k.shape
+    group = group or (bhq // bhkv)
+    assert bhq == bhkv * group
+
+    bq = min(block_q, tq)
+    bk = min(block_k, tk)
+    q_pad = (-tq) % bq
+    k_pad = (-tk) % bk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        # padded keys are excluded inside the kernel via the kv_len mask.
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0)))
+    n_q_blocks = q.shape[1] // bq
+    n_kv_blocks = k.shape[1] // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=dh ** -0.5,
+        bq=bq,
+        bk=bk,
+        n_kv_blocks=n_kv_blocks,
+        causal=causal,
+        q_offset=q_offset,
+        kv_len=tk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bhq, n_q_blocks, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, iq, ik: (bh // group, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, iq, ik: (bh // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, q.shape[1], dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :tq] if q_pad else out

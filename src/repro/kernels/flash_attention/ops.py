@@ -1,0 +1,50 @@
+"""jit'd public wrappers for flash attention.
+
+``mha(q, k, v)`` takes conventional ``[B, T, H, Dh]`` layouts, flattens to
+the kernel's batch-head-major layout, and dispatches kernel vs oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref, attention_ref_bthd
+
+
+def mha(
+    q: jax.Array,  # [B, Tq, Hq, Dh]
+    k: jax.Array,  # [B, Tk, Hkv, Dh]
+    v: jax.Array,  # [B, Tk, Hkv, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    use_kernel: bool = False,
+    flat_layout: bool = False,
+) -> jax.Array:
+    """Multi-head attention over conventional [B, T, H, Dh] layouts.
+
+    The oracle path stays 4D (``attention_ref_bthd``): merging the
+    data-sharded batch dim with the model-sharded head dim makes GSPMD
+    replicate activations (measured 38× collective blow-up on
+    granite-3-8b train_4k — EXPERIMENTS.md §Perf iteration 1).
+    ``flat_layout=True`` keeps the old merge for A/B measurement.
+    The Pallas kernel path flattens by construction — on TPU it runs
+    per-core under shard_map, where the merge is local and free.
+    """
+    b, tq, hq, dh = q.shape
+    _, tk, hkv, _ = k.shape
+    if not use_kernel and not flat_layout:
+        return attention_ref_bthd(q, k, v, causal=causal, q_offset=q_offset)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, tq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, tk, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, tk, dh)
+    if use_kernel:
+        of = flash_attention(
+            qf, kf, vf, causal=causal, q_offset=q_offset,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal, q_offset=q_offset)
+    return of.reshape(b, hq, tq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle: causal GQA attention (optionally with explicit KV len).
+
+``q [BH_q, Tq, Dh]``, ``k/v [BH_kv, Tk, Dh]`` with ``BH_q = B·Hq``,
+``BH_kv = B·Hkv`` and heads laid out batch-major so head ``i`` of q reads
+kv head ``i // (Hq/Hkv)``. ``q_offset`` positions queries at the end of the
+kv sequence (decode: Tq=1, q_offset=Tk-1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    bhq, tq, dh = q.shape
+    bhkv, tk, _ = k.shape
+    group = bhq // bhkv
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    scale = dh ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(tq)[:, None] + q_offset
+        kpos = jnp.arange(tk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_ref_bthd(
+    q: jnp.ndarray,  # [B, Tq, Hq, Dh]
+    k: jnp.ndarray,  # [B, Tk, Hkv, Dh]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """SPMD-friendly oracle: stays in [B, T, H, Dh] — never merges the
+    data-sharded batch dim with the model-sharded head dim (merging them
+    forces GSPMD into full replication of activations; §Perf iteration 1)."""
+    b, tq, hq, dh = q.shape
+    _, tk, hkv, _ = k.shape
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    scale = dh ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(tq)[:, None] + q_offset
+        kpos = jnp.arange(tk)[None, :]
+        s = jnp.where((kpos <= qpos)[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32)).astype(q.dtype)

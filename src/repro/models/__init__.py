@@ -1,0 +1,3 @@
+from repro.models import gnn, layers, mace, moe, recsys, transformer
+
+__all__ = ["gnn", "layers", "mace", "moe", "recsys", "transformer"]

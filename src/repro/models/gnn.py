@@ -1,0 +1,206 @@
+"""Message-passing GNNs: GCN, GraphSAGE (full + sampled), MeshGraphNet.
+
+JAX sparse is BCOO-only, so message passing is implemented the TPU-native
+way (per system prompt): gather features along an edge index and reduce
+with ``jax.ops.segment_sum`` / ``segment_max`` — or, on the kernel path,
+the BELL block-sparse SpMM for the normalized-adjacency form of GCN.
+
+Assigned configs:
+* gcn-cora          — 2L d=16 sym-norm mean aggregation [arXiv:1609.02907]
+* graphsage-reddit  — 2L d=128 mean aggregation, sample sizes 25-10
+                      [arXiv:1706.02216]
+* meshgraphnet      — 15L d=128 sum aggregation, 2-layer MLPs
+                      [arXiv:2010.03409]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnConfig:
+    name: str = "gcn"
+    kind: str = "gcn"            # gcn | sage | meshgraphnet
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 16
+    d_out: int = 7               # classes (or regression dims)
+    aggregator: str = "mean"     # mean | sum
+    mlp_layers: int = 2          # meshgraphnet MLP depth
+    d_edge_in: int = 4           # meshgraphnet edge features
+    dtype: Any = jnp.float32
+    unroll: bool = False         # python-loop processor blocks (dry-run FLOP
+                                 # accounting; scan bodies count once in XLA
+                                 # cost analysis — see transformer.py)
+
+
+# -------------------------------------------------------------- primitives
+def segment_mean(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    c = jax.ops.segment_sum(jnp.ones((data.shape[0], 1), data.dtype), segment_ids, num_segments=num_segments)
+    return s / jnp.maximum(c, 1.0)
+
+
+def gcn_norm_coeffs(senders: jax.Array, receivers: jax.Array, n: int) -> jax.Array:
+    """Symmetric normalization D^-1/2 (A+I) D^-1/2 edge coefficients."""
+    deg = jax.ops.segment_sum(jnp.ones_like(senders, jnp.float32), senders, num_segments=n) + 1.0
+    return jax.lax.rsqrt(deg[senders]) * jax.lax.rsqrt(deg[receivers])
+
+
+# --------------------------------------------------------------------- GCN
+def gcn_init(cfg: GnnConfig, key: jax.Array) -> Params:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": (jax.random.normal(keys[i], (dims[i], dims[i + 1])) * dims[i] ** -0.5).astype(cfg.dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def gcn_forward(
+    cfg: GnnConfig,
+    params: Params,
+    x: jax.Array,            # [N, d_in]
+    senders: jax.Array,      # [E] (symmetrized)
+    receivers: jax.Array,
+) -> jax.Array:
+    n = x.shape[0]
+    coeff = gcn_norm_coeffs(senders, receivers, n)
+    self_coeff = 1.0 / (
+        jax.ops.segment_sum(jnp.ones_like(senders, jnp.float32), senders, num_segments=n) + 1.0
+    )
+    for i in range(cfg.n_layers):
+        x = x @ params[f"w{i}"]
+        agg = jax.ops.segment_sum(coeff[:, None] * x[receivers], senders, num_segments=n)
+        x = agg + self_coeff[:, None] * x
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------- GraphSAGE
+def sage_init(cfg: GnnConfig, key: jax.Array) -> Params:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    p: Params = {}
+    keys = jax.random.split(key, 2 * (len(dims) - 1))
+    for i in range(len(dims) - 1):
+        p[f"w_self{i}"] = (jax.random.normal(keys[2 * i], (dims[i], dims[i + 1])) * dims[i] ** -0.5).astype(cfg.dtype)
+        p[f"w_nbr{i}"] = (jax.random.normal(keys[2 * i + 1], (dims[i], dims[i + 1])) * dims[i] ** -0.5).astype(cfg.dtype)
+    return p
+
+
+def sage_forward_full(
+    cfg: GnnConfig, params: Params, x: jax.Array, senders: jax.Array, receivers: jax.Array
+) -> jax.Array:
+    n = x.shape[0]
+    for i in range(cfg.n_layers):
+        nbr = segment_mean(x[receivers], senders, n)
+        x = x @ params[f"w_self{i}"] + nbr @ params[f"w_nbr{i}"]
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def sage_forward_sampled(
+    cfg: GnnConfig,
+    params: Params,
+    feats: List[jax.Array],        # per-block input features [n_src_i, d]
+    neighbors: List[jax.Array],    # per-block [n_targets_i, fanout] into src
+    masks: List[jax.Array],        # per-block [n_targets_i, fanout]
+    n_targets: List[int],
+) -> jax.Array:
+    """Layered sampled forward (GraphSAGE minibatch, fixed shapes).
+
+    ``feats[i]`` holds features for block i's source nodes; the aggregation
+    gathers sampled neighbor rows and mean-pools under the mask.
+    """
+    h = feats[0]
+    for i in range(cfg.n_layers):
+        nbrs = neighbors[i]
+        mask = masks[i]
+        gathered = h[nbrs]                                   # [T, F, d]
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        nbr = (gathered * mask[..., None]).sum(axis=1) / denom
+        self_h = h[: nbrs.shape[0]]
+        h = self_h @ params[f"w_self{i}"] + nbr @ params[f"w_nbr{i}"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ------------------------------------------------------------ MeshGraphNet
+def mgn_init(cfg: GnnConfig, key: jax.Array) -> Params:
+    d = cfg.d_hidden
+    k_enc_n, k_enc_e, k_dec, k_proc = jax.random.split(key, 4)
+    p: Params = {
+        "enc_node": L.mlp_init(k_enc_n, (cfg.d_in, d, d), cfg.dtype),
+        "enc_edge": L.mlp_init(k_enc_e, (cfg.d_edge_in, d, d), cfg.dtype),
+        "dec": L.mlp_init(k_dec, (d, d, cfg.d_out), cfg.dtype),
+    }
+    proc_keys = jax.random.split(k_proc, cfg.n_layers)
+
+    def one_proc(k):
+        ke, kn = jax.random.split(k)
+        return {
+            "edge_mlp": L.mlp_init(ke, (3 * d, d, d), cfg.dtype),
+            "node_mlp": L.mlp_init(kn, (2 * d, d, d), cfg.dtype),
+            "ln_e": L.layernorm_init(d, cfg.dtype),
+            "ln_n": L.layernorm_init(d, cfg.dtype),
+        }
+
+    p["proc"] = jax.vmap(one_proc)(proc_keys)  # stacked [L, ...] for scan
+    return p
+
+
+def mgn_forward(
+    cfg: GnnConfig,
+    params: Params,
+    node_feat: jax.Array,    # [N, d_in]
+    edge_feat: jax.Array,    # [E, d_edge_in]
+    senders: jax.Array,
+    receivers: jax.Array,
+) -> jax.Array:
+    n = node_feat.shape[0]
+    h = L.mlp(params["enc_node"], node_feat)
+    e = L.mlp(params["enc_edge"], edge_feat)
+
+    def one_layer(h, e, lp):
+        msg_in = jnp.concatenate([e, h[senders], h[receivers]], axis=-1)
+        e2 = e + L.layernorm(lp["ln_e"], L.mlp(lp["edge_mlp"], msg_in))
+        agg = jax.ops.segment_sum(e2, receivers, num_segments=n)
+        h2 = h + L.layernorm(lp["ln_n"], L.mlp(lp["node_mlp"], jnp.concatenate([h, agg], -1)))
+        return h2, e2
+
+    if cfg.unroll:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["proc"])
+            h, e = one_layer(h, e, lp)
+    else:
+        def body(carry, lp):
+            h, e = carry
+            return one_layer(*carry, lp), None
+
+        (h, e), _ = jax.lax.scan(body, (h, e), params["proc"])
+    return L.mlp(params["dec"], h)
+
+
+# ------------------------------------------------------------------ facade
+def init(cfg: GnnConfig, key: jax.Array) -> Params:
+    return {"gcn": gcn_init, "sage": sage_init, "meshgraphnet": mgn_init}[cfg.kind](cfg, key)
+
+
+def node_classification_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,177 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention, SwiGLU, MLP.
+
+Functional style: parameters are plain pytrees (dicts of arrays), layers
+are pure functions — everything composes under jit / scan / shard_map.
+Initializers take an explicit PRNG key and dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import mha
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_frequencies(d_head: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: [B, T, H, Dh]; positions: [T] or [B, T]."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, Dh/2]
+        angles = angles[None, :, None, :]
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ GQA attention
+def attention_init(
+    key: jax.Array, d_model: int, n_heads: int, n_kv_heads: int, d_head: int, dtype=jnp.float32
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(kq, (d_model, n_heads * d_head)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, n_kv_heads * d_head)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, n_kv_heads * d_head)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_heads * d_head, d_model)) * s).astype(dtype),
+    }
+
+
+def attention_fwd(
+    p: Params,
+    x: jax.Array,                       # [B, T, D]
+    n_heads: int,
+    n_kv_heads: int,
+    *,
+    positions: Optional[jax.Array] = None,
+    rope_theta: float = 10_000.0,
+    use_kernel: bool = False,
+    flat_layout: bool = False,
+) -> jax.Array:
+    """Training / prefill attention (full causal; decode uses
+    :func:`decode_attention` against a KV cache)."""
+    b, t, d = x.shape
+    d_head = p["wq"].shape[1] // n_heads
+    q = (x @ p["wq"]).reshape(b, t, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, t, n_kv_heads, d_head)
+    v = (x @ p["wv"]).reshape(b, t, n_kv_heads, d_head)
+    if positions is None:
+        positions = jnp.arange(t)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    out = mha(q, k, v, causal=True, use_kernel=use_kernel, flat_layout=flat_layout)
+    out = out.reshape(b, t, n_heads * d_head)
+    return out @ p["wo"]
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,              # [B, 1, D]
+    n_heads: int,
+    n_kv_heads: int,
+    kv_cache: Tuple[jax.Array, jax.Array],
+    position: jax.Array,       # scalar int32: index of the new token
+    rope_theta: float = 10_000.0,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode against a [B, Tmax, Hkv, Dh] cache."""
+    b, t, d = x.shape
+    d_head = p["wq"].shape[1] // n_heads
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv_heads, d_head)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv_heads, d_head)
+    pos = position.reshape((1,))
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    ck, cv = kv_cache
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, position, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, position, 0, 0))
+    tmax = ck.shape[1]
+    # Group-factored GQA decode: q reshapes to [B, 1, Hkv, G, Dh] (q is tiny
+    # and replicated, so reshaping it is free) and the einsums contract
+    # directly against the [B, T, Hkv, Dh] cache — no jnp.repeat, which
+    # would materialize a G×-duplicated copy of the (sharded) cache every
+    # step (§Perf iteration d1). q_offset must be traced-position aware,
+    # so mask against `position`.
+    group = n_heads // n_kv_heads
+    qg = q.reshape(b, 1, n_kv_heads, group, d_head).astype(jnp.float32)
+    kf = ck.astype(jnp.float32)
+    vf = cv.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) * (d_head ** -0.5)
+    kpos = jnp.arange(tmax)[None, None, None, None, :]
+    s = jnp.where(kpos <= position, s, -1e30)
+    p_ = jax.nn.softmax(s, axis=-1)
+    of = jnp.einsum("bhgqk,bkhd->bqhgd", p_, vf).astype(q.dtype)
+    out = of.reshape(b, 1, n_heads * d_head)
+    return out @ p["wo"], (ck, cv)
+
+
+# ----------------------------------------------------------------- SwiGLU
+def swiglu_init(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# -------------------------------------------------------------- simple MLP
+def mlp_init(key: jax.Array, dims: Tuple[int, ...], dtype=jnp.float32) -> Params:
+    params = {}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"w{i}"] = (jax.random.normal(keys[i], (din, dout)) * din ** -0.5).astype(dtype)
+        params[f"b{i}"] = jnp.zeros((dout,), dtype)
+    return params
+
+def mlp(p: Params, x: jax.Array, act=jax.nn.relu, final_act: bool = False) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------- LayerNorm
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype)) * p["scale"] + p["bias"]

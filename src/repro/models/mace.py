@@ -1,0 +1,154 @@
+"""MACE-lite: higher-order E(3)-equivariant message passing [arXiv:2206.07697].
+
+Assigned config: 2 layers, d_hidden=128, l_max=2, correlation_order=3,
+n_rbf=8.
+
+**Hardware/offline adaptation (DESIGN.md §5).** Full MACE uses e3nn
+Clebsch-Gordan tensor products over spherical-harmonic irreps; e3nn is not
+available offline, so this implements an explicit Cartesian irrep algebra
+that is *exactly* E(3)-equivariant for l ≤ 2:
+
+  l=0: scalars s ∈ R^{C}
+  l=1: vectors v ∈ R^{C×3}
+  l=2: traceless symmetric tensors T ∈ R^{C×3×3}
+
+with the standard equivariant products (correlation order 3 is reached by
+chaining two product stages, as in MACE's A→B contraction):
+
+  s·s → s, s·v → v, v·v → s (dot), v×v → v (cross),
+  v⊗v − |v|²I/3 → T, T·v → v, tr(T·T') → s, s·T → T.
+
+Radial dependence: n_rbf=8 Bessel-style basis with a smooth polynomial
+cutoff, mixed per-channel — the same structure as MACE's radial MLP.
+
+Equivariance is property-tested (tests/test_models.py): random rotations R
+commute with the network — scalar outputs invariant, vector features
+rotate by R.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MaceConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128        # channels per irrep
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    n_species: int = 8
+    r_cut: float = 2.0
+    dtype: Any = jnp.float32
+
+
+def bessel_rbf(r: jax.Array, n_rbf: int, r_cut: float) -> jax.Array:
+    """sin(nπr/rc)/r basis with smooth cutoff (DimeNet/MACE radial)."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    basis = jnp.sin(n[None, :] * jnp.pi * r[:, None] / r_cut) / r[:, None]
+    u = r / r_cut
+    envelope = jnp.where(u < 1.0, (1 - u) ** 2 * (1 + 2 * u), 0.0)
+    return basis * envelope[:, None]
+
+
+def init(cfg: MaceConfig, key: jax.Array) -> Params:
+    c = cfg.d_hidden
+    keys = jax.random.split(key, 8 + cfg.n_layers * 6)
+    p: Params = {
+        "species_embed": (jax.random.normal(keys[0], (cfg.n_species, c)) * 0.1).astype(cfg.dtype),
+        "readout": L.mlp_init(keys[1], (c, c, 1), cfg.dtype),
+    }
+    ki = 2
+    for layer in range(cfg.n_layers):
+        lp = {}
+        # radial mixers per message channel-group
+        lp["radial_s"] = L.mlp_init(keys[ki], (cfg.n_rbf, c), cfg.dtype); ki += 1
+        lp["radial_v"] = L.mlp_init(keys[ki], (cfg.n_rbf, c), cfg.dtype); ki += 1
+        lp["radial_t"] = L.mlp_init(keys[ki], (cfg.n_rbf, c), cfg.dtype); ki += 1
+        # channel mixers after aggregation
+        lp["mix_s"] = (jax.random.normal(keys[ki], (3 * c, c)) * (3 * c) ** -0.5).astype(cfg.dtype); ki += 1
+        lp["mix_v"] = (jax.random.normal(keys[ki], (3 * c, c)) * (3 * c) ** -0.5).astype(cfg.dtype); ki += 1
+        lp["mix_t"] = (jax.random.normal(keys[ki], (2 * c, c)) * (2 * c) ** -0.5).astype(cfg.dtype); ki += 1
+        p[f"layer{layer}"] = lp
+    return p
+
+
+def _outer_traceless(v: jax.Array) -> jax.Array:
+    """v [E,C,3] → traceless symmetric [E,C,3,3] (the l=2 part of v⊗v)."""
+    t = v[..., :, None] * v[..., None, :]
+    tr = jnp.trace(t, axis1=-2, axis2=-1)[..., None, None]
+    eye = jnp.eye(3, dtype=v.dtype)
+    return t - tr * eye / 3.0
+
+
+def forward(
+    cfg: MaceConfig,
+    params: Params,
+    species: jax.Array,    # [N] int
+    pos: jax.Array,        # [N, 3]
+    senders: jax.Array,    # [E]
+    receivers: jax.Array,  # [E]
+    mol_id: jax.Array,     # [N] graph id for readout pooling
+    n_mols: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (per-molecule energy [n_mols], per-atom scalars [N, C])."""
+    n = species.shape[0]
+    c = cfg.d_hidden
+    s = jnp.take(params["species_embed"], species, axis=0)     # [N, C] scalars
+    v = jnp.zeros((n, c, 3), cfg.dtype)                        # [N, C, 3]
+    t = jnp.zeros((n, c, 3, 3), cfg.dtype)                     # [N, C, 3, 3]
+
+    rij = pos[receivers] - pos[senders]                        # [E, 3]
+    dist = jnp.linalg.norm(rij + 1e-9, axis=-1)
+    rhat = rij / jnp.maximum(dist, 1e-6)[:, None]
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.r_cut)               # [E, n_rbf]
+
+    for layer in range(cfg.n_layers):
+        lp = params[f"layer{layer}"]
+        rs = L.mlp(lp["radial_s"], rbf)                        # [E, C]
+        rv = L.mlp(lp["radial_v"], rbf)
+        rt = L.mlp(lp["radial_t"], rbf)
+
+        # --- messages (A-features): equivariant products with r̂
+        src_s, src_v, src_t = s[senders], v[senders], t[senders]
+        m_s = rs * src_s                                        # l0
+        m_v = rv[:, :, None] * (src_s[:, :, None] * rhat[:, None, :] + src_v)
+        m_t = rt[:, :, None, None] * (
+            _outer_traceless(jnp.broadcast_to(rhat[:, None, :], src_v.shape)) * src_s[:, :, None, None]
+            + src_t
+        )
+        # extra scalar channels from equivariant contractions
+        m_s2 = rs * jnp.einsum("eci,ei->ec", src_v, rhat)       # v·r̂ → scalar
+        m_v2 = rv[:, :, None] * jnp.einsum("ecij,ej->eci", src_t, rhat)  # T·r̂ → vector
+
+        agg_s = jax.ops.segment_sum(jnp.concatenate([m_s, m_s2], -1), receivers, num_segments=n)
+        agg_v = jax.ops.segment_sum(jnp.concatenate([m_v, m_v2], 1), receivers, num_segments=n)
+        agg_t = jax.ops.segment_sum(m_t, receivers, num_segments=n)
+
+        # --- B-features: correlation-order-3 products at the node
+        a_s, a_s2 = agg_s[:, :c], agg_s[:, c:]
+        a_v, a_v2 = agg_v[:, :c], agg_v[:, c:]
+        vv = jnp.einsum("nci,nci->nc", a_v, a_v)                # |v|² scalar
+        tv = jnp.einsum("ncij,ncj->nci", agg_t, a_v)            # T·v vector
+        tt = jnp.einsum("ncij,ncij->nc", agg_t, agg_t)          # tr(TTᵀ) scalar
+
+        s = s + jnp.tanh(jnp.concatenate([a_s + a_s2, vv, tt], -1) @ lp["mix_s"])
+        cat_v = jnp.concatenate([a_v, a_v2, tv], axis=1)        # [N, 3C, 3]
+        v = v + jnp.einsum("nmi,mk->nki", cat_v, lp["mix_v"])
+        cat_t = jnp.concatenate([agg_t, _outer_traceless(a_v)], axis=1)  # [N, 2C, 3, 3]
+        t = t + jnp.einsum("nmij,mk->nkij", cat_t, lp["mix_t"])
+
+    site_energy = L.mlp(params["readout"], s)[:, 0]
+    energy = jax.ops.segment_sum(site_energy, mol_id, num_segments=n_mols)
+    return energy, s

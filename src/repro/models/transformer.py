@@ -1,0 +1,219 @@
+"""Decoder-only LM: GQA + RoPE + SwiGLU (+ optional MoE), scan-over-layers.
+
+Covers the five assigned LM architectures (dense: yi-34b,
+deepseek-coder-33b, granite-3-8b; MoE: deepseek-moe-16b, qwen3-moe-30b-a3b).
+
+Design points for scale:
+* **scan over layers** — layer parameters are stacked ``[L, ...]`` and the
+  body is a single traced block, keeping HLO size O(1) in depth (essential
+  for 60-layer dry-runs) and giving remat a natural boundary;
+* **activation checkpointing** — ``jax.checkpoint`` around the layer body
+  with a dots-saveable policy (config flag);
+* ``train_step``/``serve_step`` are pure functions of (params, batch) so
+  pjit shardings attach cleanly at the launcher level;
+* decode keeps a ``[L, B, Tmax, Hkv, Dh]`` KV cache updated functionally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import MoeConfig, moe_fwd, moe_fwd_ep, moe_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: Optional[int] = None          # default d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    rope_theta: float = 10_000.0
+    moe: Optional[MoeConfig] = None
+    dtype: Any = jnp.float32
+    remat: bool = False
+    use_flash_kernel: bool = False        # Pallas path (TPU); oracle on CPU
+    unroll: bool = False                  # python-loop layers instead of scan.
+    # scan keeps HLO O(1) in depth (fast compiles, the execution default);
+    # unroll exists because XLA cost analysis counts a scan body ONCE, so
+    # the dry-run unrolls to get true per-step FLOP counts (§Roofline).
+    moe_impl: str = "dense"               # dense | ep_shardmap (§Perf iter 2:
+    # local-dispatch expert parallelism; requires an ambient device mesh)
+    attn_flat_layout: bool = False        # legacy merged [B·H,T,D] layout —
+    # kept for the §Perf iteration-1 A/B (forces GSPMD replication)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS in §Roofline)."""
+        d, dh = self.d_model, self.head_dim
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        if self.moe:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+            ff += 3 * d * self.moe.d_ff * self.moe.n_shared
+        else:
+            ff = 3 * d * self.d_ff
+        per_layer = attn + ff + 2 * d
+        return self.n_layers * per_layer + self.vocab * d * 2 + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d, dh = self.d_model, self.head_dim
+        attn = d * (self.n_heads * dh) * 2 + d * (self.n_kv_heads * dh) * 2
+        ff = (self.moe.top_k + self.moe.n_shared) * 3 * d * self.moe.d_ff
+        ff += d * self.moe.n_experts
+        per_layer = attn + ff + 2 * d
+        return self.n_layers * per_layer + self.vocab * d * 2 + d
+
+
+# --------------------------------------------------------------------- init
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    d, dh = cfg.d_model, cfg.head_dim
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = {
+            "ln1": L.rmsnorm_init(d, cfg.dtype),
+            "ln2": L.rmsnorm_init(d, cfg.dtype),
+            "attn": L.attention_init(ka, d, cfg.n_heads, cfg.n_kv_heads, dh, cfg.dtype),
+        }
+        if cfg.moe:
+            p["moe"] = moe_init(kf, d, cfg.moe, cfg.dtype)
+        else:
+            p["ffn"] = L.swiglu_init(kf, d, cfg.d_ff, cfg.dtype)
+        return p
+
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(layer_init)(layer_keys)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, d)) * d ** -0.5).astype(cfg.dtype),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(d, cfg.dtype),
+        "lm_head": (jax.random.normal(ko, (d, cfg.vocab)) * d ** -0.5).astype(cfg.dtype),
+    }
+
+
+def init_abstract(cfg: TransformerConfig) -> Params:
+    """Shape-only params (eval_shape) — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ forward
+def _layer_fwd(cfg: TransformerConfig, lp: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h = x + L.attention_fwd(
+        lp["attn"], L.rmsnorm(lp["ln1"], x), cfg.n_heads, cfg.n_kv_heads,
+        rope_theta=cfg.rope_theta, use_kernel=cfg.use_flash_kernel,
+        flat_layout=cfg.attn_flat_layout,
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        if cfg.moe_impl == "ep_shardmap":
+            y, aux = moe_fwd_ep(lp["moe"], L.rmsnorm(lp["ln2"], h), cfg.moe)
+        else:
+            y, aux = moe_fwd(lp["moe"], L.rmsnorm(lp["ln2"], h), cfg.moe)
+    else:
+        y = L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], h))
+    return h + y, aux
+
+
+def forward(cfg: TransformerConfig, params: Params, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, T] → (logits [B, T, V], aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    fwd = functools.partial(_layer_fwd, cfg)
+    if cfg.remat:
+        fwd = jax.checkpoint(
+            fwd, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    if cfg.unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, a = fwd(lp, x)
+            aux = aux + a
+    else:
+        def body(carry, lp):
+            x, aux = carry
+            x, a = fwd(lp, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = x @ params["lm_head"]
+    return logits, aux
+
+
+def loss_fn(cfg: TransformerConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0) + aux
+
+
+# ------------------------------------------------------------------- decode
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None) -> Tuple[jax.Array, jax.Array]:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def serve_step(
+    cfg: TransformerConfig,
+    params: Params,
+    token: jax.Array,                     # [B] current token ids
+    cache: Tuple[jax.Array, jax.Array],   # ([L,B,T,Hkv,Dh], ...)
+    position: jax.Array,                  # scalar int32
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step: new logits [B, V] + updated cache."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B,1,D]
+    ck_all, cv_all = cache
+
+    def layer_decode(x, lp, ck, cv):
+        attn_out, (ck2, cv2) = L.decode_attention(
+            lp["attn"], L.rmsnorm(lp["ln1"], x), cfg.n_heads, cfg.n_kv_heads,
+            (ck, cv), position, rope_theta=cfg.rope_theta,
+            use_kernel=cfg.use_flash_kernel,
+        )
+        h = x + attn_out
+        if cfg.moe:
+            y, _ = moe_fwd(lp["moe"], L.rmsnorm(lp["ln2"], h), cfg.moe)
+        else:
+            y = L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], h))
+        return h + y, (ck2, cv2)
+
+    if cfg.unroll:
+        cks, cvs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, (ck2, cv2) = layer_decode(x, lp, ck_all[i], cv_all[i])
+            cks.append(ck2)
+            cvs.append(cv2)
+        new_caches = (jnp.stack(cks), jnp.stack(cvs))
+    else:
+        def body2(x, inputs):
+            lp, ck, cv = inputs
+            return layer_decode(x, lp, ck, cv)
+
+        x, new_caches = jax.lax.scan(body2, x, (params["layers"], ck_all, cv_all))
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = (x @ params["lm_head"])[:, 0, :]
+    return logits, new_caches

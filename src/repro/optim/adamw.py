@@ -1,0 +1,86 @@
+"""AdamW from scratch (pytree-based), with clipping and LR schedules.
+
+Implemented natively (no optax dependency): fp32 moments regardless of
+parameter dtype (bf16-safe), global-norm gradient clipping, decoupled
+weight decay, cosine schedule with linear warmup. The optimizer state
+pytree mirrors the parameter tree, so pjit shardings transfer one-to-one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+        )
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+    return lr
+
+
+def init(params: PyTree) -> Dict[str, PyTree]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def update(
+    params: PyTree,
+    grads: PyTree,
+    state: Dict[str, PyTree],
+    cfg: AdamWConfig,
+) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg)(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mh = m_ / bc1
+        vh = v_ / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gnorm}

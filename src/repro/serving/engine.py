@@ -1,0 +1,90 @@
+"""Batched serving engine with KV cache + continuous batching.
+
+Serves the LM inference shapes: prefill (chunked), decode (one token per
+step for the whole active batch), and a request queue that back-fills
+finished slots (continuous batching à la vLLM/Orca, simplified to
+fixed-slot semantics so the jitted decode step never re-compiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: tf.TransformerConfig, params: PyTree, batch_slots: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = tf.init_kv_cache(cfg, batch_slots, max_len)
+        self.positions = np.zeros(batch_slots, dtype=np.int64)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda params, token, cache, pos: tf.serve_step(cfg, params, token, cache, pos)
+        )
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                # prefill token-by-token (CPU-sized; chunked prefill on TPU)
+                for t, tok in enumerate(req.prompt):
+                    _, self.cache = self._decode(
+                        self.params,
+                        jnp.full((self.slots,), int(tok), jnp.int32),
+                        self.cache,
+                        jnp.int32(t),
+                    )
+                self.positions[i] = len(req.prompt)
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._admit()
+        active_idx = [i for i, r in enumerate(self.active) if r is not None]
+        if not active_idx:
+            return 0
+        last_tokens = np.zeros(self.slots, dtype=np.int32)
+        for i in active_idx:
+            r = self.active[i]
+            last_tokens[i] = r.generated[-1] if r.generated else r.prompt[-1]
+        pos = int(self.positions[active_idx].max())  # simplified shared clock
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(last_tokens), self.cache, jnp.int32(pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active_idx:
+            r = self.active[i]
+            r.generated.append(int(nxt[i]))
+            self.positions[i] += 1
+            if len(r.generated) >= r.max_new_tokens or self.positions[i] >= self.max_len - 1:
+                r.done = True
+                self.active[i] = None  # continuous batching: free the slot
+        return len(active_idx)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

@@ -1,0 +1,4 @@
+from repro.train import checkpoint, fault, loop
+from repro.train.loop import Trainer, TrainerConfig
+
+__all__ = ["checkpoint", "fault", "loop", "Trainer", "TrainerConfig"]

@@ -1,0 +1,106 @@
+"""Fault-tolerant checkpointing: atomic, step-indexed, mesh-shape-agnostic.
+
+Checkpoints hold the full training pytree (params, optimizer state, data
+cursor, RNG, partition map) as host numpy in an ``.npz`` plus a JSON
+manifest. Writes are atomic (tmp + rename) so a node failure mid-write
+never corrupts the latest checkpoint; ``restore_latest`` picks the newest
+complete manifest. Arrays are saved unsharded (gathered), so a restart on
+a different mesh shape re-shards freely — the elasticity contract in
+DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: PyTree,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Atomically persist ``tree`` for ``step``; prune old checkpoints."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    name = f"ckpt_{step:08d}"
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz.tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    final = os.path.join(directory, name + ".npz")
+    os.replace(tmp, final)
+
+    manifest = {"step": step, "file": name + ".npz", "extra": extra or {}}
+    fd, tmpm = tempfile.mkstemp(dir=directory, suffix=".json.tmp")
+    os.close(fd)
+    with open(tmpm, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmpm, os.path.join(directory, f"{name}.{_MANIFEST}"))
+
+    _prune(directory, keep)
+    return final
+
+
+def save_async(directory: str, step: int, tree: PyTree, extra=None, keep: int = 3) -> threading.Thread:
+    """Host-async save: device→host copy happens here, IO on a thread."""
+    host_tree = jax.tree.map(np.asarray, tree)
+    t = threading.Thread(target=save, args=(directory, step, host_tree, extra, keep), daemon=True)
+    t.start()
+    return t
+
+
+def _prune(directory: str, keep: int) -> None:
+    manifests = sorted(f for f in os.listdir(directory) if f.endswith(_MANIFEST))
+    for m in manifests[:-keep]:
+        base = m.replace("." + _MANIFEST, "")
+        for suffix in (".npz", "." + _MANIFEST):
+            try:
+                os.remove(os.path.join(directory, base + suffix))
+            except FileNotFoundError:
+                pass
+
+
+def restore_latest(directory: str, template: PyTree) -> Optional[Tuple[int, PyTree, Dict]]:
+    """Restore newest checkpoint into the structure of ``template``."""
+    if not os.path.isdir(directory):
+        return None
+    manifests = sorted(f for f in os.listdir(directory) if f.endswith(_MANIFEST))
+    for m in reversed(manifests):
+        try:
+            with open(os.path.join(directory, m)) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(directory, manifest["file"]))
+            leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+            new_leaves = []
+            for path, leaf in leaves_paths[0]:
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+                arr = data[key]
+                new_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+            tree = jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+            return manifest["step"], tree, manifest.get("extra", {})
+        except (KeyError, OSError, ValueError):
+            continue  # corrupt/partial checkpoint: fall back to previous
+    return None

@@ -1,0 +1,185 @@
+"""Core tests: DiDiC, metrics, partitioners, dynamism, traffic simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import metrics, partitioners
+from repro.core.didic import DidicConfig, didic_partition, didic_refine
+from repro.core.dynamism import apply_dynamism, generate_dynamism
+from repro.core.traffic import execute_ops, generate_ops
+from repro.graphs import datasets, generators
+
+
+@pytest.fixture(scope="module")
+def fs():
+    return datasets.load("filesystem", scale=0.005)
+
+
+@pytest.fixture(scope="module")
+def planted():
+    return generators.two_cluster(n_per=100, p_in=0.15, p_out=0.01, seed=1)
+
+
+class TestMetrics:
+    def test_edge_cut_hand_computed(self):
+        g = generators.grid_graph(2, 2)  # square: edges (0-1),(2-3),(0-2),(1-3)
+        parts = np.array([0, 0, 1, 1], dtype=np.int32)
+        assert metrics.edge_cut(g, parts) == 2.0
+        assert metrics.edge_cut_fraction(g, parts) == 0.5
+
+    def test_random_edge_cut_expectation(self, fs):
+        """Paper §7.2: random partitioning ec ≈ 1 − 1/k."""
+        for k in (2, 4):
+            parts = partitioners.random_partition(fs.n_nodes, k, seed=0)
+            ec = metrics.edge_cut_fraction(fs, parts)
+            assert abs(ec - (1 - 1 / k)) < 0.02
+
+    def test_modularity_bounds(self, planted):
+        block = planted.node_attrs["block"].astype(np.int32)
+        m_good = metrics.modularity(planted, block)
+        m_rand = metrics.modularity(planted, partitioners.random_partition(planted.n_nodes, 2, 1))
+        assert m_good > m_rand
+        assert m_good <= 1.0
+
+    def test_cv(self):
+        assert metrics.coefficient_of_variation(np.array([5, 5, 5, 5])) == 0.0
+        assert metrics.coefficient_of_variation(np.array([0, 10])) == pytest.approx(1.0)
+
+    def test_conductance_range(self, planted):
+        block = planted.node_attrs["block"].astype(np.int32)
+        phi = metrics.conductance(planted, block)
+        assert 0.0 <= phi["min"] <= phi["max"] <= 1.0
+
+
+class TestDidic:
+    def test_recovers_planted_communities(self, planted):
+        parts, _ = didic_partition(planted, DidicConfig(k=2, iterations=30), seed=0)
+        block = planted.node_attrs["block"]
+        agree = max((parts == block).mean(), (parts != block).mean())
+        assert agree > 0.95
+        assert metrics.edge_cut_fraction(planted, parts) < 0.15
+
+    def test_beats_random_on_filesystem(self, fs):
+        parts, _ = didic_partition(
+            fs, DidicConfig(k=2, iterations=60, smooth_cap=256), seed=0
+        )
+        ec = metrics.edge_cut_fraction(fs, parts)
+        assert ec < 0.15, f"DiDiC edge cut {ec} not far below random 0.5"
+
+    def test_partition_invariants(self, planted):
+        parts, state = didic_partition(planted, DidicConfig(k=4, iterations=10), seed=0)
+        assert parts.shape == (planted.n_nodes,)
+        assert parts.min() >= 0 and parts.max() < 4
+        assert not np.isnan(np.asarray(state.w)).any()
+        assert np.asarray(state.w).min() >= 0  # loads stay non-negative
+
+    def test_refine_repairs_damage(self, planted):
+        cfg = DidicConfig(k=2, iterations=30)
+        parts, state = didic_partition(planted, cfg, seed=0)
+        ec0 = metrics.edge_cut_fraction(planted, parts)
+        rng = np.random.default_rng(0)
+        damaged = parts.copy()
+        idx = rng.choice(planted.n_nodes, size=planted.n_nodes // 4, replace=False)
+        damaged[idx] = rng.integers(0, 2, size=idx.shape[0])
+        ec_damaged = metrics.edge_cut_fraction(planted, damaged)
+        repaired, _ = didic_refine(planted, damaged, cfg, iterations=1)
+        ec_repaired = metrics.edge_cut_fraction(planted, repaired)
+        assert ec_damaged > ec0 * 1.5
+        assert ec_repaired < ec_damaged * 0.5
+
+
+class TestPartitioners:
+    def test_hardcoded_filesystem_subtrees(self, fs):
+        parts = partitioners.hardcoded_filesystem(fs, 4)
+        ec = metrics.edge_cut_fraction(fs, parts)
+        counts = np.bincount(parts, minlength=4)
+        assert ec < 0.05, "subtree packing should nearly eliminate cut"
+        assert metrics.coefficient_of_variation(counts) < 0.25
+
+    def test_hardcoded_gis_longitude(self):
+        g = datasets.load("gis", scale=0.005)
+        parts = partitioners.hardcoded_gis(g, 4)
+        counts = np.bincount(parts, minlength=4)
+        assert counts.max() - counts.min() <= 4  # equal-|V| chunks
+        lon = g.node_attrs["lon"]
+        # partitions are longitude-ordered
+        assert lon[parts == 0].max() <= lon[parts == 3].min() + 1e-5
+
+    def test_hardcoded_for_dispatch(self, fs):
+        assert partitioners.hardcoded_for(fs, 2) is not None
+        tw = datasets.load("twitter", scale=0.005)
+        assert partitioners.hardcoded_for(tw, 2) is None  # paper: none for Twitter
+
+
+class TestDynamism:
+    def test_units_and_replay(self, fs):
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        log = generate_dynamism(parts, 0.05, "random", k=4, seed=1)
+        assert log.units == int(round(0.05 * fs.n_nodes))
+        out1 = apply_dynamism(parts, log)
+        out2 = apply_dynamism(parts, log)
+        assert np.array_equal(out1, out2)  # replayable
+        assert (out1 != parts).sum() > 0
+
+    def test_fewest_vertices_balances(self, fs):
+        parts = np.zeros(fs.n_nodes, dtype=np.int32)  # all on partition 0
+        log = generate_dynamism(parts, 0.2, "fewest_vertices", k=4, seed=0)
+        out = apply_dynamism(parts, log)
+        counts = np.bincount(out, minlength=4)
+        assert counts[1:].min() > 0.8 * (0.2 * fs.n_nodes / 3)
+
+    def test_least_traffic_requires_traffic(self, fs):
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        with pytest.raises(ValueError):
+            generate_dynamism(parts, 0.01, "least_traffic", k=4)
+
+    def test_slices_compose(self, fs):
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        log = generate_dynamism(parts, 0.1, "random", k=4, seed=1)
+        half1 = apply_dynamism(parts, log.slice(0.0, 0.5))
+        full_via_halves = apply_dynamism(half1, log.slice(0.5, 1.0))
+        full = apply_dynamism(parts, log)
+        assert np.array_equal(full_via_halves, full)
+
+
+class TestTraffic:
+    def test_filesystem_correlation_formula(self, fs):
+        """Paper Eq. 7.3: measured T_G% ≈ T_PG·ec/(T_L+T_PG) for random."""
+        ops = generate_ops(fs, n_ops=800, seed=0)
+        for k in (2, 4):
+            parts = partitioners.random_partition(fs.n_nodes, k, seed=0)
+            ec = metrics.edge_cut_fraction(fs, parts)
+            res = execute_ops(fs, ops, parts, k)
+            predicted = metrics.expected_global_traffic(ops.t_pg, ops.t_l, ec)
+            assert res.percent_global == pytest.approx(predicted, rel=0.08)
+
+    def test_didic_reduces_traffic(self, fs):
+        """Paper headline: DiDiC cuts inter-partition traffic 40–90+ %."""
+        ops = generate_ops(fs, n_ops=500, seed=0)
+        rand = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        did, _ = didic_partition(fs, DidicConfig(k=4, iterations=60, smooth_cap=256), seed=0)
+        pg_rand = execute_ops(fs, ops, rand, 4).percent_global
+        pg_did = execute_ops(fs, ops, did, 4).percent_global
+        assert pg_did < 0.6 * pg_rand
+
+    def test_oplog_deterministic(self, fs):
+        a = generate_ops(fs, n_ops=100, seed=3)
+        b = generate_ops(fs, n_ops=100, seed=3)
+        assert np.array_equal(a.starts, b.starts) and np.array_equal(a.ends, b.ends)
+
+    def test_twitter_two_hops(self):
+        tw = datasets.load("twitter", scale=0.005)
+        ops = generate_ops(tw, n_ops=200, seed=0)
+        parts = partitioners.random_partition(tw.n_nodes, 2, seed=0)
+        res = execute_ops(tw, ops, parts, 2)
+        assert res.total > 0
+        assert res.per_partition.sum() == res.total
+
+    def test_gis_astar_runs(self):
+        g = datasets.load("gis", scale=0.005)
+        ops = generate_ops(g, n_ops=30, seed=0)
+        parts = partitioners.hardcoded_gis(g, 2)
+        res = execute_ops(g, ops, parts, 2)
+        assert res.total > 0
+        # hardcoded longitude split: most short ops stay within a partition
+        assert res.percent_global < 0.1

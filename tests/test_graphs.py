@@ -1,0 +1,119 @@
+"""Graph substrate tests: generators, structure, BELL packing, sampler."""
+
+import numpy as np
+import pytest
+
+from repro.graphs import datasets, generators
+from repro.graphs.sampler import NeighborSampler
+from repro.graphs.structure import Graph, coalesce_edges, symmetrize
+
+
+@pytest.fixture(scope="module")
+def fs():
+    return datasets.load("filesystem", scale=0.01)
+
+
+@pytest.fixture(scope="module")
+def gis():
+    return datasets.load("gis", scale=0.01)
+
+
+@pytest.fixture(scope="module")
+def tw():
+    return datasets.load("twitter", scale=0.01)
+
+
+class TestGenerators:
+    def test_filesystem_stats(self, fs):
+        """Paper §6.2.1: E/V ≈ 1.79, events > 50 %, folder out-deg ≈ 30-40."""
+        assert 1.6 < fs.n_edges / fs.n_nodes < 2.0
+        nt = fs.node_attrs["node_type"]
+        # ≈½ of vertices are events (paper: "over 50 %"; small scales
+        # truncate the last level slightly below).
+        assert (nt == generators.FS_EVENT).mean() >= 0.49
+        folder_deg = fs.out_degree[nt == generators.FS_FOLDER]
+        assert 28 <= np.median(folder_deg) <= 45
+        file_deg = fs.out_degree[nt == generators.FS_FILE]
+        assert np.all(file_deg <= 2)
+
+    def test_filesystem_tree_parents(self, fs):
+        parent = fs.node_attrs["parent"]
+        nt = fs.node_attrs["node_type"]
+        # every non-org vertex has a parent; orgs have none
+        assert np.all(parent[nt != generators.FS_ORG] >= 0)
+        assert np.all(parent[nt == generators.FS_ORG] == -1)
+        depth = fs.node_attrs["depth"]
+        ok = parent >= 0
+        assert np.all(depth[ok] == depth[parent[ok]] + 1)
+
+    def test_gis_stats(self, gis):
+        """Paper §6.2.2: weighted edges, city concentration, lon ∈ [20,30]."""
+        assert gis.edge_weight.min() > 0
+        lon = gis.node_attrs["lon"]
+        assert lon.min() > 19 and lon.max() < 31
+        assert 0.5 < gis.node_attrs["is_city"].mean() < 0.75
+
+    def test_twitter_scale_free(self, tw):
+        """Paper §6.2.3: E/V ≈ 1.39, heavy-tailed in-degree."""
+        assert 1.2 < tw.n_edges / tw.n_nodes < 1.6
+        ind = tw.in_degree
+        assert ind.max() > 50 * max(np.median(ind), 1)
+
+    def test_determinism(self):
+        a = generators.twitter_social(scale=0.005, seed=7)
+        b = generators.twitter_social(scale=0.005, seed=7)
+        assert np.array_equal(a.senders, b.senders)
+        assert np.array_equal(a.receivers, b.receivers)
+
+
+class TestStructure:
+    def test_coalesce(self):
+        s, r, w = coalesce_edges(
+            np.array([1, 0, 1]), np.array([2, 1, 2]), np.array([1.0, 2.0, 3.0]), 4
+        )
+        assert s.tolist() == [0, 1] and r.tolist() == [1, 2]
+        assert w.tolist() == [2.0, 4.0]
+
+    def test_symmetrize_no_loops(self):
+        s, r, w = symmetrize(np.array([0, 1, 2]), np.array([1, 0, 2]), np.ones(3, np.float32), 3)
+        assert np.all(s != r)
+        # edge 0-1 appears in both directions with merged weight
+        assert s.tolist() == [0, 1] and r.tolist() == [1, 0]
+
+    def test_bell_roundtrip(self, tw):
+        sub = tw.subgraph(np.arange(tw.n_nodes) < 200)
+        bell = sub.to_block_ell(block_size=32)
+        dense = bell.to_dense()
+        s, r, w = sub.undirected
+        ref = np.zeros((sub.n_nodes, sub.n_nodes), np.float32)
+        ref[s, r] = w
+        np.testing.assert_allclose(dense, ref, rtol=1e-6)
+
+    def test_weighted_degree_symmetric(self, gis):
+        s, r, w = gis.undirected
+        d = gis.weighted_degree
+        ref = np.zeros(gis.n_nodes)
+        np.add.at(ref, s, w)
+        np.testing.assert_allclose(d, ref, rtol=1e-5)
+
+
+class TestSampler:
+    def test_shapes_static(self, tw):
+        ns = NeighborSampler(tw, (5, 3), seed=0)
+        b1 = ns.sample_batch(np.arange(10))
+        b2 = ns.sample_batch(np.arange(10, 20))
+        assert b1[0].neighbors.shape == b2[0].neighbors.shape[0:0] + b1[0].neighbors.shape
+        assert b1[-1].neighbors.shape == (10, 3)
+        assert b1[0].neighbors.shape[1] == 5
+
+    def test_neighbors_are_real(self, tw):
+        ns = NeighborSampler(tw, (4,), seed=0)
+        indptr, indices, _ = tw.undirected_csr
+        nodes = np.array([int(np.argmax(tw.degree))])  # well-connected node
+        blocks = ns.sample_batch(nodes)
+        blk = blocks[0]
+        nbr_global = blk.src_nodes[blk.neighbors[0]]
+        true_nbrs = set(indices[indptr[nodes[0]]:indptr[nodes[0] + 1]].tolist())
+        for x, m in zip(nbr_global, blk.mask[0]):
+            if m > 0:
+                assert int(x) in true_nbrs

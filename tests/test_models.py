@@ -1,0 +1,208 @@
+"""Model tests: transformer (dense/MoE/decode), GNNs, MACE equivariance, DIN."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import din_batch, gnn_features
+from repro.graphs import generators
+from repro.models import gnn, mace, recsys
+from repro.models.moe import MoeConfig, moe_fwd, moe_init
+from repro.models.transformer import (
+    TransformerConfig, forward, init_kv_cache, init_params, loss_fn, serve_step,
+)
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=101)
+
+
+@pytest.fixture(scope="module")
+def dense_params(dense_cfg):
+    return init_params(dense_cfg, jax.random.PRNGKey(0))
+
+
+class TestTransformer:
+    def test_forward_shapes(self, dense_cfg, dense_params):
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 101)
+        logits, aux = forward(dense_cfg, dense_params, toks)
+        assert logits.shape == (2, 16, 101)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_causality(self, dense_cfg, dense_params):
+        """Changing a future token must not change past logits."""
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 101)
+        l1, _ = forward(dense_cfg, dense_params, toks)
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % 101)
+        l2, _ = forward(dense_cfg, dense_params, toks2)
+        np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-5)
+
+    def test_decode_matches_prefill(self, dense_cfg, dense_params):
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 101)
+        cache = init_kv_cache(dense_cfg, 2, 16)
+        for t in range(8):
+            logits_t, cache = serve_step(dense_cfg, dense_params, toks[:, t], cache, jnp.int32(t))
+        full, _ = forward(dense_cfg, dense_params, toks)
+        np.testing.assert_allclose(
+            np.asarray(logits_t), np.asarray(full[:, -1]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_scan_vs_unroll_identical(self, dense_cfg, dense_params):
+        import dataclasses
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, 101)
+        l_scan, _ = forward(dense_cfg, dense_params, toks)
+        cfg_u = dataclasses.replace(dense_cfg, unroll=True)
+        l_unroll, _ = forward(cfg_u, dense_params, toks)
+        np.testing.assert_allclose(np.asarray(l_scan), np.asarray(l_unroll), rtol=1e-5, atol=1e-5)
+
+    def test_grad_flows(self, dense_cfg, dense_params):
+        toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, 101)
+        g = jax.grad(lambda p: loss_fn(dense_cfg, p, {"tokens": toks, "labels": toks}))(dense_params)
+        norms = [float(jnp.abs(x).max()) for x in jax.tree.leaves(g)]
+        assert all(np.isfinite(n) for n in norms)
+        assert max(norms) > 0
+
+
+class TestMoE:
+    def test_routing_weights_sum_to_one(self):
+        cfg = MoeConfig(n_experts=8, top_k=2, d_ff=32)
+        p = moe_init(jax.random.PRNGKey(0), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16))
+        y, aux = moe_fwd(p, x, cfg)
+        assert y.shape == x.shape
+        assert float(aux) >= 0
+
+    def test_capacity_drops_dont_nan(self):
+        cfg = MoeConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=0.25)
+        p = moe_init(jax.random.PRNGKey(0), 8, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 8))
+        y, _ = moe_fwd(p, x, cfg)
+        assert not bool(jnp.isnan(y).any())
+
+    def test_shared_expert_always_on(self):
+        # capacity floor is 8 slots/expert, so use N ≫ 8·E to force drops:
+        # dropped tokens must still receive the shared-expert output.
+        cfg = MoeConfig(n_experts=4, top_k=1, n_shared=1, d_ff=16, capacity_factor=1e-9)
+        p = moe_init(jax.random.PRNGKey(0), 8, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 8))
+        y, _ = moe_fwd(p, x, cfg)
+        from repro.models.layers import swiglu
+        shared = swiglu(p["shared"], x.reshape(-1, 8)).reshape(x.shape)
+        diff = np.abs(np.asarray(y) - np.asarray(shared)).max(axis=-1).reshape(-1)
+        frac_shared_only = (diff < 1e-5).mean()  # dropped → exactly shared
+        assert frac_shared_only > 0.8, frac_shared_only
+        assert frac_shared_only < 1.0  # kept tokens do get routed output
+
+
+class TestGnn:
+    def test_gcn_permutation_equivariance(self):
+        """Relabeling nodes permutes outputs identically."""
+        g = generators.random_graph(30, avg_degree=4, seed=0)
+        s, r, _ = g.undirected
+        cfg = gnn.GnnConfig(kind="gcn", d_in=6, d_hidden=8, d_out=3)
+        p = gnn.init(cfg, jax.random.PRNGKey(0))
+        x = np.random.default_rng(0).normal(size=(30, 6)).astype(np.float32)
+        out = gnn.gcn_forward(cfg, p, jnp.asarray(x), jnp.asarray(s), jnp.asarray(r))
+        perm = np.random.default_rng(1).permutation(30)
+        inv = np.argsort(perm)
+        out_p = gnn.gcn_forward(
+            cfg, p, jnp.asarray(x[perm]),
+            jnp.asarray(inv[s]), jnp.asarray(inv[r]),
+        )
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out)[perm], rtol=1e-4, atol=1e-4)
+
+    def test_sage_sampled_shapes(self):
+        g = generators.twitter_social(scale=0.003, seed=0)
+        from repro.graphs.sampler import NeighborSampler
+        cfg = gnn.GnnConfig(kind="sage", d_in=8, d_hidden=16, d_out=4)
+        p = gnn.init(cfg, jax.random.PRNGKey(0))
+        x, _ = gnn_features(g.n_nodes, 8, 4)
+        ns = NeighborSampler(g, (4, 2), seed=0)
+        blocks = ns.sample_batch(np.arange(12))
+        out = gnn.sage_forward_sampled(
+            cfg, p, [jnp.asarray(x[blocks[0].src_nodes])],
+            [jnp.asarray(b.neighbors) for b in blocks],
+            [jnp.asarray(b.mask) for b in blocks],
+            [b.n_targets for b in blocks],
+        )
+        assert out.shape == (12, 4)
+
+    def test_mgn_scan_vs_unroll(self):
+        import dataclasses
+        g = generators.mesh_graph(6, 6)
+        s, r, _ = g.undirected
+        cfg = gnn.GnnConfig(kind="meshgraphnet", n_layers=4, d_in=3, d_hidden=16, d_out=2, d_edge_in=2)
+        p = gnn.init(cfg, jax.random.PRNGKey(0))
+        nf = jax.random.normal(jax.random.PRNGKey(1), (g.n_nodes, 3))
+        ef = jax.random.normal(jax.random.PRNGKey(2), (s.shape[0], 2))
+        o1 = gnn.mgn_forward(cfg, p, nf, ef, jnp.asarray(s), jnp.asarray(r))
+        o2 = gnn.mgn_forward(dataclasses.replace(cfg, unroll=True), p, nf, ef, jnp.asarray(s), jnp.asarray(r))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+
+
+class TestMace:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        mol = generators.molecule_batch(n_mols=3, atoms_per_mol=8, seed=0)
+        cfg = mace.MaceConfig(d_hidden=8, n_layers=2)
+        p = mace.init(cfg, jax.random.PRNGKey(0))
+        args = (
+            jnp.asarray(mol.node_attrs["species"]), jnp.asarray(mol.node_attrs["pos"]),
+            jnp.asarray(mol.senders), jnp.asarray(mol.receivers),
+            jnp.asarray(mol.node_attrs["mol_id"]), 3,
+        )
+        return cfg, p, args
+
+    def test_rotation_invariance(self, setup):
+        cfg, p, args = setup
+        e1, _ = mace.forward(cfg, p, *args)
+        A = np.random.default_rng(0).normal(size=(3, 3))
+        Q, _ = np.linalg.qr(A)
+        if np.linalg.det(Q) < 0:
+            Q[:, 0] *= -1
+        e2, _ = mace.forward(cfg, p, args[0], args[1] @ jnp.asarray(Q.astype(np.float32)), *args[2:])
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+
+    def test_translation_invariance(self, setup):
+        cfg, p, args = setup
+        e1, _ = mace.forward(cfg, p, *args)
+        shift = jnp.asarray(np.array([1.3, -0.7, 2.1], np.float32))
+        e2, _ = mace.forward(cfg, p, args[0], args[1] + shift, *args[2:])
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+
+    def test_forces_finite(self, setup):
+        cfg, p, args = setup
+        forces = jax.grad(lambda pos: float(0) + mace.forward(cfg, p, args[0], pos, *args[2:])[0].sum())(args[1])
+        assert np.isfinite(np.asarray(forces)).all()
+
+
+class TestDin:
+    def test_attention_masks_padding(self):
+        cfg = recsys.DinConfig(n_items=100, n_cats=10, seq_len=6)
+        p = recsys.init(cfg, jax.random.PRNGKey(0))
+        b = {k: jnp.asarray(v) for k, v in din_batch(4, 6, 100, 10, seed=0).items()}
+        logits1 = recsys.forward(cfg, p, b)
+        # garbage in masked positions must not change outputs
+        mask = np.asarray(b["hist_mask"])
+        hist = np.asarray(b["hist_items"]).copy()
+        hist[mask == 0] = 99
+        b2 = dict(b)
+        b2["hist_items"] = jnp.asarray(hist)
+        logits2 = recsys.forward(cfg, p, b2)
+        np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2), rtol=1e-5, atol=1e-5)
+
+    def test_retrieval_matches_loop(self):
+        cfg = recsys.DinConfig(n_items=50, n_cats=5, seq_len=4)
+        p = recsys.init(cfg, jax.random.PRNGKey(0))
+        b = {k: jnp.asarray(v) for k, v in din_batch(2, 4, 50, 5, seed=1).items()}
+        uv = recsys.user_vector(cfg, p, b)
+        cand_i = jnp.arange(10)
+        cand_c = jnp.arange(10) % 5
+        scores = recsys.retrieval_scores(cfg, p, uv, cand_i, cand_c)
+        emb = np.concatenate(
+            [np.asarray(p["item_embed"])[np.asarray(cand_i)],
+             np.asarray(p["cat_embed"])[np.asarray(cand_c)]], axis=1
+        )
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(uv) @ emb.T, rtol=1e-4, atol=1e-5)
