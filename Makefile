@@ -1,0 +1,19 @@
+# Local verification targets. `make check` is what a PR must pass:
+# tier-1 tests + a ~5 s traffic-engine smoke (exactness vs the scalar
+# oracle is asserted inside the bench, so perf *and* correctness
+# regressions in the engine are caught before CI).
+
+PY := PYTHONPATH=src python
+
+.PHONY: test traffic-smoke traffic-bench check
+
+test:
+	$(PY) -m pytest -x -q
+
+traffic-smoke:
+	$(PY) -m benchmarks.kernel_bench --traffic-smoke
+
+traffic-bench:
+	$(PY) -m benchmarks.kernel_bench --traffic
+
+check: test traffic-smoke

@@ -1,11 +1,22 @@
 """Kernel microbenchmarks: oracle wall time (CPU) + structural VMEM/roofline
 numbers for the Pallas kernels (the TPU target numbers come from §Roofline,
-not wall clock — this container is CPU-only)."""
+not wall clock — this container is CPU-only), plus the traffic-engine
+throughput benchmark (batched JIT engine vs scalar oracle, per pattern).
+
+Usage:
+  python -m benchmarks.kernel_bench                 # kernel micro rows
+  python -m benchmarks.kernel_bench --traffic       # full traffic bench
+  python -m benchmarks.kernel_bench --traffic-smoke # ~5 s regression smoke
+  python -m benchmarks.kernel_bench --traffic --write-baseline  # refresh
+      benchmarks/BENCH_traffic.json
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -67,3 +78,116 @@ def bench_rows() -> List[str]:
     us4 = _time(f_attn, q, k, v)
     rows.append(f"kernel/attention_ref/us_per_call,{us4:.1f},BH=8 T=512 Dh=64 GQA2")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Traffic engine: batched JIT engine vs scalar oracle (ISSUE 1 tentpole)
+# ---------------------------------------------------------------------------
+_TRAFFIC_CASES = (
+    # pattern, dataset, batched_ops, scalar_sample_ops
+    ("filesystem", "filesystem", 100_000, 400),
+    ("twitter", "twitter", 100_000, 400),
+    ("gis_short", "gis", 20_000, 300),
+    ("gis_long", "gis", 4_000, 120),
+)
+
+_SMOKE_CASES = (
+    ("filesystem", "filesystem", 5_000, 60),
+    ("twitter", "twitter", 5_000, 60),
+    ("gis_short", "gis", 600, 40),
+)
+
+
+def traffic_bench(
+    scale: float = 0.004, smoke: bool = False, reps: int = 3
+) -> Dict[str, Dict[str, float]]:
+    """ops/sec of the batched engine vs the scalar oracle, per pattern.
+
+    The scalar path runs on a prefix of the same log (it is orders of
+    magnitude slower); both paths are verified to agree exactly on that
+    prefix before timing counts — a benchmark of a wrong engine is void.
+    """
+    from repro.core import partitioners
+    from repro.core.traffic import OpLog, execute_ops, generate_ops
+    from repro.graphs import datasets
+
+    cases = _SMOKE_CASES if smoke else _TRAFFIC_CASES
+    reps = 1 if smoke else reps
+    out: Dict[str, Dict[str, float]] = {}
+    for pattern, dataset, n_batched, n_scalar in cases:
+        g = datasets.load(dataset, scale=scale)
+        ops = generate_ops(g, n_ops=n_batched, seed=0, pattern=pattern)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+        prefix = OpLog(ops.pattern, ops.starts[:n_scalar], ops.ends[:n_scalar],
+                       ops.t_l, ops.t_pg)
+
+        t0 = time.perf_counter()
+        ref = execute_ops(g, prefix, parts, 4, engine="scalar")
+        scalar_s = time.perf_counter() - t0
+
+        full = execute_ops(g, ops, parts, 4, engine="batched")  # warm + verify
+        if not np.array_equal(full.per_op_total[:n_scalar], ref.per_op_total):
+            raise AssertionError(f"{pattern}: batched != scalar — benchmark void")
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            execute_ops(g, ops, parts, 4, engine="batched")
+            best = min(best, time.perf_counter() - t0)
+
+        out[pattern] = {
+            "n_ops": n_batched,
+            "scale": scale,
+            "batched_ops_per_s": round(n_batched / best, 1),
+            "scalar_ops_per_s": round(n_scalar / scalar_s, 1),
+            "speedup": round((n_batched / best) / (n_scalar / scalar_s), 2),
+        }
+    return out
+
+
+def traffic_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
+    rows = []
+    for pattern, r in results.items():
+        rows.append(
+            f"traffic/{pattern}/batched_ops_per_s,{r['batched_ops_per_s']:.0f},"
+            f"{r['n_ops']} ops scale={r['scale']}"
+        )
+        rows.append(
+            f"traffic/{pattern}/scalar_ops_per_s,{r['scalar_ops_per_s']:.0f},oracle"
+        )
+        rows.append(f"traffic/{pattern}/speedup,{r['speedup']:.2f},batched vs scalar")
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--traffic", action="store_true", help="full traffic bench")
+    ap.add_argument("--traffic-smoke", action="store_true",
+                    help="5-second traffic regression smoke (exactness + rate)")
+    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write results to benchmarks/BENCH_traffic.json")
+    args = ap.parse_args()
+
+    if args.traffic or args.traffic_smoke:
+        results = traffic_bench(scale=args.scale, smoke=args.traffic_smoke)
+        for row in traffic_rows(results):
+            print(row)
+        if args.write_baseline:
+            if args.traffic_smoke:
+                # Smoke runs cover fewer patterns at single-rep timing —
+                # writing them would silently degrade the baseline.
+                raise SystemExit("--write-baseline requires the full --traffic run")
+            path = os.path.join(os.path.dirname(__file__), "BENCH_traffic.json")
+            with open(path, "w") as f:
+                json.dump(results, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"# baseline written to {path}")
+    else:
+        for row in bench_rows():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -103,14 +103,25 @@ class DidicState:
 
 
 def _edge_coefficients(graph: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Symmetrized edges + Metropolis-scaled coefficients + coeff degree."""
+    """Symmetrized edges + Metropolis-scaled coefficients + coeff degree.
+
+    Cached on the graph (like the BELL packing in
+    :meth:`Graph.to_block_ell`): the coefficient matrix depends only on
+    structure, so repartition/refine cycles on a static graph never pay the
+    symmetrize + scale pass twice.
+    """
+    cached = graph.__dict__.get("_didic_coeff_cache")
+    if cached is not None:
+        return cached
     s, r, wt = graph.undirected
     deg = graph.weighted_degree
     alpha = 1.0 / (1.0 + np.maximum(deg[s], deg[r]))
     ce = (wt * alpha).astype(np.float32)
     degc = np.zeros(graph.n_nodes, dtype=np.float64)
     np.add.at(degc, s, ce)
-    return s.astype(np.int32), r.astype(np.int32), ce, degc.astype(np.float32)
+    out = (s.astype(np.int32), r.astype(np.int32), ce, degc.astype(np.float32))
+    graph.__dict__["_didic_coeff_cache"] = out
+    return out
 
 
 def _spmm_segment(ce: jax.Array, s: jax.Array, r: jax.Array, n: int, x: jax.Array) -> jax.Array:
@@ -300,8 +311,13 @@ def didic_refine(
 
     Seeds loads from ``parts`` (the degraded assignment); one iteration is
     the paper's maintenance budget. Runs at full smoothing width so the
-    repair sees existing large-scale structure instead of re-coarsening.
+    repair sees existing large-scale structure instead of re-coarsening,
+    and commits deterministically (``commit_prob=1``): stochastic
+    asynchrony exists to break synchronous oscillation across *many*
+    iterations, but within the paper's one-iteration maintenance budget it
+    only strands a random ~10 % of damaged vertices unrepaired.
     """
+    config = dataclasses.replace(config, commit_prob=1.0)
     parts_j = jnp.asarray(np.asarray(parts, dtype=np.int32))
     spmm, degc = make_spmm(graph, config)
     if state is None:

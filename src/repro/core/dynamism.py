@@ -58,8 +58,9 @@ def generate_dynamism(
     ``vertex_traffic`` (required for ``least_traffic``) is the per-vertex
     traffic estimate from a prior simulation run — the paper interleaves
     reads with inserts so the insert method can observe traffic; we feed it
-    the measured distribution, and partition traffic totals are updated as
-    vertices (and their traffic) move.
+    the measured distribution (``TrafficResult.per_vertex``, identical
+    int64 counts from either the batched or scalar engine), and partition
+    traffic totals are updated as vertices (and their traffic) move.
     """
     if method not in INSERT_METHODS:
         raise ValueError(f"unknown insert method {method!r}")
@@ -79,12 +80,10 @@ def generate_dynamism(
     targets = np.empty(units, dtype=np.int32)
 
     if method == "random":
+        # Targets are independent of the running counts, so the sequential
+        # replay loop is pure waste — draw the whole log vectorized (the
+        # draws, and hence the log, are identical to the looped version).
         targets[:] = rng.integers(0, k, size=units)
-        # counts still tracked for parity with other methods
-        for i, v in enumerate(movers):
-            counts[cur[v]] -= 1
-            counts[targets[i]] += 1
-            cur[v] = targets[i]
     elif method == "fewest_vertices":
         for i, v in enumerate(movers):
             t = int(np.argmin(counts))

@@ -208,8 +208,9 @@ class PartitionedGraphService:
         self.logger.observe_structure(self.graph, self.parts)
 
     # -- workload -----------------------------------------------------------
-    def run_ops(self, ops: OpLog) -> TrafficResult:
-        result = execute_ops(self.graph, ops, self.parts, self.k)
+    def run_ops(self, ops: OpLog, engine: str = "auto") -> TrafficResult:
+        """Replay an evaluation log (``engine``: auto | batched | scalar)."""
+        result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
         self.logger.observe_traffic(result)
         return result
 

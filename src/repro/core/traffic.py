@@ -18,16 +18,50 @@ Per-step action counts follow the paper's tables:
   GIS        (Table 6.3): T_L = 8, T_PG = 1
   Twitter    (Table 6.4): T_L = 2, T_PG = 1
 
-Execution is vectorized level-synchronous BFS for the file-system and
-Twitter patterns; the GIS pattern runs a real A* (heapq) per operation,
-matching the paper's algorithm choice (§6.2.2).
+Execution engines
+-----------------
+``execute_ops`` dispatches between two equivalent engines:
+
+* ``engine="batched"`` (default) — the JIT-compiled engine in
+  :mod:`repro.core.traffic_batched`: the op log is compiled into padded
+  device arrays once, filesystem/Twitter BFS runs as a multi-source
+  level-synchronous sweep over the pattern's edge list (frontier
+  multiplicities, one gather/scatter per level for *all* ops), GIS runs as
+  a bucketed (delta-stepping-style) batched shortest-path kernel, and all
+  four counters fall out as segment reductions. This is what makes
+  million-op logs feasible.
+* ``engine="scalar"`` — the NumPy/heapq oracle below: one op at a time,
+  plain Python loops. It is the semantic reference; the batched engine
+  must (and is tested to) reproduce its counters **exactly**.
+
+Shared semantics (both engines):
+
+* BFS patterns count one traversal step per (op, frontier-vertex → child)
+  edge, with path multiplicity; a filesystem op retires after the level at
+  which its target first appears among the children.
+* The GIS pattern accounts the *A\\* expansion set* under the Euclidean
+  heuristic ``h`` (consistent, since road weights ≥ straight-line length):
+
+      S(op) = { u reachable from src : (f(u), u) <_lex (f(dst), dst) },
+      f(u) = g*(u) + h(u, dst),
+
+  truncated to the ``max_expansions`` lex-smallest entries. Defining S by
+  the final distances (rather than by incidental heap pop order) is what
+  lets a batched solver reproduce the scalar path bit-for-bit; for every
+  non-tie case it is the exact set a heapq A* closes before popping the
+  destination. Each u ∈ S contributes deg(u) traversal steps (its edge
+  expansions).
+
+The env var ``REPRO_TRAFFIC_ENGINE`` (``batched`` | ``scalar``) overrides
+the default for A/B runs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, Optional, Tuple
+import os
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -182,172 +216,191 @@ def generate_ops(graph: Graph, n_ops: int = 10_000, seed: int = 0, pattern: Opti
 
 
 # ===========================================================================
-# Execution
+# Pattern edge universes (shared by both engines)
 # ===========================================================================
-def _ragged_ranges(deg: np.ndarray) -> np.ndarray:
-    """Vectorized concatenation of [arange(d) for d in deg]."""
-    if deg.size == 0 or deg.sum() == 0:
-        return np.empty(0, dtype=np.int64)
-    cs = np.cumsum(deg)
-    return np.arange(cs[-1], dtype=np.int64) - np.repeat(cs - deg, deg)
-
-
-def _account(
-    res_arrays, op_ids, src, dst, parts, t_l, t_pg
-) -> None:
-    """Attribute one traversal step per (op, src→dst edge)."""
-    per_op_total, per_op_global, per_partition, per_vertex = res_arrays
-    units = t_l + t_pg
-    np.add.at(per_op_total, op_ids, units)
-    cross = (parts[src] != parts[dst]).astype(np.int64)
-    np.add.at(per_op_global, op_ids, cross)
-    np.add.at(per_partition, parts[src], t_l)
-    np.add.at(per_partition, parts[dst], t_pg)
-    np.add.at(per_vertex, src, t_l)
-    np.add.at(per_vertex, dst, t_pg)
-
-
-def _filtered_children_csr(graph: Graph) -> Tuple[np.ndarray, np.ndarray]:
-    """Out-CSR restricted to folder→{file,folder} edges (BFS universe)."""
+def _filtered_children_csr_edges(graph: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Edge list restricted to folder→{file,folder} (the fs BFS universe)."""
     nt = graph.node_attrs["node_type"]
     keep = (nt[graph.senders] == FS_FOLDER) & (
         (nt[graph.receivers] == FS_FOLDER) | (nt[graph.receivers] == FS_FILE)
     )
-    s, r = graph.senders[keep], graph.receivers[keep]
+    return graph.senders[keep].astype(np.int64), graph.receivers[keep].astype(np.int64)
+
+
+def _csr_from_edges(s: np.ndarray, r: np.ndarray, n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
     order = np.argsort(s, kind="stable")
     indices = r[order].astype(np.int64)
-    counts = np.bincount(s, minlength=graph.n_nodes)
+    counts = np.bincount(s, minlength=n_nodes)
     indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
     return indptr, indices
 
 
-def _execute_bfs_down(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
-    """Vectorized level-synchronous BFS from each start until end found."""
-    indptr, indices = _filtered_children_csr(graph)
-    n_ops = ops.n_ops
-    per_op_total = np.zeros(n_ops, dtype=np.int64)
-    per_op_global = np.zeros(n_ops, dtype=np.int64)
-    per_partition = np.zeros(k, dtype=np.int64)
-    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
-    res = (per_op_total, per_op_global, per_partition, per_vertex)
+# ===========================================================================
+# Scalar oracle execution (one op at a time — the semantic reference)
+# ===========================================================================
+class _ScalarCounters:
+    def __init__(self, n_ops: int, k: int, n_nodes: int, t_l: int, t_pg: int):
+        self.per_op_total = np.zeros(n_ops, dtype=np.int64)
+        self.per_op_global = np.zeros(n_ops, dtype=np.int64)
+        self.per_partition = np.zeros(k, dtype=np.int64)
+        self.per_vertex = np.zeros(n_nodes, dtype=np.int64)
+        self.t_l, self.t_pg = t_l, t_pg
 
-    f_ops = np.arange(n_ops, dtype=np.int64)
-    f_verts = ops.starts.copy()
-    max_depth = int(graph.node_attrs["depth"].max()) + 2
-    for _ in range(max_depth):
-        if f_ops.shape[0] == 0:
-            break
-        deg = indptr[f_verts + 1] - indptr[f_verts]
-        has = deg > 0
-        if not has.any():
-            break
-        rep_ops = np.repeat(f_ops[has], deg[has])
-        # gather all children
-        starts_ = indptr[f_verts[has]]
-        offs = _ragged_ranges(deg[has])
-        child = indices[np.repeat(starts_, deg[has]) + offs]
-        parent_v = np.repeat(f_verts[has], deg[has])
-        _account(res, rep_ops, parent_v, child, parts, ops.t_l, ops.t_pg)
-        # ops whose end appeared at this level are done
-        found = child == ops.ends[rep_ops]
-        done_ops = np.unique(rep_ops[found])
-        keep_mask = ~np.isin(rep_ops, done_ops)
-        f_ops = rep_ops[keep_mask]
-        f_verts = child[keep_mask]
-    return TrafficResult(*res)
+    def step(self, i: int, u: int, v: int, parts: np.ndarray) -> None:
+        """One traversal step: op i expands edge u → v."""
+        self.per_op_total[i] += self.t_l + self.t_pg
+        pu, pv = parts[u], parts[v]
+        if pu != pv:
+            self.per_op_global[i] += 1
+        self.per_partition[pu] += self.t_l
+        self.per_partition[pv] += self.t_pg
+        self.per_vertex[u] += self.t_l
+        self.per_vertex[v] += self.t_pg
+
+    def result(self) -> TrafficResult:
+        return TrafficResult(
+            self.per_op_total, self.per_op_global, self.per_partition, self.per_vertex
+        )
 
 
-def _execute_twitter(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
-    indptr, indices, _ = graph.csr  # directed out-edges ("follows")
-    n_ops = ops.n_ops
-    per_op_total = np.zeros(n_ops, dtype=np.int64)
-    per_op_global = np.zeros(n_ops, dtype=np.int64)
-    per_partition = np.zeros(k, dtype=np.int64)
-    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
-    res = (per_op_total, per_op_global, per_partition, per_vertex)
+def _execute_bfs_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+    """Per-op level-by-level BFS down the filtered filesystem tree."""
+    s, r = _filtered_children_csr_edges(graph)
+    indptr, indices = _csr_from_edges(s, r, graph.n_nodes)
+    max_levels = int(graph.node_attrs["depth"].max()) + 2
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
+    for i in range(ops.n_ops):
+        end = int(ops.ends[i])
+        frontier = [int(ops.starts[i])]
+        for _lvl in range(max_levels):
+            children = []
+            found = False
+            for u in frontier:
+                for e in range(indptr[u], indptr[u + 1]):
+                    v = int(indices[e])
+                    ctr.step(i, u, v, parts)
+                    children.append(v)
+                    if v == end:
+                        found = True
+            if found or not children:
+                break
+            frontier = children
+    return ctr.result()
 
-    f_ops = np.arange(n_ops, dtype=np.int64)
-    f_verts = ops.starts.copy()
-    for _hop in range(2):
-        deg = (indptr[f_verts + 1] - indptr[f_verts]).astype(np.int64)
-        has = deg > 0
-        if not has.any():
-            break
-        rep_ops = np.repeat(f_ops[has], deg[has])
-        starts_ = indptr[f_verts[has]].astype(np.int64)
-        offs = _ragged_ranges(deg[has])
-        child = indices[np.repeat(starts_, deg[has]) + offs].astype(np.int64)
-        parent_v = np.repeat(f_verts[has], deg[has])
-        _account(res, rep_ops, parent_v, child, parts, ops.t_l, ops.t_pg)
-        f_ops, f_verts = rep_ops, child
-    return TrafficResult(*res)
+
+def _execute_twitter_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+    """Per-op 2-hop friend-of-a-friend expansion with path multiplicity."""
+    indptr, indices, _ = graph.csr
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
+    for i in range(ops.n_ops):
+        frontier = [int(ops.starts[i])]
+        for _hop in range(2):
+            children = []
+            for u in frontier:
+                for e in range(indptr[u], indptr[u + 1]):
+                    v = int(indices[e])
+                    ctr.step(i, u, v, parts)
+                    children.append(v)
+            frontier = children
+    return ctr.result()
 
 
-def _execute_gis_astar(
+def _execute_gis_scalar(
     graph: Graph, ops: OpLog, parts: np.ndarray, k: int, max_expansions: int = 50_000
 ) -> TrafficResult:
-    """Real A* per operation over the undirected weighted road graph."""
+    """Per-op heapq shortest paths + A*-expansion-set accounting.
+
+    Distances settle by plain Dijkstra order (g, id) — with positive
+    weights every first pop is final, no heuristic consistency needed —
+    and the search stops once the smallest unsettled distance exceeds
+    g(dst), which covers every vertex with f ≤ f(dst). Membership in the
+    expansion set S is then decided by (f, id) <_lex (f(dst), dst); see
+    the module docstring. All distance arithmetic is float32 with the same
+    operation order as the batched kernel, so counters agree bit-for-bit.
+    """
     indptr, indices, weights = graph.undirected_csr
-    lon = graph.node_attrs["lon"].astype(np.float64)
-    lat = graph.node_attrs["lat"].astype(np.float64)
-    n_ops = ops.n_ops
-    per_op_total = np.zeros(n_ops, dtype=np.int64)
-    per_op_global = np.zeros(n_ops, dtype=np.int64)
-    per_partition = np.zeros(k, dtype=np.int64)
-    per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
-    units = ops.t_l + ops.t_pg
+    weights = weights.astype(np.float32)
+    lon = graph.node_attrs["lon"].astype(np.float32)
+    lat = graph.node_attrs["lat"].astype(np.float32)
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
 
-    for i in range(n_ops):
+    for i in range(ops.n_ops):
         src, dst = int(ops.starts[i]), int(ops.ends[i])
-        if src == dst:
-            continue
-        tx, ty = lon[dst], lat[dst]
-        g_score: Dict[int, float] = {src: 0.0}
-        closed = set()
-        h0 = ((lon[src] - tx) ** 2 + (lat[src] - ty) ** 2) ** 0.5
-        heap = [(h0, src)]
-        expansions = 0
-        while heap and expansions < max_expansions:
-            _, u = heapq.heappop(heap)
-            if u in closed:
+        dist = {}
+        heap = [(np.float32(0.0), src)]
+        tentative = {src: np.float32(0.0)}
+        g_dst = None
+        while heap:
+            gu, u = heapq.heappop(heap)
+            if u in dist:
                 continue
-            if u == dst:
+            if g_dst is not None and gu > g_dst:
                 break
-            closed.add(u)
-            expansions += 1
-            gu = g_score[u]
-            pu = parts[u]
-            lo, hi = indptr[u], indptr[u + 1]
-            n_edges_here = hi - lo
-            if n_edges_here:
-                per_op_total[i] += units * n_edges_here
-                per_partition[pu] += ops.t_l * n_edges_here
-                per_vertex[u] += ops.t_l * n_edges_here
-            for e in range(lo, hi):
+            dist[u] = gu
+            if u == dst:
+                g_dst = gu
+            for e in range(indptr[u], indptr[u + 1]):
                 v = int(indices[e])
-                pv = parts[v]
-                per_partition[pv] += ops.t_pg
-                per_vertex[v] += ops.t_pg
-                if pv != pu:
-                    per_op_global[i] += 1
-                if v in closed:
+                if v in dist:
                     continue
-                cand = gu + float(weights[e])
-                if cand < g_score.get(v, np.inf):
-                    g_score[v] = cand
-                    h = ((lon[v] - tx) ** 2 + (lat[v] - ty) ** 2) ** 0.5
-                    heapq.heappush(heap, (cand + h, v))
-    return TrafficResult(per_op_total, per_op_global, per_partition, per_vertex)
+                cand = gu + weights[e]
+                known = tentative.get(v)
+                if known is None or cand < known:
+                    tentative[v] = cand
+                    heapq.heappush(heap, (cand, v))
+        # A* expansion set under the Euclidean heuristic (h(dst) = 0).
+        tx, ty = lon[dst], lat[dst]
+        f_dst = (np.float32(np.inf), dst) if g_dst is None else (g_dst, dst)
+        expansion = []
+        for u, gu in dist.items():
+            dx = lon[u] - tx
+            dy = lat[u] - ty
+            fu = gu + np.sqrt(dx * dx + dy * dy)
+            if (fu, u) < f_dst:
+                expansion.append((fu, u))
+        if len(expansion) > max_expansions:
+            expansion.sort()
+            expansion = expansion[:max_expansions]
+        for _fu, u in expansion:
+            for e in range(indptr[u], indptr[u + 1]):
+                ctr.step(i, u, int(indices[e]), parts)
+    return ctr.result()
 
 
-def execute_ops(graph: Graph, ops: OpLog, parts: np.ndarray, k: Optional[int] = None) -> TrafficResult:
-    """Run an evaluation log against a partitioning and measure traffic."""
+def _execute_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+    if ops.pattern == "filesystem":
+        return _execute_bfs_scalar(graph, ops, parts, k)
+    if ops.pattern in ("gis_short", "gis_long"):
+        return _execute_gis_scalar(graph, ops, parts, k)
+    if ops.pattern == "twitter":
+        return _execute_twitter_scalar(graph, ops, parts, k)
+    raise ValueError(f"unknown pattern {ops.pattern!r}")
+
+
+# ===========================================================================
+# Dispatch
+# ===========================================================================
+def execute_ops(
+    graph: Graph,
+    ops: OpLog,
+    parts: np.ndarray,
+    k: Optional[int] = None,
+    engine: str = "auto",
+) -> TrafficResult:
+    """Run an evaluation log against a partitioning and measure traffic.
+
+    ``engine``: ``"batched"`` (JIT engine, default), ``"scalar"`` (NumPy
+    oracle), or ``"auto"`` (batched unless ``REPRO_TRAFFIC_ENGINE``
+    overrides). Both produce identical counters.
+    """
     k = int(parts.max()) + 1 if k is None else k
     parts = np.asarray(parts, dtype=np.int64)
-    if ops.pattern == "filesystem":
-        return _execute_bfs_down(graph, ops, parts, k)
-    if ops.pattern in ("gis_short", "gis_long"):
-        return _execute_gis_astar(graph, ops, parts, k)
-    if ops.pattern == "twitter":
-        return _execute_twitter(graph, ops, parts, k)
-    raise ValueError(f"unknown pattern {ops.pattern!r}")
+    if engine == "auto":
+        engine = os.environ.get("REPRO_TRAFFIC_ENGINE", "batched")
+    if engine == "scalar":
+        return _execute_scalar(graph, ops, parts, k)
+    if engine == "batched":
+        from repro.core.traffic_batched import execute_ops_batched
+
+        return execute_ops_batched(graph, ops, parts, k)
+    raise ValueError(f"unknown engine {engine!r}")

@@ -1,8 +1,10 @@
-from repro.graphs.structure import BlockEll, Graph, coalesce_edges, symmetrize
+from repro.graphs.structure import (
+    BlockEll, Graph, PaddedNeighbors, coalesce_edges, padded_neighbors, symmetrize,
+)
 from repro.graphs.sampler import NeighborSampler, SampledBlock
 from repro.graphs import generators, datasets
 
 __all__ = [
-    "BlockEll", "Graph", "coalesce_edges", "symmetrize",
-    "NeighborSampler", "SampledBlock", "generators", "datasets",
+    "BlockEll", "Graph", "PaddedNeighbors", "coalesce_edges", "padded_neighbors",
+    "symmetrize", "NeighborSampler", "SampledBlock", "generators", "datasets",
 ]

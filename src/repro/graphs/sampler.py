@@ -61,13 +61,14 @@ class NeighborSampler:
             uniq, inv = np.unique(
                 np.concatenate([targets, flat]), return_inverse=True
             )
-            # Remap so targets occupy the first positions deterministically.
-            remap = np.full(uniq.shape[0], -1, dtype=np.int64)
+            # Remap so targets occupy the first positions deterministically
+            # (vectorized: position lookup via sorted searchsorted instead
+            # of a per-element Python dict walk).
             order = np.concatenate([targets, np.setdiff1d(uniq, targets, assume_unique=False)])
-            remap_pos = {int(v): i for i, v in enumerate(order)}
-            local_nbrs = np.array([remap_pos[int(v)] for v in flat], dtype=np.int32).reshape(
-                nbrs.shape
-            )
+            sorter = np.argsort(order)
+            local_nbrs = sorter[
+                np.searchsorted(order, flat, sorter=sorter)
+            ].astype(np.int32).reshape(nbrs.shape)
             blocks.append(
                 SampledBlock(
                     src_nodes=order,

@@ -5,6 +5,6 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 CPU runs use interpret=True; TPU is the compile target.
 """
 
-from repro.kernels import bsr_spmm, embedding_bag, flash_attention
+from repro.kernels import bsr_spmm, embedding_bag, flash_attention, frontier
 
-__all__ = ["bsr_spmm", "embedding_bag", "flash_attention"]
+__all__ = ["bsr_spmm", "embedding_bag", "flash_attention", "frontier"]

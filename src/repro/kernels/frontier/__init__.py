@@ -1,0 +1,5 @@
+from repro.kernels.frontier.kernel import frontier_gather
+from repro.kernels.frontier.ops import make_frontier_gather
+from repro.kernels.frontier.ref import frontier_gather_ref
+
+__all__ = ["frontier_gather", "frontier_gather_ref", "make_frontier_gather"]

@@ -1,0 +1,64 @@
+"""jit'd public wrappers for the frontier gather kernel.
+
+``make_frontier_gather(pn, mode=...)`` closes over a host-side
+:class:`repro.graphs.structure.PaddedNeighbors` and returns a jitted
+``x [N, C] -> reduced [N, C]`` callable: the Pallas kernel on TPU (interpret
+mode available for validation on CPU), or the pure-jnp reference. This is
+the planned TPU relaxation path for the batched traffic engine (ROADMAP:
+multi-host sharded traffic replay); the engine's CPU hot loop currently
+inlines the equivalent capped-slot gather in
+:mod:`repro.core.traffic_batched`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structure import PaddedNeighbors
+from repro.kernels.frontier.kernel import frontier_gather
+from repro.kernels.frontier.ref import frontier_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def make_frontier_gather(
+    pn: PaddedNeighbors,
+    mode: str = "sum",
+    use_kernel: bool = False,
+) -> Callable[[jax.Array], jax.Array]:
+    """Return a jitted ``x [N, C] -> out [N, C]`` frontier reduce."""
+    if pn.n_spill:
+        raise ValueError(
+            "PaddedNeighbors built with a slot cap has spill edges the "
+            "gather kernel would silently drop; build without `cap`"
+        )
+    nbr = jnp.asarray(pn.nbr, dtype=jnp.int32)
+    if mode == "sum":
+        w = jnp.asarray(pn.w * pn.mask)
+    elif mode == "min":
+        w = jnp.asarray(np.where(pn.mask > 0, pn.w, np.float32(np.inf)))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    if use_kernel:
+        interpret = not _on_tpu()
+
+        @jax.jit
+        def gather(x: jax.Array) -> jax.Array:
+            return frontier_gather(x, nbr, w, mode=mode, interpret=interpret)
+
+    else:
+        maskj = jnp.asarray(pn.mask)
+        wj = jnp.asarray(pn.w)
+
+        @jax.jit
+        def gather(x: jax.Array) -> jax.Array:
+            return frontier_gather_ref(x, nbr, wj, maskj, mode=mode)
+
+    return gather

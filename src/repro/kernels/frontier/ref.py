@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the frontier gather kernel.
+
+One traversal primitive serves the whole batched traffic engine
+(:mod:`repro.core.traffic_batched`): a gather-reduce over the padded
+in-neighbor layout (:class:`repro.graphs.structure.PaddedNeighbors`).
+
+``mode="sum"``  — frontier expansion / multiplicity propagation:
+    out[v, c] = Σ_j  w[v, j] · x[nbr[v, j], c]
+``mode="min"``  — one min-plus (shortest-path) relaxation sweep:
+    out[v, c] = min_j ( x[nbr[v, j], c] + w[v, j] ),  padded slots = +inf
+
+Rows of ``x`` are vertices, columns are the batched operations, so one call
+advances *every* operation in the chunk by one level.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_INF = jnp.float32(jnp.inf)
+
+
+def frontier_gather_ref(
+    x: jnp.ndarray,        # [N, C] vertex-major frontier values
+    nbr: jnp.ndarray,      # [V, D] int32 in-neighbor ids (0 where padded)
+    w: jnp.ndarray,        # [V, D] per-edge weights (0 where padded)
+    mask: jnp.ndarray,     # [V, D] {0,1}
+    mode: str = "sum",
+) -> jnp.ndarray:
+    rows = jnp.take(x, nbr, axis=0)  # [V, D, C]
+    if mode == "sum":
+        return jnp.einsum("vdc,vd->vc", rows, (w * mask).astype(x.dtype))
+    if mode == "min":
+        shifted = rows + jnp.where(mask > 0, w, _INF)[:, :, None]
+        return jnp.min(shifted, axis=1)
+    raise ValueError(f"unknown mode {mode!r}")

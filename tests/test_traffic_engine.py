@@ -1,0 +1,228 @@
+"""Batched traffic engine: exact equivalence vs the scalar oracle.
+
+The acceptance bar (ISSUE 1) is *bit-exact* agreement on all four traffic
+counters — total, global, per-partition, per-vertex — across every access
+pattern, including the GIS A*-expansion-set semantics with float32
+distance ties and the max_expansions truncation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import partitioners
+from repro.core.didic import DidicConfig, didic_partition
+from repro.core.traffic import OpLog, execute_ops, generate_ops
+from repro.core.traffic_batched import BatchedTrafficEngine, get_engine
+from repro.graphs import datasets
+
+
+@pytest.fixture(scope="module")
+def fs():
+    return datasets.load("filesystem", scale=0.004)
+
+
+@pytest.fixture(scope="module")
+def gis():
+    return datasets.load("gis", scale=0.004)
+
+
+@pytest.fixture(scope="module")
+def tw():
+    return datasets.load("twitter", scale=0.004)
+
+
+def _assert_exact(graph, ops, parts, k, **batched_kw):
+    ref = execute_ops(graph, ops, parts, k, engine="scalar")
+    if batched_kw:
+        eng = BatchedTrafficEngine(graph, ops.pattern, **batched_kw)
+        got = eng.run(ops, parts, k, t_l=ops.t_l, t_pg=ops.t_pg)
+    else:
+        got = execute_ops(graph, ops, parts, k, engine="batched")
+    np.testing.assert_array_equal(got.per_op_total, ref.per_op_total)
+    np.testing.assert_array_equal(got.per_op_global, ref.per_op_global)
+    np.testing.assert_array_equal(got.per_partition, ref.per_partition)
+    np.testing.assert_array_equal(got.per_vertex, ref.per_vertex)
+    assert got.per_partition.sum() == got.total
+    return got
+
+
+class TestEquivalence:
+    def test_filesystem_random_parts(self, fs):
+        ops = generate_ops(fs, n_ops=400, seed=1)
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        _assert_exact(fs, ops, parts, 4)
+
+    def test_filesystem_hardcoded_parts(self, fs):
+        ops = generate_ops(fs, n_ops=300, seed=2)
+        parts = partitioners.hardcoded_filesystem(fs, 2)
+        _assert_exact(fs, ops, parts, 2)
+
+    def test_twitter(self, tw):
+        ops = generate_ops(tw, n_ops=400, seed=1)
+        parts = partitioners.random_partition(tw.n_nodes, 4, seed=3)
+        _assert_exact(tw, ops, parts, 4)
+
+    def test_gis_short(self, gis):
+        ops = generate_ops(gis, n_ops=200, seed=1, pattern="gis_short")
+        parts = partitioners.hardcoded_gis(gis, 4)
+        _assert_exact(gis, ops, parts, 4)
+
+    def test_gis_long(self, gis):
+        ops = generate_ops(gis, n_ops=60, seed=1, pattern="gis_long")
+        parts = partitioners.random_partition(gis.n_nodes, 4, seed=0)
+        _assert_exact(gis, ops, parts, 4)
+
+    def test_gis_didic_parts(self, gis):
+        """Exactness must not depend on the partitioning's shape."""
+        ops = generate_ops(gis, n_ops=80, seed=4, pattern="gis_short")
+        parts, _ = didic_partition(gis, DidicConfig(k=2, iterations=5), seed=0)
+        _assert_exact(gis, ops, parts, 2)
+
+    def test_gis_degenerate_src_eq_dst(self, gis):
+        """src == dst ops contribute exactly zero traffic in both engines."""
+        v = np.array([7, 7, 123], dtype=np.int64)
+        ops = OpLog("gis_short", v, v.copy(), t_l=8, t_pg=1)
+        parts = partitioners.random_partition(gis.n_nodes, 2, seed=0)
+        got = _assert_exact(gis, ops, parts, 2)
+        assert got.total == 0
+
+    def test_gis_max_expansions_truncation(self, gis):
+        """The lex-(f, id) truncation must agree between the engines even
+        when it actively clips the expansion set."""
+        ops = generate_ops(gis, n_ops=40, seed=5, pattern="gis_long")
+        parts = partitioners.random_partition(gis.n_nodes, 2, seed=1)
+        ref = execute_ops(gis, ops, parts, 2, engine="scalar")
+
+        from repro.core import traffic as t
+
+        clipped_ref = t._execute_gis_scalar(gis, ops, parts, 2, max_expansions=64)
+        assert clipped_ref.total < ref.total  # the cap binds
+        eng = BatchedTrafficEngine(gis, "gis_long", max_expansions=64)
+        got = eng.run(ops, parts, 2, t_l=ops.t_l, t_pg=ops.t_pg)
+        np.testing.assert_array_equal(got.per_op_total, clipped_ref.per_op_total)
+        np.testing.assert_array_equal(got.per_op_global, clipped_ref.per_op_global)
+        np.testing.assert_array_equal(got.per_vertex, clipped_ref.per_vertex)
+
+    def test_gis_bucketed_variant(self, gis):
+        """The finite-Δ delta-stepping path is exactly equivalent too."""
+        ops = generate_ops(gis, n_ops=100, seed=6, pattern="gis_short")
+        parts = partitioners.random_partition(gis.n_nodes, 4, seed=2)
+        _assert_exact(gis, ops, parts, 4, delta_scale=4.0)
+
+    def test_small_chunk_padding(self, gis):
+        """n_ops far below / not divisible by the chunk size."""
+        ops = generate_ops(gis, n_ops=13, seed=7, pattern="gis_short")
+        parts = partitioners.random_partition(gis.n_nodes, 3, seed=0)
+        _assert_exact(gis, ops, parts, 3, chunk=8)
+
+    def test_batched_deterministic(self, fs):
+        ops = generate_ops(fs, n_ops=200, seed=9)
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        a = execute_ops(fs, ops, parts, 4, engine="batched")
+        b = execute_ops(fs, ops, parts, 4, engine="batched")
+        np.testing.assert_array_equal(a.per_op_total, b.per_op_total)
+        np.testing.assert_array_equal(a.per_vertex, b.per_vertex)
+
+    def test_engine_cache_reused(self, fs):
+        ops = generate_ops(fs, n_ops=50, seed=0)
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        execute_ops(fs, ops, parts, 4, engine="batched")
+        e1 = get_engine(fs, "filesystem")
+        execute_ops(fs, ops, parts, 4, engine="batched")
+        assert get_engine(fs, "filesystem") is e1
+
+    def test_env_override(self, fs, monkeypatch):
+        ops = generate_ops(fs, n_ops=30, seed=0)
+        parts = partitioners.random_partition(fs.n_nodes, 2, seed=0)
+        monkeypatch.setenv("REPRO_TRAFFIC_ENGINE", "scalar")
+        a = execute_ops(fs, ops, parts, 2, engine="auto")
+        b = execute_ops(fs, ops, parts, 2, engine="scalar")
+        np.testing.assert_array_equal(a.per_op_total, b.per_op_total)
+
+
+class TestFrontierKernel:
+    def test_pallas_interpret_matches_ref(self):
+        import jax.numpy as jnp
+
+        from repro.graphs.structure import padded_neighbors
+        from repro.kernels.frontier import frontier_gather, frontier_gather_ref
+
+        rng = np.random.default_rng(0)
+        n, e, c = 41, 150, 10
+        s = rng.integers(0, n, e)
+        r = rng.integers(0, n, e)
+        w = rng.random(e).astype(np.float32)
+        pn = padded_neighbors(s, r, w, n)
+        x = rng.normal(size=(n, c)).astype(np.float32)
+
+        ref_sum = frontier_gather_ref(
+            jnp.asarray(x), jnp.asarray(pn.nbr), jnp.asarray(pn.w),
+            jnp.asarray(pn.mask), mode="sum",
+        )
+        k_sum = frontier_gather(
+            jnp.asarray(x), jnp.asarray(pn.nbr), jnp.asarray(pn.w * pn.mask),
+            mode="sum", interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(k_sum), np.asarray(ref_sum), rtol=1e-5, atol=1e-5)
+
+        w_inf = np.where(pn.mask > 0, pn.w, np.float32(np.inf))
+        ref_min = frontier_gather_ref(
+            jnp.asarray(x), jnp.asarray(pn.nbr), jnp.asarray(pn.w),
+            jnp.asarray(pn.mask), mode="min",
+        )
+        k_min = frontier_gather(
+            jnp.asarray(x), jnp.asarray(pn.nbr), jnp.asarray(w_inf),
+            mode="min", interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(k_min), np.asarray(ref_min))
+
+    def test_make_frontier_gather_dispatch(self):
+        """The ops-layer closure (both kernel and ref paths) agrees with a
+        dense oracle, and refuses capped layouts it would silently drop."""
+        import jax.numpy as jnp
+
+        from repro.graphs.structure import padded_neighbors
+        from repro.kernels.frontier import make_frontier_gather
+
+        rng = np.random.default_rng(3)
+        n, e, c = 29, 90, 7
+        s = rng.integers(0, n, e)
+        r = rng.integers(0, n, e)
+        w = rng.random(e).astype(np.float32)
+        pn = padded_neighbors(s, r, w, n)
+        x = rng.normal(size=(n, c)).astype(np.float32)
+        dense = np.zeros((n, n), np.float32)
+        np.add.at(dense, (r, s), w)
+        for use_kernel in (False, True):
+            gather = make_frontier_gather(pn, mode="sum", use_kernel=use_kernel)
+            np.testing.assert_allclose(
+                np.asarray(gather(jnp.asarray(x))), dense @ x, rtol=1e-5, atol=1e-5
+            )
+        capped = padded_neighbors(s, r, w, n, cap=1)
+        if capped.n_spill:
+            with pytest.raises(ValueError):
+                make_frontier_gather(capped, mode="sum")
+
+    def test_sssp_tiny_bucket_width_still_exact(self, gis):
+        """A pathologically small Δ stresses the bucket-advance machinery
+        (T jumps to min_need + Δ, so rounds stay O(settled) rather than
+        O(range/Δ)); results must stay exact — and if the round cap were
+        ever hit, the engine raises rather than returning wrong counters."""
+        ops = generate_ops(gis, n_ops=8, seed=0, pattern="gis_long")
+        parts = partitioners.random_partition(gis.n_nodes, 2, seed=0)
+        ref = execute_ops(gis, ops, parts, 2, engine="scalar")
+        eng = BatchedTrafficEngine(gis, "gis_long", delta_scale=1e-7)
+        got = eng.run(ops, parts, 2, t_l=ops.t_l, t_pg=ops.t_pg)
+        np.testing.assert_array_equal(got.per_op_total, ref.per_op_total)
+        np.testing.assert_array_equal(got.per_vertex, ref.per_vertex)
+
+    def test_padded_neighbors_layout(self):
+        from repro.graphs.structure import padded_neighbors
+
+        s = np.array([0, 1, 2, 0])
+        r = np.array([1, 2, 1, 1])
+        w = np.array([1.0, 2.0, 3.0, 4.0], dtype=np.float32)
+        pn = padded_neighbors(s, r, w, 3)
+        assert pn.max_deg == 3          # vertex 1 has in-neighbors {0, 2, 0}
+        assert pn.mask.sum() == 4
+        np.testing.assert_allclose(np.sort(pn.w[1][pn.mask[1] > 0]), [1.0, 3.0, 4.0])
