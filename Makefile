@@ -1,11 +1,22 @@
 # Local verification targets. `make check` is what a PR must pass:
-# tier-1 tests + a ~5 s traffic-engine smoke (exactness vs the scalar
-# oracle is asserted inside the bench, so perf *and* correctness
-# regressions in the engine are caught before CI).
+# tier-1 tests + a ~5 s traffic-engine smoke + a ~10 s sharded-replay
+# smoke on a forced 2-device CPU mesh (bit-exactness vs the scalar
+# oracle / single-device engine is asserted inside both benches, so
+# perf *and* correctness regressions are caught before CI).
+#
+#   make test                tier-1 pytest suite
+#   make traffic-smoke       batched engine smoke (exactness + rate)
+#   make traffic-smoke-dist  sharded replay smoke, 2-shard CPU mesh
+#   make traffic-bench       full single-device traffic benchmark
+#   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
+#                            (add WRITE=--write-baseline to either bench
+#                            to refresh benchmarks/BENCH_traffic.json)
+#   make check               test + traffic-smoke + traffic-smoke-dist
 
 PY := PYTHONPATH=src python
+WRITE :=
 
-.PHONY: test traffic-smoke traffic-bench check
+.PHONY: test traffic-smoke traffic-smoke-dist traffic-bench traffic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q
@@ -13,7 +24,15 @@ test:
 traffic-smoke:
 	$(PY) -m benchmarks.kernel_bench --traffic-smoke
 
-traffic-bench:
-	$(PY) -m benchmarks.kernel_bench --traffic
+traffic-smoke-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+	$(PY) -m benchmarks.kernel_bench --traffic-dist-smoke
 
-check: test traffic-smoke
+traffic-bench:
+	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
+
+traffic-bench-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --traffic-dist $(WRITE)
+
+check: test traffic-smoke traffic-smoke-dist

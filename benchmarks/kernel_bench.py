@@ -7,8 +7,13 @@ Usage:
   python -m benchmarks.kernel_bench                 # kernel micro rows
   python -m benchmarks.kernel_bench --traffic       # full traffic bench
   python -m benchmarks.kernel_bench --traffic-smoke # ~5 s regression smoke
-  python -m benchmarks.kernel_bench --traffic --write-baseline  # refresh
-      benchmarks/BENCH_traffic.json
+  python -m benchmarks.kernel_bench --traffic-dist  # sharded replay bench
+      (shard count = visible devices; the Makefile targets force a
+      multi-device CPU platform via XLA_FLAGS)
+  python -m benchmarks.kernel_bench --traffic-dist-smoke  # ~10 s smoke
+  python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
+  python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
+      benchmarks/BENCH_traffic.json ("sharded" section)
 """
 
 from __future__ import annotations
@@ -158,6 +163,80 @@ def traffic_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Sharded traffic replay: replay_sharded on a data mesh (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+_DIST_CASES = (
+    ("filesystem", "filesystem", 100_000),
+    ("twitter", "twitter", 100_000),
+    ("gis_short", "gis", 20_000),
+    ("gis_long", "gis", 4_000),
+)
+
+_DIST_SMOKE_CASES = (
+    ("filesystem", "filesystem", 5_000),
+    ("gis_short", "gis", 400),
+)
+
+
+def traffic_dist_bench(
+    scale: float = 0.004, smoke: bool = False, reps: int = 3
+) -> Dict[str, Dict[str, float]]:
+    """ops/sec of ``replay_sharded`` on a 1-D data mesh over every visible
+    device. Bit-exactness vs the single-device batched engine is asserted
+    on all four counters before timing counts. On CPU, shard count comes
+    from ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+    Makefile targets set it); on a 1-device platform this degenerates to a
+    1-shard mesh and still must be exact.
+    """
+    from repro.core import partitioners
+    from repro.core.traffic import execute_ops, generate_ops
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    cases = _DIST_SMOKE_CASES if smoke else _DIST_CASES
+    reps = 1 if smoke else reps
+    out: Dict[str, Dict[str, float]] = {}
+    for pattern, dataset, n_ops in cases:
+        g = datasets.load(dataset, scale=scale)
+        ops = generate_ops(g, n_ops=n_ops, seed=0, pattern=pattern)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+
+        ref = execute_ops(g, ops, parts, 4, engine="batched")
+        got = replay_sharded(g, ops, mesh, parts, 4)  # warm + verify
+        for field in ("per_op_total", "per_op_global", "per_partition", "per_vertex"):
+            if not np.array_equal(getattr(got, field), getattr(ref, field)):
+                raise AssertionError(
+                    f"{pattern}: sharded != batched on {field} — benchmark void"
+                )
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            replay_sharded(g, ops, mesh, parts, 4)
+            best = min(best, time.perf_counter() - t0)
+
+        out[pattern] = {
+            "n_ops": n_ops,
+            "scale": scale,
+            "shards": shards,
+            "sharded_ops_per_s": round(n_ops / best, 1),
+        }
+    return out
+
+
+def traffic_dist_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
+    rows = []
+    for pattern, r in results.items():
+        rows.append(
+            f"traffic/{pattern}/sharded_ops_per_s,{r['sharded_ops_per_s']:.0f},"
+            f"{r['n_ops']} ops shards={r['shards']} scale={r['scale']} (exact)"
+        )
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -165,10 +244,30 @@ def main() -> None:
     ap.add_argument("--traffic", action="store_true", help="full traffic bench")
     ap.add_argument("--traffic-smoke", action="store_true",
                     help="5-second traffic regression smoke (exactness + rate)")
+    ap.add_argument("--traffic-dist", action="store_true",
+                    help="sharded replay bench on a mesh over visible devices")
+    ap.add_argument("--traffic-dist-smoke", action="store_true",
+                    help="10-second sharded replay smoke (exactness + rate)")
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--write-baseline", action="store_true",
                     help="write results to benchmarks/BENCH_traffic.json")
     args = ap.parse_args()
+
+    baseline_path = os.path.join(os.path.dirname(__file__), "BENCH_traffic.json")
+
+    def write_baseline(update: dict) -> None:
+        # Merge, don't overwrite: single-device and sharded sections are
+        # produced by different runs (the sharded one under XLA_FLAGS).
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+        except FileNotFoundError:
+            baseline = {}
+        baseline.update(update)
+        with open(baseline_path, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# baseline written to {baseline_path}")
 
     if args.traffic or args.traffic_smoke:
         results = traffic_bench(scale=args.scale, smoke=args.traffic_smoke)
@@ -179,11 +278,15 @@ def main() -> None:
                 # Smoke runs cover fewer patterns at single-rep timing —
                 # writing them would silently degrade the baseline.
                 raise SystemExit("--write-baseline requires the full --traffic run")
-            path = os.path.join(os.path.dirname(__file__), "BENCH_traffic.json")
-            with open(path, "w") as f:
-                json.dump(results, f, indent=2, sort_keys=True)
-                f.write("\n")
-            print(f"# baseline written to {path}")
+            write_baseline(results)
+    elif args.traffic_dist or args.traffic_dist_smoke:
+        results = traffic_dist_bench(scale=args.scale, smoke=args.traffic_dist_smoke)
+        for row in traffic_dist_rows(results):
+            print(row)
+        if args.write_baseline:
+            if args.traffic_dist_smoke:
+                raise SystemExit("--write-baseline requires the full --traffic-dist run")
+            write_baseline({"sharded": results})
     else:
         for row in bench_rows():
             print(row)

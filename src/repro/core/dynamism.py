@@ -39,9 +39,25 @@ class DynamismLog:
     def units(self) -> int:
         return int(self.vertices.shape[0])
 
+    def _endpoint(self, frac: float) -> int:
+        """Map a fraction to a unit index so that *equal rationals map to
+        equal indices* regardless of how the caller computed the float.
+
+        The old ``int(units * frac)`` truncated, so a boundary reached two
+        ways — e.g. ``0.15`` vs ``0.05 + 0.05 + 0.05 == 0.15000000000000002``
+        — could land on different indices, making consecutive 5 % slices of
+        the Dynamic experiment drop or double-apply moves. Round-half-up
+        with an epsilon absorbs that float noise (~1 ulp ≪ 1e-9)."""
+        return min(self.units, max(0, int(np.floor(self.units * frac + 0.5 + 1e-9))))
+
     def slice(self, start_frac: float, stop_frac: float) -> "DynamismLog":
-        lo = int(self.units * start_frac)
-        hi = int(self.units * stop_frac)
+        """Sub-log for ``[start_frac, stop_frac)`` of the units.
+
+        Consecutive slices partition the log exactly: ``slice(a, b)`` and
+        ``slice(b', c)`` share their boundary unit whenever ``b`` and
+        ``b'`` are float renderings of the same fraction."""
+        lo = self._endpoint(start_frac)
+        hi = self._endpoint(stop_frac)
         return DynamismLog(self.vertices[lo:hi], self.targets[lo:hi], self.method, self.k)
 
 

@@ -34,6 +34,11 @@ Execution engines
   plain Python loops. It is the semantic reference; the batched engine
   must (and is tested to) reproduce its counters **exactly**.
 
+For multi-device/multi-host replay, :func:`repro.core.traffic_sharded.replay_sharded`
+shards the same log over a mesh's data axes (reusing the batched engine's
+compiled layouts) and is bit-equal to the batched engine on all four
+counters.
+
 Shared semantics (both engines):
 
 * BFS patterns count one traversal step per (op, frontier-vertex → child)

@@ -27,11 +27,13 @@ costs the same device work as a 100-op log plus two gathers per op.
 **Batched windowed SSSP (GIS).** The per-op heapq A* becomes a batched
 shortest-path sweep in vertex-major layout ``g [W, chunk]``. One round
 relaxes every in-edge of every window vertex for every op at once — a
-min-plus gather over a capped padded in-neighbor layout, unrolled over
-neighbor slots with a scatter-min spill for over-cap rows. (This is the
-same computation shape as the ``repro.kernels.frontier`` Pallas kernel,
-which is the planned TPU relaxation path — see ROADMAP; on CPU the
-inline XLA form below is what runs.) With the default
+min-plus gather over a capped padded in-neighbor layout with a
+scatter-min spill for over-cap rows. The gather runs through
+:func:`repro.kernels.frontier.frontier_relax`: the Pallas
+scalar-prefetch kernel on TPU, the unrolled-slot XLA form on CPU —
+bit-identical either way (min and float32 add are exact and slot-order
+independent), selectable via ``use_kernel`` /
+``REPRO_FRONTIER_KERNEL=1``. With the default
 ``delta_scale=None`` each round is a full frontier Bellman–Ford sweep
 (minimum rounds on a dense backend); a finite ``delta_scale`` instead
 gates relaxation to the op's current distance bucket of width
@@ -68,11 +70,16 @@ artifacts (ancestor levels, level histograms, difficulty order) are cached
 on the OpLog. Device counters are int32 (no x64 on the CPU container);
 cross-chunk/host accumulation is int64 — a single op would need >2³¹
 traffic units to overflow, far beyond the paper's logs.
+
+:mod:`repro.core.traffic_sharded` reuses this engine's compiled layouts
+(via :meth:`BatchedTrafficEngine.build_sssp_problem` /
+:meth:`~BatchedTrafficEngine.window_accept` / :meth:`~BatchedTrafficEngine.finalize`)
+to replay the same log sharded over mesh data axes, bit-exactly.
 """
 
 from __future__ import annotations
 
-import functools
+import os
 from typing import List, Optional, Tuple
 
 import jax
@@ -80,6 +87,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.structure import Graph, padded_neighbors
+from repro.kernels import on_tpu, resolve_interpret
+from repro.kernels.frontier import frontier_relax
 
 __all__ = ["BatchedTrafficEngine", "execute_ops_batched", "get_engine"]
 
@@ -102,8 +111,7 @@ def _capped_gather_layout(
 # ===========================================================================
 # Windowed batched SSSP solve (pure function: jit caches per window shape)
 # ===========================================================================
-@functools.partial(jax.jit, static_argnames=("max_expansions", "finite_delta"))
-def _sssp_solve(
+def _sssp_solve_body(
     starts,        # [C] int32 local src index
     ends,          # [C] int32 local dst index
     dst_ids,       # [C] int32 *global* dst vertex id (lex tie-break)
@@ -120,9 +128,14 @@ def _sssp_solve(
     delta,         # f32 scalar bucket width (ignored unless finite_delta)
     max_expansions: int,
     finite_delta: bool,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ):
+    """Traceable solve body — shared verbatim by the single-device jit
+    below and the per-shard ``shard_map`` body in
+    :mod:`repro.core.traffic_sharded`, so both paths run the exact same
+    float32 operations."""
     w_nodes, c = h.shape
-    d = nbr.shape[1]
     cols = jnp.arange(c)
     inf = jnp.float32(jnp.inf)
     max_rounds = 4 * w_nodes + 16
@@ -135,14 +148,13 @@ def _sssp_solve(
     done0 = ~valid
 
     def relax(gm):
-        """Min-plus gather over padded in-neighbors (unrolled over the
-        capped slots) + scatter-min for the few over-cap edges."""
-        acc = jnp.full((w_nodes, c), inf)
-        for j in range(d):
-            acc = jnp.minimum(acc, gm[nbr[:, j]] + w_inf[:, j][:, None])
-        if spill_s.shape[0]:
-            acc = acc.at[spill_r].min(gm[spill_s] + spill_w[:, None])
-        return acc
+        """One min-plus sweep over the capped in-neighbor layout + COO
+        spill tail — the ``kernels/frontier`` relaxation primitive (Pallas
+        kernel when ``use_kernel``, unrolled-slot XLA gather otherwise)."""
+        return frontier_relax(
+            gm, nbr, w_inf, spill_s, spill_r, spill_w,
+            use_kernel=use_kernel, interpret=interpret,
+        )
 
     def step(g, need, t, done):
         if finite_delta:
@@ -207,6 +219,12 @@ def _sssp_solve(
     return member, edges, cross, f_dst, done
 
 
+_sssp_solve = jax.jit(
+    _sssp_solve_body,
+    static_argnames=("max_expansions", "finite_delta", "use_kernel", "interpret"),
+)
+
+
 class BatchedTrafficEngine:
     """One compiled engine per (graph, pattern); see module docstring."""
 
@@ -217,6 +235,7 @@ class BatchedTrafficEngine:
         chunk: Optional[int] = None,
         max_expansions: int = 50_000,
         delta_scale: Optional[float] = None,
+        use_kernel: Optional[bool] = None,
     ):
         from repro.core import traffic as _t  # late: traffic imports us lazily
 
@@ -224,6 +243,14 @@ class BatchedTrafficEngine:
         self.pattern = pattern
         self.max_expansions = int(max_expansions)
         self.n_nodes = graph.n_nodes
+        # Relaxation path: Pallas frontier kernel on TPU, unrolled XLA
+        # gather on CPU; REPRO_FRONTIER_KERNEL=1/0 or the ctor arg
+        # overrides. Both resolved once, here — never at trace time.
+        if use_kernel is None:
+            env = os.environ.get("REPRO_FRONTIER_KERNEL")
+            use_kernel = env == "1" if env in ("0", "1") else on_tpu()
+        self.use_kernel = bool(use_kernel)
+        self.interpret = resolve_interpret()
 
         if pattern == "filesystem":
             s, r = _t._filtered_children_csr_edges(graph)
@@ -275,16 +302,11 @@ class BatchedTrafficEngine:
         """(A x)(u) = Σ_{u→c} x(c) — pull child values up one level."""
         return jnp.zeros(self.n_nodes, x.dtype).at[self._s_j].add(x[self._r_j])
 
-    def _bfs_linear(self, starts, levels, cross_deg):
-        """Closed-form multi-source level-synchronous sweep (module doc).
-
-        Per-op values stay int32 on device (bounded by a single op's
-        traffic, < 2³¹ by the module contract); the whole-log aggregate
-        fold lives in :meth:`_run_bfs` in host int64, where a million-op
-        log summed into one hub vertex cannot wrap.
-        """
+    def _bfs_prefix_table(self, cross_deg):
+        """Level-prefix tables ``P[u, l, :]`` for deg and cross_deg
+        simultaneously — ops-independent, so the sharded replayer builds it
+        once and replicates it across the mesh."""
         t = self.max_levels
-        # Level-prefix tables P[u, l] for deg and cross_deg simultaneously.
         vec = jnp.stack([self._deg_j, cross_deg], axis=1)  # [N, 2]
         prefixes = [jnp.zeros_like(vec)]
         level_vec = vec
@@ -293,7 +315,17 @@ class BatchedTrafficEngine:
             level_vec = jnp.stack(
                 [self._spmv_down(level_vec[:, 0]), self._spmv_down(level_vec[:, 1])], axis=1
             )
-        p = jnp.stack(prefixes, axis=1)  # [N, t+1, 2]
+        return jnp.stack(prefixes, axis=1)  # [N, t+1, 2]
+
+    def _bfs_linear(self, starts, levels, cross_deg):
+        """Closed-form multi-source level-synchronous sweep (module doc).
+
+        Per-op values stay int32 on device (bounded by a single op's
+        traffic, < 2³¹ by the module contract); the whole-log aggregate
+        fold lives in :meth:`_run_bfs` in host int64, where a million-op
+        log summed into one hub vertex cannot wrap.
+        """
+        p = self._bfs_prefix_table(cross_deg)
         per_op = p[starts, levels]       # [n_ops, 2]
         return per_op[:, 0], per_op[:, 1]
 
@@ -403,16 +435,25 @@ class BatchedTrafficEngine:
         )
         return np.nonzero(mask)[0], (lo_x, hi_x, lo_y, hi_y)
 
-    def _solve_sssp_chunk(
+    def build_sssp_problem(
         self,
         srcs: np.ndarray,
         dsts: np.ndarray,
         valid: np.ndarray,
         cross_deg: np.ndarray,
         full: bool,
+        as_numpy: bool = False,
     ):
-        """Solve one op chunk on its locality window; returns host arrays
-        (member [W, C] bool over window rows, edges/cross [C], ok [C])."""
+        """Host-side packing of one op chunk into a solver problem.
+
+        Returns ``(args, window, w_real, box, full)`` where ``args`` is the
+        positional-argument tuple of :func:`_sssp_solve_body` up to and
+        including ``h`` (everything shape-dependent). ``as_numpy=True``
+        forces the heuristic rows back to host (the sharded replayer
+        stacks problems across mesh shards); the single-device path keeps
+        the device-computed ``h`` on device. ``full`` is returned because
+        a near-full window is promoted to the whole graph here.
+        """
         window, box = self._sssp_window(srcs[valid], dsts[valid], full)
         if not full and window.shape[0] > 0.6 * self.n_nodes:
             # Near-full window: run on the whole graph outright — cheaper
@@ -474,22 +515,70 @@ class BatchedTrafficEngine:
                 jnp.asarray(self._lon[dst_safe]),
                 jnp.asarray(self._lat[dst_safe]),
             )
+            if as_numpy:
+                h = np.asarray(h)  # transfers are bit-preserving
         else:
-            h_np = np.zeros((w_pad, srcs.shape[0]), dtype=np.float32)
-            h_np[:w_real] = self._host_h(window, dst_safe)
-            h = jnp.asarray(h_np)
+            h = np.zeros((w_pad, srcs.shape[0]), dtype=np.float32)
+            h[:w_real] = self._host_h(window, dst_safe)
 
+        args = (
+            loc_src, loc_dst,
+            np.where(valid, dsts, 0).astype(np.int32),
+            valid, deg_w, cross_w, ids_w,
+            nbr, w_inf, sp_s, sp_r, sp_w, h,
+        )
+        return args, window, w_real, box, full
+
+    def window_accept(
+        self,
+        srcs: np.ndarray,
+        dsts: np.ndarray,
+        valid: np.ndarray,
+        f_dst: np.ndarray,
+        box,
+        full: bool,
+    ) -> np.ndarray:
+        """Exactness gate: accept only ops whose A* ellipse provably fits
+        the window — disk(src, f_dst) ∪ disk(dst, f_dst) inside the box
+        (with a small safety factor over float32 rounding). Host-side in
+        float64 on purpose: a float32 false-accept would silently break
+        the bit-exactness contract, a false-reject only costs a redo."""
+        if full:
+            return valid.copy()
+        lo_x, hi_x, lo_y, hi_y = box
+        rad = np.asarray(f_dst, dtype=np.float64) * 1.00001 + 1e-6
+        sx = self._lon[srcs].astype(np.float64)
+        sy = self._lat[srcs].astype(np.float64)
+        tx = self._lon[dsts].astype(np.float64)
+        ty = self._lat[dsts].astype(np.float64)
+        return (
+            valid & np.isfinite(f_dst)
+            & (sx - rad >= lo_x) & (sx + rad <= hi_x)
+            & (sy - rad >= lo_y) & (sy + rad <= hi_y)
+            & (tx - rad >= lo_x) & (tx + rad <= hi_x)
+            & (ty - rad >= lo_y) & (ty + rad <= hi_y)
+        )
+
+    def _solve_sssp_chunk(
+        self,
+        srcs: np.ndarray,
+        dsts: np.ndarray,
+        valid: np.ndarray,
+        cross_deg: np.ndarray,
+        full: bool,
+    ):
+        """Solve one op chunk on its locality window; returns host arrays
+        (member [W, C] bool over window rows, edges/cross [C], ok [C])."""
+        args, window, w_real, box, full = self.build_sssp_problem(
+            srcs, dsts, valid, cross_deg, full
+        )
         member, edges, cross, f_dst, done = _sssp_solve(
-            jnp.asarray(loc_src), jnp.asarray(loc_dst),
-            jnp.asarray(np.where(valid, dsts, 0).astype(np.int32)),
-            jnp.asarray(valid),
-            jnp.asarray(deg_w), jnp.asarray(cross_w), jnp.asarray(ids_w),
-            jnp.asarray(nbr), jnp.asarray(w_inf),
-            jnp.asarray(sp_s), jnp.asarray(sp_r), jnp.asarray(sp_w),
-            h,
+            *(jnp.asarray(a) for a in args),
             jnp.float32(self.delta),
             max_expansions=self.max_expansions,
             finite_delta=self.delta_scale is not None,
+            use_kernel=self.use_kernel,
+            interpret=self.interpret,
         )
         member = np.asarray(member)
         edges = np.asarray(edges, dtype=np.int64)
@@ -503,26 +592,7 @@ class BatchedTrafficEngine:
                 "batched SSSP hit its round cap before all ops settled; "
                 "raise delta_scale (or use delta_scale=None)"
             )
-
-        if full:
-            ok = valid.copy()
-        else:
-            # Accept only ops whose A* ellipse provably fits the window:
-            # disk(src, f_dst) ∪ disk(dst, f_dst) inside the box (with a
-            # small safety factor over float32 rounding).
-            lo_x, hi_x, lo_y, hi_y = box
-            rad = f_dst * 1.00001 + 1e-6
-            sx = self._lon[srcs].astype(np.float64)
-            sy = self._lat[srcs].astype(np.float64)
-            tx = self._lon[dsts].astype(np.float64)
-            ty = self._lat[dsts].astype(np.float64)
-            ok = (
-                valid & np.isfinite(f_dst)
-                & (sx - rad >= lo_x) & (sx + rad <= hi_x)
-                & (sy - rad >= lo_y) & (sy + rad <= hi_y)
-                & (tx - rad >= lo_x) & (tx + rad <= hi_x)
-                & (ty - rad >= lo_y) & (ty + rad <= hi_y)
-            )
+        ok = self.window_accept(srcs, dsts, valid, f_dst, box, full)
         return window, w_real, member, edges, cross, ok
 
     def _run_sssp(self, ops, cross_deg: np.ndarray):
@@ -559,21 +629,31 @@ class BatchedTrafficEngine:
         return per_op_edges, per_op_cross, tm64
 
     # ------------------------------------------------------------------ run
-    def run(self, ops, parts: np.ndarray, k: int, t_l: int, t_pg: int):
+    def cross_degree(self, parts: np.ndarray) -> np.ndarray:
+        """Per-vertex count of out-edges crossing a partition boundary."""
+        parts = np.asarray(parts, dtype=np.int64)
+        return np.bincount(
+            self.s, weights=(parts[self.s] != parts[self.r]), minlength=self.n_nodes
+        ).astype(np.int32)
+
+    def finalize(
+        self,
+        edges: np.ndarray,
+        cross: np.ndarray,
+        tm64: np.ndarray,
+        parts: np.ndarray,
+        k: int,
+        t_l: int,
+        t_pg: int,
+    ):
+        """Aggregate counters from the total frontier mass (host, int64).
+
+        Shared by the single-device run and the sharded replayer: both
+        reduce to the same (per-op edges/cross, per-vertex mass) triple, so
+        finalizing identically keeps them bit-equal by construction."""
         from repro.core.traffic import TrafficResult
 
         parts = np.asarray(parts, dtype=np.int64)
-        cross_deg = np.bincount(
-            self.s, weights=(parts[self.s] != parts[self.r]), minlength=self.n_nodes
-        ).astype(np.int32)
-        units = t_l + t_pg
-
-        if self.kind == "bfs":
-            edges, cross, tm64 = self._run_bfs(ops, cross_deg)
-        else:
-            edges, cross, tm64 = self._run_sssp(ops, cross_deg)
-
-        # Aggregate counters from the total frontier mass (host, int64).
         pv = t_l * self.deg.astype(np.int64) * tm64
         tpg_push = np.zeros(self.n_nodes, dtype=np.int64)
         np.add.at(tpg_push, self.r, tm64[self.s])
@@ -581,11 +661,21 @@ class BatchedTrafficEngine:
         per_partition = np.zeros(k, dtype=np.int64)
         np.add.at(per_partition, parts, pv)
         return TrafficResult(
-            per_op_total=edges * units,
+            per_op_total=edges * (t_l + t_pg),
             per_op_global=cross,
             per_partition=per_partition,
             per_vertex=pv,
         )
+
+    def run(self, ops, parts: np.ndarray, k: int, t_l: int, t_pg: int):
+        parts = np.asarray(parts, dtype=np.int64)
+        cross_deg = self.cross_degree(parts)
+
+        if self.kind == "bfs":
+            edges, cross, tm64 = self._run_bfs(ops, cross_deg)
+        else:
+            edges, cross, tm64 = self._run_sssp(ops, cross_deg)
+        return self.finalize(edges, cross, tm64, parts, k, t_l, t_pg)
 
 
 @jax.jit
@@ -603,14 +693,16 @@ def get_engine(
     chunk: Optional[int] = None,
     max_expansions: int = 50_000,
     delta_scale: Optional[float] = None,
+    use_kernel: Optional[bool] = None,
 ) -> BatchedTrafficEngine:
     """Graph-lifetime engine cache (same idiom as didic.make_spmm)."""
     cache = graph.__dict__.setdefault("_traffic_engine_cache", {})
-    key = (pattern, chunk, max_expansions, delta_scale)
+    key = (pattern, chunk, max_expansions, delta_scale, use_kernel)
     if key not in cache:
         cache[key] = BatchedTrafficEngine(
             graph, pattern, chunk=chunk,
             max_expansions=max_expansions, delta_scale=delta_scale,
+            use_kernel=use_kernel,
         )
     return cache[key]
 
@@ -623,9 +715,11 @@ def execute_ops_batched(
     chunk: Optional[int] = None,
     max_expansions: int = 50_000,
     delta_scale: Optional[float] = None,
+    use_kernel: Optional[bool] = None,
 ):
     engine = get_engine(
         graph, ops.pattern, chunk=chunk,
         max_expansions=max_expansions, delta_scale=delta_scale,
+        use_kernel=use_kernel,
     )
     return engine.run(ops, parts, k, t_l=ops.t_l, t_pg=ops.t_pg)

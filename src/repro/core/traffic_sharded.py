@@ -1,0 +1,396 @@
+"""Multi-host sharded traffic replay (ISSUE 2 tentpole).
+
+The batched engine (:mod:`repro.core.traffic_batched`) already collapses an
+evaluation log into a handful of device programs, but runs them on one
+device. This module shards the **log** over the mesh data axes — the
+thesis's Future Work (§8.2) "truly distributed environment" applied to the
+measurement side of the paper: replaying ≈1M-op logs is the step where
+partition quality becomes a hardware cost (Besta et al., *Demystifying
+Graph Databases*).
+
+Execution model (one ``shard_map`` family per pattern, all reusing the
+engine's compiled layouts):
+
+**Linear BFS sweep (filesystem, Twitter).** The level-prefix table
+``P [N, t+1, 2]`` is ops-independent — built once on device. Ops are
+split contiguously over the data shards; each shard gathers its per-op
+counters from the replicated table (`per-op` stays int32: a single op is
+< 2³¹ by the engine contract). The per-vertex frontier mass ``tm`` is
+*linear in the ops*, so each shard folds its own level histograms through
+the ``Σ_l (Aᵀ)^l c_l`` SpMV cascade in int32 and one ``psum`` over the
+data axes publishes the wave total — the halo-exchange reduction shape of
+:mod:`repro.distributed.counters`. Waves are sized from the per-op edge
+counts (already known from the per-op pass) so a wave's per-vertex int32
+mass provably cannot wrap; :class:`~repro.distributed.counters.CounterAccumulator`
+folds waves into int64 on the host.
+
+**Windowed batched SSSP (GIS).** Each round hands every data shard one
+chunk of ops in the engine's difficulty order, packed by the engine's own
+:meth:`~repro.core.traffic_batched.BatchedTrafficEngine.build_sssp_problem`
+(windows, capped gather layout, verified heuristic rows) and padded to
+common shapes. The per-shard solve is literally
+:func:`~repro.core.traffic_batched._sssp_solve_body` — the same float32
+operations as the single-device engine, so distances (and therefore the
+deterministic A* expansion sets) are **bit-identical**. Membership mass is
+reduced on-device (``member & accepted`` summed over ops, scattered by
+global window ids) through :func:`repro.distributed.counters.make_scatter_psum`;
+per-op counters return to the host and are written back in log order.
+Window acceptance stays host-side in float64 (a float32 false-accept would
+break exactness); rejected ops are re-solved on the full graph in the same
+sharded rounds.
+
+Exactness: both engines are exact vs the scalar oracle, and every
+reduction here is integer (order-free) while every float path reuses the
+engine's verbatim solve body — so ``replay_sharded`` is bit-equal to
+``execute_ops(..., engine="batched")`` on all four counters, for any mesh
+shape and any (including uneven) log split. The equivalence suite in
+``tests/test_traffic_sharded.py`` asserts this on a forced 8-device CPU
+mesh.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.traffic_batched import _BIG_ID, _sssp_solve_body, get_engine
+from repro.distributed.counters import (
+    CounterAccumulator,
+    data_shard_count,
+    make_scatter_psum,
+)
+from repro.graphs.structure import Graph
+
+__all__ = ["ShardedTrafficReplayer", "replay_sharded"]
+
+# Per-(wave, shard) bound on Σ(1 + edges_op): keeps the int32 per-vertex
+# frontier mass of one BFS wave below 2³⁰ — half the int32 range as margin.
+_WAVE_BUDGET = 1 << 30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_to(arr: np.ndarray, length: int, fill) -> np.ndarray:
+    if arr.shape[0] == length:
+        return arr
+    out = np.full((length,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+class ShardedTrafficReplayer:
+    """Replay evaluation logs sharded over a mesh's data axes.
+
+    One replayer per (graph, pattern, mesh); jitted shard_map closures are
+    built once and cached here (per-shape variants cache inside jit, as in
+    the single-device engine).
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        pattern: str,
+        mesh: Mesh,
+        data_axes: Tuple[str, ...] = ("data",),
+        chunk: Optional[int] = None,
+        max_expansions: int = 50_000,
+        delta_scale: Optional[float] = None,
+        use_kernel: Optional[bool] = None,
+    ):
+        self.graph = graph
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.n_shards = data_shard_count(mesh, self.data_axes)
+        self.engine = get_engine(
+            graph, pattern, chunk=chunk, max_expansions=max_expansions,
+            delta_scale=delta_scale, use_kernel=use_kernel,
+        )
+        self.n_nodes = graph.n_nodes
+        if self.engine.kind == "bfs":
+            self._build_bfs_fns()
+        else:
+            self._build_sssp_fns()
+        self._scatter_psum = make_scatter_psum(mesh, self.n_nodes, self.data_axes)
+
+    # =================================================== linear BFS patterns
+    def _build_bfs_fns(self) -> None:
+        from jax.experimental.shard_map import shard_map
+
+        eng = self.engine
+        t, n = eng.max_levels, self.n_nodes
+        axes = self.data_axes
+        s2 = P(axes, None)
+
+        self._table_fn = jax.jit(eng._bfs_prefix_table)
+
+        def per_op_body(starts, levels, p):
+            return p[starts[0], levels[0]][None]  # [1, B, 2]
+
+        self._per_op_fn = jax.jit(shard_map(
+            per_op_body,
+            mesh=self.mesh,
+            in_specs=(s2, s2, P()),
+            out_specs=P(axes, None, None),
+            check_rep=False,
+        ))
+
+        def tm_body(starts, levels, valid, s_e, r_e):
+            # Per-shard level histograms c[l][u] = #{ops: start=u, L>l},
+            # folded through Σ_l (Aᵀ)^l c_l in int32 (wave-bounded), then
+            # one psum publishes the wave's global per-vertex mass.
+            lvl = jnp.minimum(levels[0], t) - 1
+            idx = lvl * n + starts[0]
+            hist = (
+                jnp.zeros((t * n,), jnp.int32)
+                .at[idx].add(valid[0].astype(jnp.int32), mode="drop")
+                .reshape(t, n)
+            )
+            c = jnp.flip(jnp.cumsum(jnp.flip(hist, 0), axis=0), 0)
+            tm = c[t - 1]
+            for lvl_i in range(t - 2, -1, -1):
+                push = jnp.zeros((n,), jnp.int32).at[r_e].add(tm[s_e])
+                tm = c[lvl_i] + push
+            return jax.lax.psum(tm, axes)
+
+        self._tm_fn = jax.jit(shard_map(
+            tm_body,
+            mesh=self.mesh,
+            in_specs=(s2, s2, s2, P(), P()),
+            out_specs=P(),
+            check_rep=False,
+        ))
+
+    def _shard_pad(self, arr: np.ndarray, fill, width: Optional[int] = None) -> np.ndarray:
+        """[n] -> [S, B] contiguous split (shard s owns rows s·B..(s+1)·B)."""
+        s = self.n_shards
+        b = width if width is not None else _ceil_div(max(arr.shape[0], 1), s)
+        return _pad_to(arr, s * b, fill).reshape(s, b)
+
+    def _bfs_waves(self, per_op_edges: np.ndarray) -> List[Tuple[int, int]]:
+        """Contiguous op ranges whose Σ(1+edges) ≤ _WAVE_BUDGET each (every
+        wave has ≥1 op) — makes the per-wave int32 device mass safe by
+        construction; real logs fit in a single wave."""
+        work = np.cumsum(1 + per_op_edges.astype(np.int64))
+        waves, lo = [], 0
+        while lo < per_op_edges.shape[0]:
+            base = work[lo - 1] if lo else 0
+            hi = int(np.searchsorted(work, base + _WAVE_BUDGET, side="right"))
+            hi = max(hi, lo + 1)
+            waves.append((lo, hi))
+            lo = hi
+        return waves
+
+    def _run_bfs(self, ops, cross_deg: np.ndarray):
+        eng = self.engine
+        levels, _ = eng._compile_bfs_log(ops)
+        starts = ops.starts.astype(np.int32)
+        n_ops = ops.n_ops
+
+        p = self._table_fn(jnp.asarray(cross_deg))
+        per_op = np.asarray(self._per_op_fn(
+            self._shard_pad(starts, 0), self._shard_pad(levels, 0), p
+        )).reshape(-1, 2)[:n_ops]
+        edges = per_op[:, 0].astype(np.int64)
+        cross = per_op[:, 1].astype(np.int64)
+
+        acc = CounterAccumulator(self.n_nodes)
+        for lo, hi in self._bfs_waves(edges):
+            b = _ceil_div(hi - lo, self.n_shards)
+            valid = np.ones(hi - lo, dtype=bool)
+            acc.add(self._tm_fn(
+                self._shard_pad(starts[lo:hi], 0, b),
+                self._shard_pad(levels[lo:hi], 1, b),
+                self._shard_pad(valid, False, b),
+                eng._s_j, eng._r_j,
+            ))
+        return edges, cross, acc.total
+
+    # ====================================================== GIS batched SSSP
+    def _build_sssp_fns(self) -> None:
+        from jax.experimental.shard_map import shard_map
+
+        eng = self.engine
+        axes = self.data_axes
+        s2 = P(axes, None)
+        s3 = P(axes, None, None)
+
+        def solve_body(loc_src, loc_dst, dst_ids, valid, deg_w, cross_w,
+                       ids_w, nbr, w_inf, sp_s, sp_r, sp_w, h, delta):
+            member, edges, cross, f_dst, done = _sssp_solve_body(
+                loc_src[0], loc_dst[0], dst_ids[0], valid[0],
+                deg_w[0], cross_w[0], ids_w[0],
+                nbr[0], w_inf[0], sp_s[0], sp_r[0], sp_w[0], h[0],
+                delta,
+                max_expansions=eng.max_expansions,
+                finite_delta=eng.delta_scale is not None,
+                use_kernel=eng.use_kernel,
+                interpret=eng.interpret,
+            )
+            return member[None], edges[None], cross[None], f_dst[None], done[None]
+
+        self._solve_fn = jax.jit(shard_map(
+            solve_body,
+            mesh=self.mesh,
+            in_specs=(s2, s2, s2, s2, s2, s2, s2, s3, s3, s2, s2, s2, s3, P()),
+            out_specs=(s3, s2, s2, s2, s2),
+            check_rep=False,
+        ))
+
+        # member [S, W, C] stays device-resident between the solve and this
+        # shard-local mass reduce (no communication: inputs are data-sharded).
+        self._mass_fn = jax.jit(
+            lambda member, okm: (member & okm[:, None, :]).sum(axis=2, dtype=jnp.int32)
+        )
+
+    def _stack_problems(self, probs):
+        """Pad per-shard problems to common shapes and stack [S, ...]."""
+        w_pad = max(p[7].shape[0] for p in probs)   # nbr rows
+        d = max(p[7].shape[1] for p in probs)       # nbr slots
+        sp = max(p[9].shape[0] for p in probs)      # spill length
+        c = probs[0][0].shape[0]
+        out = []
+        for (loc_src, loc_dst, dst_ids, valid, deg_w, cross_w, ids_w,
+             nbr, w_inf, sp_s, sp_r, sp_w, h) in probs:
+            wr = nbr.shape[0]
+            nbr_p = np.zeros((w_pad, d), np.int32)
+            nbr_p[:wr, : nbr.shape[1]] = nbr
+            w_inf_p = np.full((w_pad, d), np.inf, np.float32)
+            w_inf_p[:wr, : w_inf.shape[1]] = w_inf
+            h_p = np.zeros((w_pad, c), np.float32)
+            h_p[:wr] = h
+            out.append((
+                loc_src, loc_dst, dst_ids, valid,
+                _pad_to(deg_w, w_pad, 0), _pad_to(cross_w, w_pad, 0),
+                _pad_to(ids_w, w_pad, _BIG_ID),
+                nbr_p, w_inf_p,
+                _pad_to(sp_s, sp, 0), _pad_to(sp_r, sp, 0),
+                _pad_to(sp_w, sp, np.float32(np.inf)),
+                h_p,
+            ))
+        return tuple(np.stack(col) for col in zip(*out))
+
+    def _run_sssp(self, ops, cross_deg: np.ndarray):
+        eng = self.engine
+        order = eng._compile_sssp_log(ops)
+        n_ops, s, chunk = ops.n_ops, self.n_shards, eng.chunk
+        per_op_edges = np.zeros(n_ops, dtype=np.int64)
+        per_op_cross = np.zeros(n_ops, dtype=np.int64)
+        acc = CounterAccumulator(self.n_nodes)
+        redo: List[np.ndarray] = []
+
+        def run_pass(op_idx: np.ndarray, full: bool) -> None:
+            for lo in range(0, op_idx.shape[0], s * chunk):
+                round_idx = op_idx[lo: lo + s * chunk]
+                probs, metas = [], []
+                for sh in range(s):
+                    idx = round_idx[sh * chunk: (sh + 1) * chunk]
+                    srcs = _pad_to(ops.starts[idx], chunk, 0)
+                    dsts = _pad_to(ops.ends[idx], chunk, 0)
+                    valid = _pad_to(np.ones(idx.shape[0], bool), chunk, False)
+                    if idx.shape[0]:
+                        args, window, w_real, box, eff_full = eng.build_sssp_problem(
+                            srcs, dsts, valid, cross_deg, full, as_numpy=True
+                        )
+                    else:
+                        # Idle shard this round: an inert all-invalid
+                        # problem (solve retires it in zero rounds).
+                        args = (
+                            np.zeros(chunk, np.int32), np.zeros(chunk, np.int32),
+                            np.zeros(chunk, np.int32), valid,
+                            np.zeros(1, np.int32), np.zeros(1, np.int32),
+                            np.full(1, _BIG_ID, np.int32),
+                            np.zeros((1, 1), np.int32),
+                            np.full((1, 1), np.inf, np.float32),
+                            np.zeros(0, np.int32), np.zeros(0, np.int32),
+                            np.zeros(0, np.float32),
+                            np.zeros((1, chunk), np.float32),
+                        )
+                        window, w_real, box, eff_full = None, 0, None, full
+                    probs.append(args)
+                    metas.append((idx, srcs, dsts, valid, window, w_real, box, eff_full))
+
+                stacked = self._stack_problems(probs)
+                member, edges, cross, f_dst, done = self._solve_fn(
+                    *stacked, jnp.float32(eng.delta)
+                )
+                if not np.asarray(done).all():
+                    raise RuntimeError(
+                        "sharded SSSP hit its round cap before all ops "
+                        "settled; raise delta_scale (or use delta_scale=None)"
+                    )
+                edges_h = np.asarray(edges, dtype=np.int64)
+                cross_h = np.asarray(cross, dtype=np.int64)
+                f_dst_h = np.asarray(f_dst, dtype=np.float64)
+
+                ok_all = np.zeros((s, chunk), dtype=bool)
+                for sh, (idx, srcs, dsts, valid, _w, _wr, box, eff_full) in enumerate(metas):
+                    if not idx.shape[0]:
+                        continue
+                    ok = eng.window_accept(srcs, dsts, valid, f_dst_h[sh], box, eff_full)
+                    ok_all[sh] = ok
+                    nsh = idx.shape[0]
+                    accepted = idx[ok[:nsh]]
+                    per_op_edges[accepted] = edges_h[sh, :nsh][ok[:nsh]]
+                    per_op_cross[accepted] = cross_h[sh, :nsh][ok[:nsh]]
+                    if not eff_full:
+                        rejected = idx[~ok[:nsh]]
+                        if rejected.size:
+                            redo.append(rejected)
+
+                # Per-vertex mass: shard-local (member & ok) summed over
+                # ops, scattered by global window id, one psum — int32 per
+                # round (≤ S·chunk), int64 across rounds on the host.
+                mass = self._mass_fn(member, jnp.asarray(ok_all))
+                acc.add(self._scatter_psum(jnp.asarray(stacked[6]), mass))
+
+        run_pass(order, full=False)
+        if redo:
+            run_pass(np.concatenate(redo), full=True)
+        return per_op_edges, per_op_cross, acc.total
+
+    # ------------------------------------------------------------------ run
+    def replay(self, ops, parts: np.ndarray, k: int):
+        parts = np.asarray(parts, dtype=np.int64)
+        cross_deg = self.engine.cross_degree(parts)
+        if self.engine.kind == "bfs":
+            edges, cross, tm64 = self._run_bfs(ops, cross_deg)
+        else:
+            edges, cross, tm64 = self._run_sssp(ops, cross_deg)
+        return self.engine.finalize(edges, cross, tm64, parts, k, ops.t_l, ops.t_pg)
+
+
+def replay_sharded(
+    graph: Graph,
+    log,
+    mesh: Mesh,
+    parts: np.ndarray,
+    k: Optional[int] = None,
+    data_axes: Tuple[str, ...] = ("data",),
+    chunk: Optional[int] = None,
+    max_expansions: int = 50_000,
+    delta_scale: Optional[float] = None,
+    use_kernel: Optional[bool] = None,
+):
+    """Replay an evaluation log sharded over ``mesh``'s data axes.
+
+    Bit-equal to ``execute_ops(graph, log, parts, k, engine="batched")`` on
+    all four traffic counters; see the module docstring. Replayers are
+    cached on the graph (same idiom as ``get_engine``).
+    """
+    k = int(np.asarray(parts).max()) + 1 if k is None else k
+    cache = graph.__dict__.setdefault("_traffic_replayer_cache", {})
+    key = (log.pattern, mesh, tuple(data_axes), chunk, max_expansions,
+           delta_scale, use_kernel)
+    if key not in cache:
+        cache[key] = ShardedTrafficReplayer(
+            graph, log.pattern, mesh, data_axes=data_axes, chunk=chunk,
+            max_expansions=max_expansions, delta_scale=delta_scale,
+            use_kernel=use_kernel,
+        )
+    return cache[key].replay(log, parts, k)

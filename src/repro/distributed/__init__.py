@@ -1,3 +1,3 @@
-from repro.distributed import expert_placement, halo, placement, sharding
+from repro.distributed import counters, expert_placement, halo, placement, sharding
 
-__all__ = ["expert_placement", "halo", "placement", "sharding"]
+__all__ = ["counters", "expert_placement", "halo", "placement", "sharding"]

@@ -3,8 +3,38 @@
 Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ops.py (jit wrapper / dispatch), <name>/ref.py (pure-jnp oracle).
 CPU runs use interpret=True; TPU is the compile target.
+
+Backend detection lives here (:func:`on_tpu` / :func:`resolve_interpret`)
+so every kernel resolves interpret-vs-compile through one call-time helper
+instead of copy-pasting ``jax.default_backend() != "tpu"``. Resolve
+*before* entering jit: inside a traced function the backend query runs at
+trace time and the decision gets baked into the cached executable.
 """
 
-from repro.kernels import bsr_spmm, embedding_bag, flash_attention, frontier
+from __future__ import annotations
 
-__all__ = ["bsr_spmm", "embedding_bag", "flash_attention", "frontier"]
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU. Call outside jit."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel's ``interpret`` flag at call time.
+
+    ``None`` means "compiled on TPU, interpreter emulation elsewhere" (so a
+    TPU caller never silently runs interpreted); an explicit bool wins.
+    """
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+from repro.kernels import bsr_spmm, embedding_bag, flash_attention, frontier  # noqa: E402
+
+__all__ = [
+    "bsr_spmm", "embedding_bag", "flash_attention", "frontier",
+    "on_tpu", "resolve_interpret",
+]

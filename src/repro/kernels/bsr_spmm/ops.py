@@ -16,12 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.structure import BlockEll
+from repro.kernels import resolve_interpret
 from repro.kernels.bsr_spmm.kernel import bell_matmul
 from repro.kernels.bsr_spmm.ref import bell_matmul_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def make_bell_matmul(bell: BlockEll, use_kernel: bool = True) -> Callable[[jax.Array], jax.Array]:
@@ -30,7 +27,7 @@ def make_bell_matmul(bell: BlockEll, use_kernel: bool = True) -> Callable[[jax.A
     cols = jnp.asarray(bell.block_cols, dtype=jnp.int32)
     mask = jnp.asarray(bell.block_mask.astype(np.int32))
     bs = bell.block_size
-    interpret = not _on_tpu()
+    interpret = resolve_interpret()
 
     if use_kernel:
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.embedding_bag.kernel import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -29,5 +30,5 @@ def embedding_bag_auto(
         denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
         weights = weights / denom
     if use_kernel:
-        return embedding_bag(table, indices, weights, interpret=jax.default_backend() != "tpu")
+        return embedding_bag(table, indices, weights, interpret=resolve_interpret())
     return embedding_bag_ref(table, indices, weights)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref, attention_ref_bthd
 
@@ -43,7 +44,7 @@ def mha(
     if use_kernel:
         of = flash_attention(
             qf, kf, vf, causal=causal, q_offset=q_offset,
-            interpret=jax.default_backend() != "tpu",
+            interpret=resolve_interpret(),
         )
     else:
         of = attention_ref(qf, kf, vf, causal=causal, q_offset=q_offset)

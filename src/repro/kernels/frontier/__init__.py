@@ -1,5 +1,8 @@
 from repro.kernels.frontier.kernel import frontier_gather
-from repro.kernels.frontier.ops import make_frontier_gather
+from repro.kernels.frontier.ops import frontier_relax, make_frontier_gather
 from repro.kernels.frontier.ref import frontier_gather_ref
 
-__all__ = ["frontier_gather", "frontier_gather_ref", "make_frontier_gather"]
+__all__ = [
+    "frontier_gather", "frontier_gather_ref", "frontier_relax",
+    "make_frontier_gather",
+]

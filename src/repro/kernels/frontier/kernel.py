@@ -10,7 +10,9 @@ frontier row tile into VMEM — one row fetch per (vertex, neighbor-slot),
 the roofline minimum for a frontier sweep. No scatter anywhere, so the
 reduction is branch-free on the VPU.
 
-Grid: ``(V, D, C_tiles)``. ``mode="sum"`` accumulates ``w · row``
+Grid: ``(V, C_tiles, D)`` — the neighbor-slot reduction axis last, so the
+output tile stays VMEM-resident across its accumulation steps.
+``mode="sum"`` accumulates ``w · row``
 (multiplicity propagation / BFS expansion); ``mode="min"`` accumulates
 ``min(acc, row + w)`` (one min-plus relaxation of the bucketed SSSP), with
 padded slots carrying ``w = +inf``.
@@ -26,10 +28,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _frontier_sum_kernel(nbr_ref, w_ref, x_ref, o_ref):
     v = pl.program_id(0)
-    d = pl.program_id(1)
+    d = pl.program_id(2)
 
     @pl.when(d == 0)
     def _init():
@@ -41,7 +45,7 @@ def _frontier_sum_kernel(nbr_ref, w_ref, x_ref, o_ref):
 
 def _frontier_min_kernel(nbr_ref, w_ref, x_ref, o_ref):
     v = pl.program_id(0)
-    d = pl.program_id(1)
+    d = pl.program_id(2)
 
     @pl.when(d == 0)
     def _init():
@@ -51,7 +55,6 @@ def _frontier_min_kernel(nbr_ref, w_ref, x_ref, o_ref):
     o_ref[...] = jnp.minimum(o_ref[...], x_ref[...].astype(o_ref.dtype) + w)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "c_tile", "interpret"))
 def frontier_gather(
     x: jax.Array,        # [N, C] vertex-major frontier values
     nbr: jax.Array,      # [V, D] int32 in-neighbor ids (0 where padded)
@@ -63,11 +66,27 @@ def frontier_gather(
 ) -> jax.Array:
     """Gather-reduce neighbor rows of ``x``; see module docstring.
 
-    ``interpret=None`` resolves by backend: compiled on TPU, interpreter
-    emulation elsewhere (so a TPU caller never silently runs interpreted).
+    ``interpret=None`` resolves by backend at **call time** (outside the
+    jitted inner function, via :func:`repro.kernels.resolve_interpret`):
+    compiled on TPU, interpreter emulation elsewhere — so a TPU caller
+    never silently runs interpreted, and the decision is not frozen into
+    a trace made on the wrong backend.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    return _frontier_gather_jit(
+        x, nbr, w, mode=mode, c_tile=c_tile, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "c_tile", "interpret"))
+def _frontier_gather_jit(
+    x: jax.Array,
+    nbr: jax.Array,
+    w: jax.Array,
+    *,
+    mode: str,
+    c_tile: int,
+    interpret: bool,
+) -> jax.Array:
     v, d = nbr.shape
     n, c = x.shape
     c_pad = (-c) % c_tile
@@ -76,13 +95,17 @@ def frontier_gather(
     ct = x.shape[1] // c_tile
 
     kernel = {"sum": _frontier_sum_kernel, "min": _frontier_min_kernel}[mode]
+    # Grid order (v, ct, d): the reduction axis d must be INNERMOST — the
+    # TPU pipeline only keeps an output block resident across *consecutive*
+    # grid steps with the same out index, so accumulating over a non-final
+    # axis would read back stale VMEM whenever ct > 1.
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # nbr, w
-        grid=(v, d, ct),
+        grid=(v, ct, d),
         in_specs=[
-            pl.BlockSpec((1, c_tile), lambda vv, dd, cc, nbr_, w_: (nbr_[vv, dd], cc)),
+            pl.BlockSpec((1, c_tile), lambda vv, cc, dd, nbr_, w_: (nbr_[vv, dd], cc)),
         ],
-        out_specs=pl.BlockSpec((1, c_tile), lambda vv, dd, cc, nbr_, w_: (vv, cc)),
+        out_specs=pl.BlockSpec((1, c_tile), lambda vv, cc, dd, nbr_, w_: (vv, cc)),
     )
     out = pl.pallas_call(
         kernel,

@@ -1,3 +1,3 @@
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh, make_replay_mesh
 
-__all__ = ["make_host_mesh", "make_production_mesh"]
+__all__ = ["make_host_mesh", "make_production_mesh", "make_replay_mesh"]

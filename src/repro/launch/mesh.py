@@ -20,3 +20,19 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = max(n // model, 1)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_replay_mesh(shards: int | None = None):
+    """1-D data mesh for the sharded traffic replay CLI / benchmarks.
+
+    The replay is embarrassingly parallel over op chunks, so every device
+    goes on the single ``data`` axis. ``shards`` defaults to all visible
+    devices and must not exceed them (on CPU, force more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* any
+    jax import).
+    """
+    n = len(jax.devices())
+    shards = n if shards is None else int(shards)
+    if not 1 <= shards <= n:
+        raise ValueError(f"shards={shards} outside 1..{n} visible devices")
+    return jax.make_mesh((shards,), ("data",), devices=jax.devices()[:shards])

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import metrics, partitioners
 from repro.core.didic import DidicConfig, didic_partition, didic_refine
-from repro.core.dynamism import apply_dynamism, generate_dynamism
+from repro.core.dynamism import DynamismLog, apply_dynamism, generate_dynamism
 from repro.core.traffic import execute_ops, generate_ops
 from repro.graphs import datasets, generators
 
@@ -140,6 +140,30 @@ class TestDynamism:
         full_via_halves = apply_dynamism(half1, log.slice(0.5, 1.0))
         full = apply_dynamism(parts, log)
         assert np.array_equal(full_via_halves, full)
+
+    def test_consecutive_slices_partition_exactly(self):
+        """Regression (ISSUE 2): the Dynamic experiment walks the log in
+        5 % slices with *accumulated* float boundaries (0.05 + 0.05 + ...),
+        which are not bit-equal to the literal fractions — the old
+        truncating endpoints dropped or double-applied a move at e.g.
+        0.05·8 = 0.39999999999999997 vs 0.4. Consecutive slices must
+        partition the log exactly for any unit count."""
+        for units in (7, 20, 33, 100, 997, 1000):
+            log = DynamismLog(
+                np.arange(units, dtype=np.int64),
+                np.zeros(units, dtype=np.int32), "random", 2,
+            )
+            pieces, f = [], 0.0
+            while f < 1.0 - 1e-12:
+                nf = f + 0.05
+                pieces.append(log.slice(f, min(nf, 1.0)))
+                f = nf
+            got = np.concatenate([p.vertices for p in pieces])
+            np.testing.assert_array_equal(got, log.vertices)
+            # and accumulated boundaries agree with the literal ones
+            for i in range(1, 20):
+                acc = sum([0.05] * i)
+                assert log.slice(0.0, acc).units == log.slice(0.0, i * 0.05).units
 
 
 class TestTraffic:

@@ -176,9 +176,24 @@ class TestFrontierKernel:
         )
         np.testing.assert_array_equal(np.asarray(k_min), np.asarray(ref_min))
 
+        # C spanning several c_tile output tiles (ct > 1): the grid keeps
+        # the reduction axis innermost, so every output tile must still
+        # see its full accumulation.
+        x_wide = rng.normal(size=(n, 300)).astype(np.float32)
+        ref_wide = frontier_gather_ref(
+            jnp.asarray(x_wide), jnp.asarray(pn.nbr), jnp.asarray(pn.w),
+            jnp.asarray(pn.mask), mode="min",
+        )
+        k_wide = frontier_gather(
+            jnp.asarray(x_wide), jnp.asarray(pn.nbr), jnp.asarray(w_inf),
+            mode="min", c_tile=128, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(k_wide), np.asarray(ref_wide))
+
     def test_make_frontier_gather_dispatch(self):
         """The ops-layer closure (both kernel and ref paths) agrees with a
-        dense oracle, and refuses capped layouts it would silently drop."""
+        dense oracle — including capped layouts, whose over-cap edges are
+        folded in by the scatter epilogue rather than silently dropped."""
         import jax.numpy as jnp
 
         from repro.graphs.structure import padded_neighbors
@@ -189,19 +204,50 @@ class TestFrontierKernel:
         s = rng.integers(0, n, e)
         r = rng.integers(0, n, e)
         w = rng.random(e).astype(np.float32)
-        pn = padded_neighbors(s, r, w, n)
         x = rng.normal(size=(n, c)).astype(np.float32)
         dense = np.zeros((n, n), np.float32)
         np.add.at(dense, (r, s), w)
+        for cap in (None, 1, 2):
+            pn = padded_neighbors(s, r, w, n, cap=cap)
+            if cap is not None:
+                assert pn.n_spill > 0  # the cap binds, epilogue exercised
+            for use_kernel in (False, True):
+                gather = make_frontier_gather(pn, mode="sum", use_kernel=use_kernel)
+                np.testing.assert_allclose(
+                    np.asarray(gather(jnp.asarray(x))), dense @ x, rtol=1e-5, atol=1e-5
+                )
+
+    def test_make_frontier_gather_min_capped(self):
+        """min-mode epilogue: capped layout == uncapped layout bit-for-bit
+        (min is exact, so cap placement must not change results)."""
+        import jax.numpy as jnp
+
+        from repro.graphs.structure import padded_neighbors
+        from repro.kernels.frontier import make_frontier_gather
+
+        rng = np.random.default_rng(5)
+        n, e, c = 23, 120, 6
+        s = rng.integers(0, n, e)
+        r = rng.integers(0, n, e)
+        w = rng.random(e).astype(np.float32)
+        x = rng.random(size=(n, c)).astype(np.float32)
+        full = make_frontier_gather(padded_neighbors(s, r, w, n), mode="min")
+        want = np.asarray(full(jnp.asarray(x)))
         for use_kernel in (False, True):
-            gather = make_frontier_gather(pn, mode="sum", use_kernel=use_kernel)
-            np.testing.assert_allclose(
-                np.asarray(gather(jnp.asarray(x))), dense @ x, rtol=1e-5, atol=1e-5
-            )
-        capped = padded_neighbors(s, r, w, n, cap=1)
-        if capped.n_spill:
-            with pytest.raises(ValueError):
-                make_frontier_gather(capped, mode="sum")
+            capped = padded_neighbors(s, r, w, n, cap=2)
+            assert capped.n_spill > 0
+            gather = make_frontier_gather(capped, mode="min", use_kernel=use_kernel)
+            np.testing.assert_array_equal(np.asarray(gather(jnp.asarray(x))), want)
+
+    def test_engine_kernel_relaxation_path_exact(self):
+        """The Pallas frontier-gather relaxation path (interpret mode on
+        CPU) reproduces the scalar oracle bit-for-bit, like the inline
+        XLA path it replaces (ISSUE 2 tentpole acceptance). Small graph:
+        interpret mode pays per-grid-step emulation cost."""
+        g = datasets.load("gis", scale=0.0012)
+        ops = generate_ops(g, n_ops=10, seed=2, pattern="gis_short")
+        parts = partitioners.random_partition(g.n_nodes, 3, seed=1)
+        _assert_exact(g, ops, parts, 3, use_kernel=True, chunk=10)
 
     def test_sssp_tiny_bucket_width_still_exact(self, gis):
         """A pathologically small Δ stresses the bucket-advance machinery

@@ -1,0 +1,161 @@
+"""Sharded traffic replay: bit-exact equivalence on a multi-device mesh.
+
+ISSUE 2 acceptance: ``replay_sharded`` on a forced 8-device CPU mesh
+(``--xla_force_host_platform_device_count=8``, subprocess — the main
+pytest process keeps its single-device view, same idiom as
+test_distributed.py) reproduces all four traffic counters bit-for-bit vs
+``traffic_batched`` for filesystem, Twitter, and GIS logs — including
+uneven log shards, idle shards, the frontier-kernel relaxation path, and
+the int32-wave → int64-host counter hand-off at paper-scale magnitudes.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_SHARDED_EQUIVALENCE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.core import partitioners
+    from repro.core.traffic import OpLog, execute_ops, generate_ops
+    from repro.core import traffic_sharded
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.graphs.structure import Graph
+    from repro.launch.mesh import make_replay_mesh
+
+    mesh = make_replay_mesh()
+    out = {"n_devices": len(jax.devices())}
+
+    def equal(got, ref):
+        return all(
+            np.array_equal(getattr(got, f), getattr(ref, f))
+            for f in ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+        )
+
+    # --- every dataset/pattern, op counts chosen to leave shards uneven ----
+    cases = [
+        ("filesystem", "filesystem", 403, {}),
+        ("twitter", "twitter", 401, {}),
+        ("gis", "gis_short", 157, {}),
+        ("gis", "gis_long", 45, {}),
+        # n_ops << shards*chunk: most shards idle, inert-problem path
+        ("gis", "gis_short", 10, {"chunk": 4}),
+        # finite-Δ delta-stepping variant
+        ("gis", "gis_short", 64, {"delta_scale": 4.0}),
+    ]
+    for name, pattern, n_ops, kw in cases:
+        g = datasets.load(name, scale=0.004)
+        ops = generate_ops(g, n_ops=n_ops, seed=1, pattern=pattern)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+        ref = execute_ops(g, ops, parts, 4, engine="batched")
+        got = replay_sharded(g, ops, mesh, parts, 4, **kw)
+        out[f"{pattern}_{n_ops}"] = equal(got, ref)
+
+    # --- frontier Pallas kernel (interpret mode) as the relaxation path ----
+    g = datasets.load("gis", scale=0.0012)
+    ops = generate_ops(g, n_ops=16, seed=2, pattern="gis_short")
+    parts = partitioners.random_partition(g.n_nodes, 3, seed=1)
+    ref = execute_ops(g, ops, parts, 3, engine="scalar")
+    got = replay_sharded(g, ops, mesh, parts, 3, chunk=8, use_kernel=True)
+    out["kernel_path"] = equal(got, ref)
+
+    # --- int32 device wave -> int64 host accumulation boundary -------------
+    # Star graph, every op a 2-hop expansion from the hub: per-vertex
+    # traffic at the hub is 2·d·n_ops = 2.4e9 > 2^31, so any int32 leak in
+    # the hand-off wraps. Closed form: tm[hub]=tm[leaf]=n_ops,
+    # pv[hub]=t_l·d·n_ops, pv[leaf]=n_ops. A shrunken wave budget forces
+    # the mass through many int32 waves.
+    d, n_ops = 60_000, 20_000
+    star = Graph(
+        n_nodes=d + 1,
+        senders=np.zeros(d, dtype=np.int64),
+        receivers=np.arange(1, d + 1, dtype=np.int64),
+        edge_weight=np.ones(d, dtype=np.float32),
+        name="star",
+    )
+    ops = OpLog("twitter", np.zeros(n_ops, np.int64), np.full(n_ops, -1, np.int64),
+                t_l=2, t_pg=1)
+    parts = (np.arange(d + 1) % 4).astype(np.int64)
+    traffic_sharded._WAVE_BUDGET = 1 << 26  # ~18 waves instead of 2
+    got = replay_sharded(star, ops, mesh, parts, 4)
+    ref = execute_ops(star, ops, parts, 4, engine="batched")
+    pv_want = np.full(d + 1, n_ops, dtype=np.int64)
+    pv_want[0] = 2 * d * n_ops
+    out["int64_boundary_exceeds_int32"] = bool(pv_want[0] > 2**31)
+    out["int64_boundary_closed_form"] = bool(np.array_equal(got.per_vertex, pv_want))
+    out["int64_boundary_vs_batched"] = equal(got, ref)
+
+    print(json.dumps(out))
+""")
+
+
+class TestShardedReplay:
+    @pytest.fixture(scope="class")
+    def results(self):
+        out = subprocess.run(
+            [sys.executable, "-c", _SHARDED_EQUIVALENCE],
+            capture_output=True, text=True, timeout=570,
+            env={**__import__("os").environ, "PYTHONPATH": "src"},
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    def test_runs_on_eight_devices(self, results):
+        assert results["n_devices"] == 8
+
+    def test_bfs_patterns_bit_equal(self, results):
+        assert results["filesystem_403"]
+        assert results["twitter_401"]
+
+    def test_gis_patterns_bit_equal(self, results):
+        assert results["gis_short_157"]
+        assert results["gis_long_45"]
+
+    def test_uneven_and_idle_shards(self, results):
+        assert results["gis_short_10"]
+
+    def test_delta_stepping_variant(self, results):
+        assert results["gis_short_64"]
+
+    def test_frontier_kernel_path(self, results):
+        assert results["kernel_path"]
+
+    def test_int32_wave_int64_host_boundary(self, results):
+        assert results["int64_boundary_exceeds_int32"]
+        assert results["int64_boundary_closed_form"]
+        assert results["int64_boundary_vs_batched"]
+
+
+class TestCounterPrimitives:
+    """distributed.counters runs single-device too (S=1 mesh)."""
+
+    def test_scatter_psum_single_device(self):
+        import jax
+
+        from repro.distributed.counters import make_scatter_psum
+
+        mesh = jax.make_mesh((1,), ("data",))
+        fn = make_scatter_psum(mesh, 5)
+        ids = np.array([[0, 3, 3, 5, 7]], dtype=np.int32)  # 5 and 7 dropped
+        mass = np.array([[2, 1, 4, 9, 9]], dtype=np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(fn(ids, mass)), np.array([2, 0, 0, 5, 0], np.int32)
+        )
+
+    def test_accumulator_widens_before_summing(self):
+        from repro.distributed.counters import CounterAccumulator
+
+        acc = CounterAccumulator(2)
+        near_max = np.array([2**31 - 7, 1], dtype=np.int32)
+        for _ in range(4):
+            acc.add(near_max)
+        assert acc.total[0] == 4 * (2**31 - 7)  # > int32 range: no wrap
+        assert acc.total.dtype == np.int64
