@@ -1,22 +1,28 @@
 # Local verification targets. `make check` is what a PR must pass:
 # tier-1 tests + a ~5 s traffic-engine smoke + a ~10 s sharded-replay
-# smoke on a forced 2-device CPU mesh (bit-exactness vs the scalar
-# oracle / single-device engine is asserted inside both benches, so
-# perf *and* correctness regressions are caught before CI).
+# smoke on a forced 2-device CPU mesh + a dynamic-experiment smoke on a
+# forced 8-device CPU mesh (bit-exactness vs the scalar oracle /
+# single-device engine / host experiment loop is asserted inside the
+# benches, so perf *and* correctness regressions are caught before CI).
 #
 #   make test                tier-1 pytest suite
 #   make traffic-smoke       batched engine smoke (exactness + rate)
 #   make traffic-smoke-dist  sharded replay smoke, 2-shard CPU mesh
+#   make dynamic-smoke-dist  dynamic-experiment smoke, 8-shard CPU mesh
+#                            (device runtime vs host loop, bit-exact parity)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
-#                            (add WRITE=--write-baseline to either bench
+#   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
+#                            (add WRITE=--write-baseline to any full bench
 #                            to refresh benchmarks/BENCH_traffic.json)
 #   make check               test + traffic-smoke + traffic-smoke-dist
+#                            + dynamic-smoke-dist
 
 PY := PYTHONPATH=src python
 WRITE :=
 
-.PHONY: test traffic-smoke traffic-smoke-dist traffic-bench traffic-bench-dist check
+.PHONY: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
+	traffic-bench traffic-bench-dist dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,6 +34,10 @@ traffic-smoke-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 	$(PY) -m benchmarks.kernel_bench --traffic-dist-smoke
 
+dynamic-smoke-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --dynamic-smoke
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -35,4 +45,8 @@ traffic-bench-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --traffic-dist $(WRITE)
 
-check: test traffic-smoke traffic-smoke-dist
+dynamic-bench-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
+
+check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist

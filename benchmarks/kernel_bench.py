@@ -11,9 +11,14 @@ Usage:
       (shard count = visible devices; the Makefile targets force a
       multi-device CPU platform via XLA_FLAGS)
   python -m benchmarks.kernel_bench --traffic-dist-smoke  # ~10 s smoke
+  python -m benchmarks.kernel_bench --dynamic       # dynamic-experiment bench
+      (host loop vs device runtime, bit-exact parity asserted per slice)
+  python -m benchmarks.kernel_bench --dynamic-smoke # parity + rate smoke
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
+  python -m benchmarks.kernel_bench --dynamic --write-baseline       # merge
+      benchmarks/BENCH_traffic.json ("dynamic" section)
 """
 
 from __future__ import annotations
@@ -237,6 +242,97 @@ def traffic_dist_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Dynamic experiment: host loop vs device-resident runtime (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+def dynamic_bench(
+    scale: float = 0.004, smoke: bool = False, n_slices: int = 20
+) -> Dict[str, Dict[str, float]]:
+    """slices/s of the full dynamism→maintain→replay cycle, host loop vs
+    device runtime, on a mesh over every visible device.
+
+    Both runtimes execute the identical schedule (``n_slices`` × 5 %
+    slices, ``least_traffic`` insert, intermittent DiDiC every 4th slice)
+    with ``maintenance="shared"``, so all four traffic counters must match
+    **bit-for-bit** every slice — asserted before timing counts. Timing
+    uses fresh runtimes on warmed jit caches, best of two runs. The DiDiC
+    config is deliberately narrow (ψ=ρ=3, shallow smoothing): this bench
+    measures the *cycle* — dynamism + migration + replay — not diffusion
+    width, which ``maintenance_cost`` in benchmarks/paper_tables.py owns.
+    """
+    from repro.core.didic import DidicConfig, didic_partition
+    from repro.core.dynamic_runtime import DynamicExperimentRuntime
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.traffic import generate_ops
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    n_ops = 5_000 if smoke else 50_000
+    amount, maintain_every = 0.05, 4
+    g = datasets.load("filesystem", scale=scale)
+    ops = generate_ops(g, n_ops=n_ops, seed=0)
+    cfg = DidicConfig(k=4, iterations=10, primary_steps=3, secondary_steps=3,
+                      smooth_cap=16)
+    parts0, _ = didic_partition(g, cfg, seed=0)
+
+    def build(m):
+        svc = PartitionedGraphService(
+            g, 4, didic=cfg, mesh=m,
+            maintenance="shared" if m is not None else "auto",
+        )
+        svc.partition_with(parts0.copy())
+        return DynamicExperimentRuntime(svc, insert_method="least_traffic", seed=0)
+
+    def run(runtime, sink=None):
+        return runtime.run(ops, n_slices, amount, maintain_every=maintain_every,
+                           on_slice=sink)
+
+    per_slice: Dict[str, list] = {"host": [], "device": []}
+    run(build(None), lambda i, r: per_slice["host"].append(r))    # warm host
+    run(build(mesh), lambda i, r: per_slice["device"].append(r))  # warm device
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+    for i, (rh, rd) in enumerate(zip(per_slice["host"], per_slice["device"])):
+        for field in fields:
+            if not np.array_equal(getattr(rh, field), getattr(rd, field)):
+                raise AssertionError(
+                    f"dynamic runtime != host loop on slice {i} {field} — "
+                    "benchmark void"
+                )
+
+    host_s = device_s = np.inf
+    for _ in range(2):
+        t0 = time.perf_counter()
+        run(build(None))
+        host_s = min(host_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run(build(mesh))
+        device_s = min(device_s, time.perf_counter() - t0)
+
+    return {"filesystem": {
+        "scale": scale,
+        "n_ops": n_ops,
+        "n_slices": n_slices,
+        "amount": amount,
+        "maintain_every": maintain_every,
+        "shards": shards,
+        "host_slices_per_s": round(n_slices / host_s, 2),
+        "device_slices_per_s": round(n_slices / device_s, 2),
+        "parity": True,
+    }}
+
+
+def dynamic_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
+    rows = []
+    for name, r in results.items():
+        note = (f"{r['n_slices']}x{int(r['amount']*100)}% slices "
+                f"shards={r['shards']} scale={r['scale']} (bit-exact parity)")
+        rows.append(f"dynamic/{name}/host_slices_per_s,{r['host_slices_per_s']},{note}")
+        rows.append(f"dynamic/{name}/device_slices_per_s,{r['device_slices_per_s']},{note}")
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -248,6 +344,10 @@ def main() -> None:
                     help="sharded replay bench on a mesh over visible devices")
     ap.add_argument("--traffic-dist-smoke", action="store_true",
                     help="10-second sharded replay smoke (exactness + rate)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="dynamic-experiment bench: host loop vs device runtime")
+    ap.add_argument("--dynamic-smoke", action="store_true",
+                    help="dynamic-experiment parity + rate smoke")
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--write-baseline", action="store_true",
                     help="write results to benchmarks/BENCH_traffic.json")
@@ -287,6 +387,14 @@ def main() -> None:
             if args.traffic_dist_smoke:
                 raise SystemExit("--write-baseline requires the full --traffic-dist run")
             write_baseline({"sharded": results})
+    elif args.dynamic or args.dynamic_smoke:
+        results = dynamic_bench(scale=args.scale, smoke=args.dynamic_smoke)
+        for row in dynamic_rows(results):
+            print(row)
+        if args.write_baseline:
+            if args.dynamic_smoke:
+                raise SystemExit("--write-baseline requires the full --dynamic run")
+            write_baseline({"dynamic": results})
     else:
         for row in bench_rows():
             print(row)

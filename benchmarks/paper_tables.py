@@ -12,6 +12,12 @@ minutes; ``--scale`` raises toward paper sizes.
   stress_experiment  §7.5: one DiDiC iteration repairs 25 % dynamism
   dynamic_experiment §7.6: intermittent DiDiC under ongoing dynamism
   maintenance_cost   §Abstract: maintenance ≈ 1 % of initial partitioning
+
+The Stress and Dynamic experiments drive
+:class:`repro.core.dynamic_runtime.DynamicExperimentRuntime`; pass a
+``mesh`` to run every leg of their cycle on the device engines (sharded
+replay + device-scan dynamism + mesh DiDiC) — that is how the §7.6
+curves run at paper scale on a multi-host mesh.
 """
 
 from __future__ import annotations
@@ -25,7 +31,9 @@ import numpy as np
 from repro.configs.paper_didic import PaperExperimentConfig
 from repro.core import metrics, partitioners
 from repro.core.didic import DidicConfig, didic_partition, didic_refine
+from repro.core.dynamic_runtime import DynamicExperimentRuntime
 from repro.core.dynamism import apply_dynamism, generate_dynamism
+from repro.core.framework import PartitionedGraphService
 from repro.core.traffic import execute_ops, generate_ops
 from repro.graphs import datasets
 
@@ -185,42 +193,63 @@ class PaperBench:
                     )
         return rows
 
-    def stress_experiment(self, k: int = 4) -> List[Row]:
+    def _runtime_for(self, name: str, k: int, insert_method: str, mesh=None,
+                     maintenance: str = "auto",
+                     carry_state: bool = True) -> DynamicExperimentRuntime:
+        """Service + runtime on a cached DiDiC partitioning.
+
+        ``mesh`` flips every leg of the cycle onto the device engines
+        (sharded replay, device-scan dynamism, mesh DiDiC per
+        ``maintenance``); the default host path is the CPU-box reference.
+        ``carry_state`` seeds maintenance from the initial partitioning's
+        diffusion state (the Dynamic experiment's warm maintenance); the
+        Stress experiment measures the paper's *cold* one-iteration
+        repair and passes ``False``.
+        """
+        g = self.graph(name)
+        parts = self.partition(name, "didic", k)  # also fills the state cache
+        svc = PartitionedGraphService(
+            g, k, didic=self.cfg.didic(name, k), mesh=mesh, maintenance=maintenance
+        )
+        if carry_state and not (mesh is not None and maintenance in ("auto", "sharded")):
+            svc.runtime.state = self._parts.get((name, "didic_state", k))
+        svc.partition_with(parts.copy())
+        return DynamicExperimentRuntime(svc, insert_method=insert_method,
+                                        seed=self.cfg.seed)
+
+    def stress_experiment(self, k: int = 4, mesh=None) -> List[Row]:
         rows = []
         for name in self.cfg.datasets:
-            g = self.graph(name)
-            ops = self.ops(name)
-            base = self.partition(name, "didic", k)
-            base_pg = execute_ops(g, ops, base, k).percent_global
-            log = generate_dynamism(base, 0.25, "random", k=k, seed=self.cfg.seed)
-            damaged = apply_dynamism(base, log)
-            damaged_pg = execute_ops(g, ops, damaged, k).percent_global
-            repaired, _ = didic_refine(g, damaged, self.cfg.didic(name, k), iterations=1)
-            repaired_pg = execute_ops(g, ops, repaired, k).percent_global
+            runtime = self._runtime_for(name, k, "random", mesh=mesh,
+                                        carry_state=False)
+            res = runtime.run(self.ops(name), n_slices=1, amount=0.25,
+                              maintain_every=1, measure_damaged=True)
+            rec = res.records[0]
             rows += [
-                Row(f"stress/{name}/base_pg", round(base_pg * 100, 3)),
-                Row(f"stress/{name}/damaged_pg", round(damaged_pg * 100, 3)),
-                Row(f"stress/{name}/repaired_pg", round(repaired_pg * 100, 3),
+                Row(f"stress/{name}/base_pg", round(res.baseline.percent_global * 100, 3)),
+                Row(f"stress/{name}/damaged_pg", round(rec.damaged_percent_global * 100, 3)),
+                Row(f"stress/{name}/repaired_pg", round(rec.percent_global * 100, 3),
                     "paper: 1 iteration repairs 25% dynamism"),
             ]
         return rows
 
-    def dynamic_experiment(self, k: int = 4) -> List[Row]:
+    def dynamic_experiment(self, k: int = 4, mesh=None,
+                           insert_method: str = "random") -> List[Row]:
         rows = []
         for name in self.cfg.datasets:
-            g = self.graph(name)
-            ops = self.ops(name)
-            parts = self.partition(name, "didic", k)
-            state = self._parts.get((name, "didic_state", k))
-            log25 = generate_dynamism(parts, 0.25, "random", k=k, seed=self.cfg.seed)
-            for i in range(5):
-                parts = apply_dynamism(parts, log25.slice(i / 5, (i + 1) / 5))
-                parts, state = didic_refine(
-                    g, parts, self.cfg.didic(name, k), state=state, iterations=1
-                )
-                pg = execute_ops(g, ops, parts, k).percent_global
-                rows.append(Row(f"dynamic/{name}/round{i+1}/percent_global", round(pg * 100, 3),
-                                "paper: quality maintained under ongoing dynamism"))
+            runtime = self._runtime_for(name, k, insert_method, mesh=mesh)
+            res = runtime.run(self.ops(name), n_slices=5, amount=0.05,
+                              maintain_every=1)
+            for rec in res.records:
+                rows.append(Row(
+                    f"dynamic/{name}/round{rec.index+1}/percent_global",
+                    round(rec.percent_global * 100, 3),
+                    "paper: quality maintained under ongoing dynamism",
+                ))
+                rows.append(Row(
+                    f"dynamic/{name}/round{rec.index+1}/migrated_vertices",
+                    rec.migrated,
+                ))
         return rows
 
     def maintenance_cost(self, k: int = 4) -> List[Row]:

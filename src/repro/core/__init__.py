@@ -1,12 +1,13 @@
 from repro.core import didic, didic_distributed, dynamism, framework, metrics, partitioners, traffic
-from repro.core import traffic_sharded
+from repro.core import dynamic_runtime, traffic_sharded
 from repro.core.didic import DidicConfig, DidicState, didic_partition, didic_refine
+from repro.core.dynamic_runtime import DynamicExperimentRuntime
 from repro.core.framework import PartitionedGraphService
 from repro.core.traffic_sharded import replay_sharded
 
 __all__ = [
     "didic", "didic_distributed", "dynamism", "framework", "metrics", "partitioners", "traffic",
-    "traffic_sharded",
+    "dynamic_runtime", "traffic_sharded",
     "DidicConfig", "DidicState", "didic_partition", "didic_refine",
-    "PartitionedGraphService", "replay_sharded",
+    "DynamicExperimentRuntime", "PartitionedGraphService", "replay_sharded",
 ]

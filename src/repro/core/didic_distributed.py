@@ -13,22 +13,48 @@ Bootstrap: vertices are laid out by a cheap linear partitioning; DiDiC
 then refines in place. The returned partition map can be fed back into
 ``build_layout`` to re-place the graph for subsequent GNN training — the
 full production loop of DESIGN.md §4.
+
+Two entry points share one cached mesh program (layout + halo SpMM +
+coefficient degrees, built once per (graph, mesh, data_axes)):
+
+* :func:`didic_partition_distributed` — initial partitioning from a
+  random start (paper Static experiment, T=100);
+* :func:`didic_refine_distributed`    — the maintenance pass of the
+  Dynamic/Stress experiments (T=1, deterministic commit, full smoothing
+  width — the same adaptations as :func:`repro.core.didic.didic_refine`),
+  with the diffusion state carried **sharded on the mesh** between calls
+  so an intermittent maintenance schedule never round-trips it to host.
+
+The sharded passes run the same arithmetic as the single-device ones but
+sum float32 in a different association (per-shard segment-sums + psum vs
+one global segment-sum), so results are quality-equivalent, not
+bit-equal; callers needing bit-parity with the host loop use the
+single-device refine (see ``PartitionedGraphService(maintenance=...)``).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.didic import DidicConfig, DidicState, _init_state, _make_step, _smooth_schedule
+from repro.core.didic import (
+    DidicConfig,
+    DidicState,
+    _init_state,
+    _make_step,
+    _smooth_schedule,
+)
 from repro.core import partitioners
 from repro.graphs.structure import Graph
 
 if False:  # typing only — real imports are lazy (core ↔ distributed cycle)
     from repro.distributed.placement import PartitionedLayout  # noqa: F401
+
+__all__ = ["didic_partition_distributed", "didic_refine_distributed"]
 
 
 def _distributed_coefficients(graph: Graph) -> np.ndarray:
@@ -36,6 +62,62 @@ def _distributed_coefficients(graph: Graph) -> np.ndarray:
     s, r, wt = graph.undirected
     deg = graph.weighted_degree
     return (wt / (1.0 + np.maximum(deg[s], deg[r]))).astype(np.float32)
+
+
+def _mesh_program(graph: Graph, mesh, data_axes: Tuple[str, ...],
+                  bootstrap_parts: Optional[np.ndarray] = None):
+    """(layout, halo spmm, degc) for DiDiC on ``mesh`` — cached on the graph.
+
+    The layout is placement, not partitioning: vertices stay on their
+    bootstrap shard while their *logical* partition label diffuses, so one
+    halo program serves initial partitioning and every later maintenance
+    pass. Only an explicit ``bootstrap_parts`` bypasses the cache.
+    """
+    from repro.distributed.halo import build_halo_program, make_partitioned_spmm
+    from repro.distributed.placement import build_layout
+
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+
+    cache = graph.__dict__.setdefault("_didic_mesh_cache", {})
+    key = (mesh, tuple(data_axes)) if bootstrap_parts is None else None
+    if key is not None and key in cache:
+        return cache[key]
+
+    if bootstrap_parts is None:
+        bootstrap_parts = partitioners.linear_partition(graph.n_nodes, n_shards)
+    layout = build_layout(graph, bootstrap_parts, n_shards)
+
+    ce = _distributed_coefficients(graph)
+    program = build_halo_program(graph, layout, edge_weights=ce)
+    spmm_halo = make_partitioned_spmm(program, mesh, data_axes)
+
+    # degc in the padded layout (padding rows have zero degree → inert).
+    s, _, _ = graph.undirected
+    degc_host = np.zeros(graph.n_nodes, dtype=np.float64)
+    np.add.at(degc_host, s, ce)
+    degc = jnp.asarray(layout.scatter_features(degc_host.astype(np.float32)))
+
+    out = (layout, spmm_halo, degc)
+    if key is not None:
+        cache[key] = out
+    return out
+
+
+def _sharded_state(layout, k: int, parts_padded: np.ndarray, mesh, data_axes):
+    """Fresh DidicState seeded from a padded partition map, mesh-sharded."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shard = NamedSharding(mesh, P(data_axes, None))
+    shard1 = NamedSharding(mesh, P(data_axes))
+    state = _init_state(layout.padded_n, k, jnp.asarray(parts_padded))
+    return DidicState(
+        w=jax.device_put(state.w, shard),
+        l=jax.device_put(state.l, shard),
+        parts=jax.device_put(state.parts, shard1),
+        beta=state.beta,
+    )
 
 
 def didic_partition_distributed(
@@ -51,52 +133,74 @@ def didic_partition_distributed(
     Returns (parts[N] in ORIGINAL vertex ids, the bootstrap layout used).
     ``config.k`` must be a multiple of the data-shard count.
     """
-    # lazy imports: repro.distributed depends on repro.core (metrics)
-    from repro.distributed.halo import build_halo_program, make_partitioned_spmm
-    from repro.distributed.placement import build_layout
-    n_shards = 1
-    for a in data_axes:
-        n_shards *= mesh.shape[a]
-    if config.k % n_shards:
-        raise ValueError(f"k={config.k} must be a multiple of shards={n_shards}")
-
-    # Bootstrap placement: linear chunks (no quality assumed).
-    if bootstrap_parts is None:
-        bootstrap_parts = partitioners.linear_partition(graph.n_nodes, n_shards)
-    layout = build_layout(graph, bootstrap_parts, n_shards)
-
-    ce = _distributed_coefficients(graph)
-    program = build_halo_program(graph, layout, edge_weights=ce)
-    spmm_halo = make_partitioned_spmm(program, mesh, data_axes)
-
-    # degc in the padded layout (padding rows have zero degree → inert).
-    s, _, _ = graph.undirected
-    degc_host = np.zeros(graph.n_nodes, dtype=np.float64)
-    np.add.at(degc_host, s, ce)
-    degc = jnp.asarray(layout.scatter_features(degc_host.astype(np.float32)))
-
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    shard = NamedSharding(mesh, P(data_axes, None))
-    shard1 = NamedSharding(mesh, P(data_axes))
-
-    def spmm(x: jax.Array) -> jax.Array:
-        return spmm_halo(x)
+    layout, spmm_halo, degc = _mesh_program(graph, mesh, data_axes, bootstrap_parts)
+    if config.k % layout.n_shards:
+        raise ValueError(
+            f"k={config.k} must be a multiple of shards={layout.n_shards}"
+        )
 
     rng = np.random.default_rng(seed)
     parts0_host = rng.integers(0, config.k, size=graph.n_nodes).astype(np.int32)
     parts0 = layout.scatter_features(parts0_host, fill=0)
 
-    state = _init_state(layout.padded_n, config.k, jnp.asarray(parts0))
-    w = jax.device_put(state.w, shard)
-    l = jax.device_put(state.l, shard)
-    parts = jax.device_put(state.parts, shard1)
-    beta = state.beta
+    state = _sharded_state(layout, config.k, parts0, mesh, data_axes)
+    w, l, parts, beta = state.w, state.l, state.parts, state.beta
 
-    step = _make_step(spmm, degc, config)
+    step = _make_step(spmm_halo, degc, config)
     schedule = _smooth_schedule(config, config.iterations, start_wide=False)
     key = jax.random.PRNGKey(seed)
     for it in range(config.iterations):
         key, sub = jax.random.split(key)
         w, l, parts, beta = step(w, l, parts, beta, sub, jnp.int32(schedule[it]))
     return np.asarray(parts)[layout.old_to_new], layout
+
+
+def didic_refine_distributed(
+    graph: Graph,
+    parts: np.ndarray,
+    config: DidicConfig,
+    mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+    state: Optional[DidicState] = None,
+    iterations: int = 1,
+    seed: int = 0,
+) -> Tuple[np.ndarray, DidicState]:
+    """Maintenance pass on the mesh (the sharded twin of ``didic_refine``).
+
+    Seeds the assignment from the degraded ``parts`` (like the
+    single-device refine, the input map always wins over ``state.parts``),
+    runs at full smoothing width with deterministic commit (one-iteration
+    budgets must not strand damaged vertices), and returns
+    (parts[N] original ids, carried state). The diffusion loads and
+    balance scalars live sharded over ``mesh``'s data axes; feed the
+    state back on the next call and the intermittent maintenance of the
+    Dynamic experiment never moves the diffusion system off the mesh.
+    """
+    config = dataclasses.replace(config, commit_prob=1.0)
+    layout, spmm_halo, degc = _mesh_program(graph, mesh, data_axes)
+    if config.k % layout.n_shards:
+        raise ValueError(
+            f"k={config.k} must be a multiple of shards={layout.n_shards}"
+        )
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    parts_padded = layout.scatter_features(
+        np.asarray(parts, dtype=np.int32), fill=0
+    )
+    parts_j = jax.device_put(
+        jnp.asarray(parts_padded), NamedSharding(mesh, P(data_axes))
+    )
+    if state is None:
+        state = _sharded_state(layout, config.k, parts_padded, mesh, data_axes)
+    w, l, beta = state.w, state.l, state.beta
+    parts_cur = parts_j
+
+    step = _make_step(spmm_halo, degc, config)
+    schedule = _smooth_schedule(config, iterations, start_wide=True)
+    key = jax.random.PRNGKey(seed)
+    for it in range(iterations):
+        key, sub = jax.random.split(key)
+        w, l, parts_cur, beta = step(w, l, parts_cur, beta, sub, jnp.int32(schedule[it]))
+    new_state = DidicState(w=w, l=l, parts=parts_cur, beta=beta)
+    return np.asarray(parts_cur)[layout.old_to_new], new_state

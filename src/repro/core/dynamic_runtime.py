@@ -1,0 +1,296 @@
+"""Device-resident dynamic-experiment runtime (ISSUE 3 tentpole).
+
+The paper's maintenance experiments (§6.4, §7.5–7.6) run one cycle per
+5 % dynamism slice:
+
+    dynamism slice  →  (intermittent) DiDiC maintenance  →  traffic replay
+
+and the replayed per-vertex traffic feeds the *next* slice's
+``least_traffic`` insert policy. Until this PR the whole cycle lived in
+host numpy loops (``core/dynamism.py`` + ``benchmarks/paper_tables.py``)
+even though every leg already had a device implementation. This module
+fuses the legs into one mesh-native pipeline:
+
+* **Dynamism generation on device** — the sequential
+  ``fewest_vertices`` / ``least_traffic`` oracles become a single
+  :func:`jax.lax.scan` over move units (:func:`scan_dynamism_targets`).
+  Targets are **bit-identical** to the host oracle in
+  :mod:`repro.core.dynamism` (which stays as the reference): integer
+  argmin ties break identically, and the ``least_traffic`` totals — exact
+  integers that the oracle carries in float64 — are carried on device as
+  **base-2²⁰ int32 digit pairs** (the device has no x64), so every
+  update and every lexicographic argmin is exact. This is the same
+  int32-device / int64-host split as :mod:`repro.distributed.counters`,
+  and unlike an ``enable_x64`` escape hatch it runs unchanged on TPU.
+* **Maintenance on the mesh** — :class:`~repro.core.framework.RuntimePartitioner`
+  routes ``maintain`` through
+  :func:`repro.core.didic_distributed.didic_refine_distributed`, whose
+  diffusion state (``w``/``l``/``beta`` and the padded partition map)
+  stays sharded across the whole slice schedule.
+* **Traffic on the mesh** — measurement goes through
+  :func:`repro.core.traffic_sharded.replay_sharded` (bit-equal to the
+  batched engine), and its ``per_vertex`` counters close the loop into
+  the next slice's insert policy.
+
+:class:`DynamicExperimentRuntime` drives the cycle on top of a
+:class:`~repro.core.framework.PartitionedGraphService`; the service's
+``mesh`` decides host vs device for every leg behind the same interface.
+
+Parity contract: with ``maintenance="shared"`` (both engines calling the
+same single-device DiDiC refine) the device runtime reproduces the
+host-loop reference **bit-identically** on all four traffic counters for
+a full slice schedule — asserted on a forced 8-device CPU mesh in
+``tests/test_dynamic_runtime.py``. With ``maintenance="sharded"`` the
+halo-exchange DiDiC is float32-sum-order different from the
+single-device refine (same algorithm, different reduction association),
+so that mode trades bit-parity for mesh scalability and is validated by
+quality tests instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.framework import (
+    InsertPartitioner,
+    MigrationScheduler,
+    PartitionedGraphService,
+)
+from repro.core.traffic import OpLog, TrafficResult
+
+__all__ = [
+    "scan_dynamism_targets",
+    "SliceRecord",
+    "DynamicRunResult",
+    "DynamicExperimentRuntime",
+]
+
+# least_traffic totals are exact integers; the device carries them as two
+# int32 digits in base 2**_DIGIT_BITS. Per-vertex and per-partition totals
+# must stay below 2**(31 + _DIGIT_BITS) = 2**51 — the same ceiling as
+# float64 integer exactness (2**53), so the host oracle and the device scan
+# agree wherever either is defined.
+_DIGIT_BITS = 20
+_DIGIT = np.int32(1 << _DIGIT_BITS)
+_VALUE_CEIL = 1 << (31 + _DIGIT_BITS)
+
+
+def _split_digits(x64: np.ndarray):
+    """int64 ≥ 0 → (hi, lo) int32 digits with ``x = hi·2²⁰ + lo``."""
+    hi = (x64 >> _DIGIT_BITS).astype(np.int32)
+    lo = (x64 & (int(_DIGIT) - 1)).astype(np.int32)
+    return hi, lo
+
+
+@jax.jit
+def _fewest_vertices_scan(cur0, counts0, movers):
+    """Sequential fewest-vertices oracle as one scan over move units.
+
+    ``jnp.argmin`` and ``np.argmin`` both return the *first* minimum, so
+    the tie-breaks — the only freedom in the policy — match the host loop
+    exactly; counts are integers, so everything else is exact arithmetic.
+    """
+
+    def step(carry, v):
+        counts, cur = carry
+        t = jnp.argmin(counts).astype(jnp.int32)
+        counts = counts.at[cur[v]].add(-1).at[t].add(1)
+        cur = cur.at[v].set(t)
+        return (counts, cur), t
+
+    (_, _), targets = jax.lax.scan(step, (counts0, cur0), movers)
+    return targets
+
+
+@jax.jit
+def _least_traffic_scan(cur0, tr_hi0, tr_lo0, vt_hi, vt_lo, movers):
+    """Sequential least-traffic oracle as one scan, in digit arithmetic.
+
+    Per-partition traffic is ``hi·2²⁰ + lo`` with ``0 ≤ lo < 2²⁰`` (the
+    carry is normalized every step), so lexicographic ``(hi, lo)`` order
+    equals numeric order and the first-lex-min below reproduces
+    ``np.argmin`` over the oracle's float64 totals bit-for-bit.
+    """
+
+    def lex_argmin(hi, lo):
+        m_hi = jnp.min(hi)
+        cand = hi == m_hi
+        m_lo = jnp.min(jnp.where(cand, lo, jnp.int32(_DIGIT)))
+        return jnp.argmax(cand & (lo == m_lo)).astype(jnp.int32)
+
+    def step(carry, v):
+        hi, lo, cur = carry
+        t = lex_argmin(hi, lo)
+        src = cur[v]
+        lo = lo.at[src].add(-vt_lo[v]).at[t].add(vt_lo[v])
+        hi = hi.at[src].add(-vt_hi[v]).at[t].add(vt_hi[v])
+        carry_d = jnp.floor_divide(lo, _DIGIT)  # ∈ {-1, 0, 1} by construction
+        lo = lo - carry_d * _DIGIT
+        hi = hi + carry_d
+        cur = cur.at[v].set(t)
+        return (hi, lo, cur), t
+
+    (_, _, _), targets = jax.lax.scan(step, (tr_hi0, tr_lo0, cur0), movers)
+    return targets
+
+
+def scan_dynamism_targets(
+    parts: np.ndarray,
+    movers: np.ndarray,
+    method: str,
+    k: int,
+    vertex_traffic: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Device-scan targets for a mover sequence — bit-identical to the
+    sequential host oracle in :func:`repro.core.dynamism.generate_dynamism`.
+
+    ``least_traffic`` requires integer-valued, non-negative
+    ``vertex_traffic`` with per-partition totals below 2⁵¹ (always true
+    for :attr:`TrafficResult.per_vertex` int64 counts); anything else
+    raises rather than silently degrading exactness.
+    """
+    n = parts.shape[0]
+    cur0 = jnp.asarray(np.asarray(parts, dtype=np.int32))
+    movers_j = jnp.asarray(np.asarray(movers, dtype=np.int32))
+    if method == "fewest_vertices":
+        counts0 = np.bincount(parts, minlength=k).astype(np.int32)
+        targets = _fewest_vertices_scan(cur0, jnp.asarray(counts0), movers_j)
+        return np.asarray(targets, dtype=np.int32)
+    if method != "least_traffic":
+        raise ValueError(f"no device scan for insert method {method!r}")
+    if vertex_traffic is None:
+        raise ValueError("least_traffic requires vertex_traffic")
+    vt = np.asarray(vertex_traffic)
+    vt64 = np.asarray(np.rint(vt), dtype=np.int64)
+    if not np.array_equal(vt64.astype(vt.dtype, copy=False), vt):
+        raise ValueError(
+            "device least_traffic needs integer-valued vertex_traffic "
+            "(use engine='host' for fractional estimates)"
+        )
+    if vt64.min(initial=0) < 0 or float(vt64.sum(dtype=np.float64)) >= _VALUE_CEIL:
+        raise ValueError(
+            "vertex_traffic outside the exact int32-digit range [0, 2**51)"
+        )
+    tr0 = np.zeros(k, dtype=np.int64)
+    np.add.at(tr0, np.asarray(parts, dtype=np.int64), vt64)
+    tr_hi0, tr_lo0 = _split_digits(tr0)
+    vt_hi, vt_lo = _split_digits(vt64)
+    targets = _least_traffic_scan(
+        cur0,
+        jnp.asarray(tr_hi0), jnp.asarray(tr_lo0),
+        jnp.asarray(vt_hi), jnp.asarray(vt_lo),
+        movers_j,
+    )
+    return np.asarray(targets, dtype=np.int32)
+
+
+# ===========================================================================
+# The experiment driver
+# ===========================================================================
+@dataclasses.dataclass
+class SliceRecord:
+    """Per-slice measurements of the dynamic experiment."""
+
+    index: int
+    units: int
+    percent_global: float                      # after (any) maintenance
+    maintained: bool
+    migrated: int                              # vertices moved by migration
+    damaged_percent_global: Optional[float] = None
+
+
+@dataclasses.dataclass
+class DynamicRunResult:
+    baseline: TrafficResult     # traffic on the starting partitioning
+    records: List[SliceRecord]
+    final: TrafficResult        # traffic after the last slice
+    parts: np.ndarray           # final partition map
+
+
+class DynamicExperimentRuntime:
+    """Drive the Dynamic/Stress experiment cycle on a graph service.
+
+    The service decides the engine: constructed with a ``mesh``, every leg
+    runs on it (sharded replay, device-scan dynamism, mesh DiDiC per the
+    service's ``maintenance`` mode); without one, the host reference path
+    runs. Either way the cycle, seeds, and migration policy are identical,
+    which is what makes the host-vs-device parity test meaningful.
+    """
+
+    def __init__(
+        self,
+        service: PartitionedGraphService,
+        insert_method: str = "random",
+        seed: int = 0,
+        scheduler: Optional[MigrationScheduler] = None,
+    ):
+        self.service = service
+        self.insert = InsertPartitioner(
+            insert_method, service.k, seed=seed, engine=service.engine
+        )
+        # The paper's Dynamic experiment migrates on a fixed interval, so
+        # the default scheduler applies every planned move.
+        self.scheduler = scheduler or MigrationScheduler(min_move_fraction=0.0)
+
+    def run(
+        self,
+        ops: OpLog,
+        n_slices: int,
+        amount: float,
+        maintain_every: int = 1,
+        iterations: int = 1,
+        measure_damaged: bool = False,
+        on_slice: Optional[Callable[[int, TrafficResult], None]] = None,
+    ) -> DynamicRunResult:
+        """Run ``n_slices`` slices of ``amount`` dynamism each.
+
+        Per slice: generate+apply a dynamism log (seeded from the insert
+        partitioner's spawned stream, fed by the latest per-vertex
+        traffic), maintain every ``maintain_every``-th slice (DiDiC
+        ``iterations`` + migration via the scheduler), then replay ``ops``
+        for the slice's traffic measurement. ``measure_damaged`` adds a
+        pre-maintenance measurement (the Stress experiment's
+        ``damaged_pg``). ``on_slice`` sees every post-maintenance
+        :class:`TrafficResult` — the parity test uses it to compare all
+        four counters per slice without bloating the records.
+        """
+        svc = self.service
+        baseline = svc.run_ops(ops)
+        result = baseline
+        records: List[SliceRecord] = []
+        for i in range(n_slices):
+            log = self.insert.allocate(
+                svc.parts, amount, vertex_traffic=result.per_vertex
+            )
+            svc.apply_dynamism(log)
+            damaged_pg = (
+                svc.run_ops(ops).percent_global if measure_damaged else None
+            )
+            maintained = (i + 1) % maintain_every == 0
+            migrated = 0
+            if maintained:
+                migrated = svc.maintain_migrate(
+                    self.scheduler, step=i, iterations=iterations
+                )
+            result = svc.run_ops(ops)
+            if on_slice is not None:
+                on_slice(i, result)
+            records.append(SliceRecord(
+                index=i,
+                units=log.units,
+                percent_global=result.percent_global,
+                maintained=maintained,
+                migrated=migrated,
+                damaged_percent_global=damaged_pg,
+            ))
+        return DynamicRunResult(
+            baseline=baseline,
+            records=records,
+            final=result,
+            parts=svc.parts.copy(),
+        )

@@ -14,6 +14,10 @@ Moves are generated *sequentially* (each choice sees the counts updated by
 all previous moves), exactly like the paper's simulator, and recorded in a
 replayable :class:`DynamismLog` — the Dynamic experiment re-applies the
 same log in 5 % slices.
+
+The Python loops below are the semantic reference; ``engine="device"``
+runs the same sequential policies as a single :func:`jax.lax.scan`
+(:mod:`repro.core.dynamic_runtime`) with bit-identical targets.
 """
 
 from __future__ import annotations
@@ -67,7 +71,8 @@ def generate_dynamism(
     method: str = "random",
     k: Optional[int] = None,
     vertex_traffic: Optional[np.ndarray] = None,
-    seed: int = 0,
+    seed: "int | np.random.SeedSequence" = 0,
+    engine: str = "host",
 ) -> DynamismLog:
     """Create ``amount·|V|`` sequential move operations.
 
@@ -77,14 +82,33 @@ def generate_dynamism(
     the measured distribution (``TrafficResult.per_vertex``, identical
     int64 counts from either the batched or scalar engine), and partition
     traffic totals are updated as vertices (and their traffic) move.
+
+    ``engine="device"`` runs the sequential policies as a
+    :func:`jax.lax.scan` (:func:`repro.core.dynamic_runtime.scan_dynamism_targets`)
+    with **bit-identical targets**; the Python loops below stay as the
+    semantic reference. ``seed`` may be a :class:`np.random.SeedSequence`
+    (the insert partitioner passes spawned per-call streams); both engines
+    draw the same movers either way.
     """
     if method not in INSERT_METHODS:
         raise ValueError(f"unknown insert method {method!r}")
+    if engine not in ("host", "device"):
+        raise ValueError(f"unknown dynamism engine {engine!r}")
     k = int(parts.max()) + 1 if k is None else k
     n = parts.shape[0]
     units = int(round(amount * n))
     rng = np.random.default_rng(seed)
     movers = rng.integers(0, n, size=units)
+
+    if engine == "device" and method != "random":
+        from repro.core.dynamic_runtime import scan_dynamism_targets  # lazy: jax
+
+        targets = scan_dynamism_targets(
+            parts, movers, method, k, vertex_traffic=vertex_traffic
+        )
+        return DynamismLog(
+            vertices=movers.astype(np.int64), targets=targets, method=method, k=k
+        )
 
     cur = parts.astype(np.int64).copy()
     counts = np.bincount(cur, minlength=k).astype(np.int64)

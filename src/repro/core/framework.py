@@ -16,13 +16,22 @@ thesis's ``PGraphDatabaseServiceEmulator``. The distributed runtime
 (`repro.distributed.placement`) consumes the same partition map to place
 GNN shards on mesh devices — the framework is shared between the paper
 reproduction and the large-scale training path.
+
+**Engine dispatch.** Every component runs behind one interface on either
+the host reference engines or the mesh-native device engines: construct
+the service with a ``mesh`` and ``run_ops`` routes through
+:func:`repro.core.traffic_sharded.replay_sharded`, ``maintain`` through
+:func:`repro.core.didic_distributed.didic_refine_distributed` (unless
+``maintenance="shared"`` pins the bit-parity single-device DiDiC), and
+:class:`InsertPartitioner` generates dynamism with the device scan of
+:mod:`repro.core.dynamic_runtime`. Without a mesh the host paths run —
+same cycle, same seeds, same results where bit-parity is contracted.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -53,12 +62,25 @@ class InstanceInfo:
 
 
 class InsertPartitioner:
-    """Insert-Partitioning component: allocate new entities to partitions."""
+    """Insert-Partitioning component: allocate new entities to partitions.
 
-    def __init__(self, method: str = "random", k: int = 4, seed: int = 0):
+    Per-call randomness comes from children spawned off one
+    :class:`np.random.SeedSequence`: the i-th ``allocate`` of two
+    partitioners built with the same seed is identical, and streams from
+    *different* base seeds never collide. (The old ``self._seed += 1``
+    made call #1 of ``seed=0`` alias call #0 of ``seed=1``.)
+
+    ``engine="device"`` generates the sequential policies with the
+    bit-identical :func:`jax.lax.scan` path of
+    :mod:`repro.core.dynamic_runtime`.
+    """
+
+    def __init__(self, method: str = "random", k: int = 4, seed: int = 0,
+                 engine: str = "host"):
         self.method = method
         self.k = k
-        self._seed = seed
+        self.engine = engine
+        self._seeds = np.random.SeedSequence(seed)
 
     def allocate(
         self,
@@ -66,11 +88,11 @@ class InsertPartitioner:
         amount: float,
         vertex_traffic: Optional[np.ndarray] = None,
     ) -> DynamismLog:
-        log = generate_dynamism(
-            parts, amount, self.method, self.k, vertex_traffic=vertex_traffic, seed=self._seed
+        (stream,) = self._seeds.spawn(1)
+        return generate_dynamism(
+            parts, amount, self.method, self.k,
+            vertex_traffic=vertex_traffic, seed=stream, engine=self.engine,
         )
-        self._seed += 1
-        return log
 
 
 class RuntimeLogger:
@@ -115,17 +137,46 @@ class RuntimeLogger:
 
 
 class RuntimePartitioner:
-    """Runtime-Partitioning component: DiDiC initial + maintenance passes."""
+    """Runtime-Partitioning component: DiDiC initial + maintenance passes.
 
-    def __init__(self, config: DidicConfig):
+    With a ``mesh``, both passes run the truly-distributed DiDiC of
+    :mod:`repro.core.didic_distributed`: shard-resident loads, halo-exchange
+    SpMM, and a carried sharded :class:`DidicState` so intermittent
+    maintenance keeps its diffusion state on the mesh between slices.
+    Without one, the single-device reference runs (state carried the same
+    way). The two produce the same algorithm but different float32
+    reduction orders — callers needing bit-parity with the host path pin
+    ``mesh=None``.
+    """
+
+    def __init__(self, config: DidicConfig, mesh=None,
+                 data_axes: Tuple[str, ...] = ("data",)):
         self.config = config
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
         self.state: Optional[DidicState] = None
 
     def initial(self, graph: Graph, seed: int = 0) -> np.ndarray:
+        if self.mesh is not None:
+            from repro.core.didic_distributed import didic_partition_distributed
+
+            parts, _ = didic_partition_distributed(
+                graph, self.config, self.mesh, self.data_axes, seed=seed
+            )
+            self.state = None  # sharded maintenance re-seeds from parts
+            return parts
         parts, self.state = didic_partition(graph, self.config, seed=seed)
         return parts
 
     def maintain(self, graph: Graph, parts: np.ndarray, iterations: int = 1) -> np.ndarray:
+        if self.mesh is not None:
+            from repro.core.didic_distributed import didic_refine_distributed
+
+            parts, self.state = didic_refine_distributed(
+                graph, parts, self.config, self.mesh, self.data_axes,
+                state=self.state, iterations=iterations,
+            )
+            return parts
         parts, self.state = didic_refine(
             graph, parts, self.config, state=self.state, iterations=iterations
         )
@@ -158,15 +209,26 @@ class MigrationScheduler:
         self.best_percent_global = min(self.best_percent_global, percent_global)
         return percent_global > self.best_percent_global * self.degradation_factor
 
-    def plan(self, old_parts: np.ndarray, new_parts: np.ndarray) -> List[MigrationCommand]:
+    def plan(
+        self, old_parts: np.ndarray, new_parts: np.ndarray, step: int = 0
+    ) -> List[MigrationCommand]:
+        """Group the parts delta into per-target migration commands.
+
+        ``step`` is the caller's logical step/epoch counter — history is
+        keyed by it (a wall-clock stamp made runs unreplayable). Grouping
+        is one stable sort + split instead of a per-target scan.
+        """
         moved = np.nonzero(old_parts != new_parts)[0]
         if moved.shape[0] < self.min_move_fraction * old_parts.shape[0]:
             return []
-        cmds = []
-        for target in np.unique(new_parts[moved]):
-            vs = moved[new_parts[moved] == target]
-            cmds.append(MigrationCommand(vertices=vs, target=int(target)))
-        self.history.append({"time": time.time(), "n_moved": int(moved.shape[0])})
+        tgt = np.asarray(new_parts)[moved]
+        order = np.argsort(tgt, kind="stable")
+        uniq, starts = np.unique(tgt[order], return_index=True)
+        cmds = [
+            MigrationCommand(vertices=vs, target=int(t))
+            for t, vs in zip(uniq, np.split(moved[order], starts[1:]))
+        ]
+        self.history.append({"step": int(step), "n_moved": int(moved.shape[0])})
         return cmds
 
     @staticmethod
@@ -183,15 +245,47 @@ class PartitionedGraphService:
     One logical graph, a partition map, and the measurement machinery.
     Drives the Static / Insert / Stress / Dynamic experiments and is reused
     by the distributed placement layer.
+
+    ``mesh`` selects the device engines for every leg (sharded traffic
+    replay + mesh DiDiC maintenance); ``maintenance`` refines that choice:
+
+    * ``"auto"``    — sharded DiDiC when a mesh is present,
+    * ``"sharded"`` — require the mesh DiDiC (error without a mesh),
+    * ``"shared"``  — keep the single-device DiDiC even on a mesh, so a
+      device-engine run stays bit-identical to the host reference loop
+      (the sharded DiDiC sums float32 in a different order).
     """
 
-    def __init__(self, graph: Graph, k: int, didic: Optional[DidicConfig] = None):
+    def __init__(
+        self,
+        graph: Graph,
+        k: int,
+        didic: Optional[DidicConfig] = None,
+        *,
+        mesh=None,
+        data_axes: Tuple[str, ...] = ("data",),
+        maintenance: str = "auto",
+    ):
+        if maintenance not in ("auto", "sharded", "shared"):
+            raise ValueError(f"unknown maintenance mode {maintenance!r}")
+        if maintenance == "sharded" and mesh is None:
+            raise ValueError("maintenance='sharded' requires a mesh")
         self.graph = graph
         self.k = k
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
         self.parts = np.zeros(graph.n_nodes, dtype=np.int32)
         self.logger = RuntimeLogger(k)
-        self.runtime = RuntimePartitioner(didic or DidicConfig(k=k))
+        maint_mesh = mesh if maintenance in ("auto", "sharded") else None
+        self.runtime = RuntimePartitioner(
+            didic or DidicConfig(k=k), mesh=maint_mesh, data_axes=self.data_axes
+        )
         self.scheduler = MigrationScheduler()
+
+    @property
+    def engine(self) -> str:
+        """Which engine family serves this service: ``host`` or ``device``."""
+        return "device" if self.mesh is not None else "host"
 
     # -- partitioning -------------------------------------------------------
     def partition_with(self, parts: np.ndarray) -> "PartitionedGraphService":
@@ -207,10 +301,50 @@ class PartitionedGraphService:
         self.parts = self.runtime.maintain(self.graph, self.parts, iterations=iterations)
         self.logger.observe_structure(self.graph, self.parts)
 
+    def maintain_migrate(self, scheduler: MigrationScheduler, step: int,
+                         iterations: int = 1) -> int:
+        """Maintenance pass applied through the Migration-Scheduler.
+
+        Runtime partitioning proposes a new map; the scheduler turns the
+        delta into per-target migration commands (recorded against the
+        logical ``step``) and applies them. Returns the number of
+        migrated vertices — the dynamic experiment's migration-volume
+        metric.
+
+        If the scheduler rejects a non-trivial plan (below its move
+        threshold), the partitioner's diffusion state is rolled back too:
+        keeping state from a refinement that was never adopted would make
+        later maintenance diffuse from a map the service never served.
+        """
+        prev_state = self.runtime.state
+        new_parts = self.runtime.maintain(self.graph, self.parts, iterations=iterations)
+        cmds = scheduler.plan(self.parts, new_parts.astype(np.int32), step=step)
+        if not cmds and (self.parts != new_parts).any():
+            self.runtime.state = prev_state
+            return 0
+        self.parts = scheduler.apply(self.parts, cmds)
+        self.logger.observe_structure(self.graph, self.parts)
+        return int(sum(c.vertices.shape[0] for c in cmds))
+
     # -- workload -----------------------------------------------------------
     def run_ops(self, ops: OpLog, engine: str = "auto") -> TrafficResult:
-        """Replay an evaluation log (``engine``: auto | batched | scalar)."""
-        result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
+        """Replay an evaluation log.
+
+        ``engine``: ``auto`` (sharded when the service has a mesh, else
+        the batched single-device engine) | ``sharded`` | ``batched`` |
+        ``scalar``. All engines are bit-equal on every counter.
+        """
+        if engine == "sharded" and self.mesh is None:
+            raise ValueError("engine='sharded' requires a service mesh")
+        if engine == "sharded" or (engine == "auto" and self.mesh is not None):
+            from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
+
+            result = replay_sharded(
+                self.graph, ops, self.mesh, self.parts, self.k,
+                data_axes=self.data_axes,
+            )
+        else:
+            result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
         self.logger.observe_traffic(result)
         return result
 

@@ -289,6 +289,7 @@ class BatchedTrafficEngine:
             self.nbr_cap = max(4, int(np.percentile(pos_deg, 90)) if pos_deg.size else 4)
             self._glob2loc = np.full(self.n_nodes, -1, dtype=np.int64)
             self._full_layout = None
+            self._full_lonlat = None
             self._device_h_ok = self._check_device_h()
         else:
             self.chunk = chunk
@@ -301,6 +302,19 @@ class BatchedTrafficEngine:
     def _spmv_down(self, x: jnp.ndarray) -> jnp.ndarray:
         """(A x)(u) = Σ_{u→c} x(c) — pull child values up one level."""
         return jnp.zeros(self.n_nodes, x.dtype).at[self._s_j].add(x[self._r_j])
+
+    def _bfs_prefix_one(self, vec):
+        """Level-prefix table ``[N, t+1]`` for one counter vector — the
+        single-column form of :meth:`_bfs_prefix_table`. The sharded
+        replayer uses it to keep the graph-pure deg column device-resident
+        and rebuild only the parts-dependent cross column per replay."""
+        t = self.max_levels
+        prefixes = [jnp.zeros_like(vec)]
+        level_vec = vec
+        for _ in range(t):
+            prefixes.append(prefixes[-1] + level_vec)
+            level_vec = self._spmv_down(level_vec)
+        return jnp.stack(prefixes, axis=1)
 
     def _bfs_prefix_table(self, cross_deg):
         """Level-prefix tables ``P[u, l, :]`` for deg and cross_deg
@@ -368,6 +382,9 @@ class BatchedTrafficEngine:
         )
         # tm = Σ_l (Aᵀ)^l c_l, inner-to-outer fold in host int64: the whole
         # log accumulates into single vertices here, so int32 could wrap.
+        # Recomputed every replay on purpose: this engine is the reference
+        # loop; cross-replay frontier-mass residency is the device
+        # runtime's job (see traffic_sharded._run_bfs).
         t = self.max_levels
         tm = c_stack[t - 1].astype(np.int64)
         for lvl in range(t - 2, -1, -1):
@@ -434,6 +451,57 @@ class BatchedTrafficEngine:
             & (self._lat >= lo_y) & (self._lat <= hi_y)
         )
         return np.nonzero(mask)[0], (lo_x, hi_x, lo_y, hi_y)
+
+    def ensure_full_layout(self):
+        """Whole-graph gather layout ``(w_pad, nbr, w_inf, sp_s, sp_r,
+        sp_w, ids_w, deg_w)`` — parts/ops independent, built once and
+        shared by the single-device redo pass and the sharded replayer's
+        replicated device-resident copy."""
+        if self._full_layout is None:
+            self.build_sssp_problem(
+                np.zeros(1, np.int64), np.zeros(1, np.int64),
+                np.zeros(1, bool), np.zeros(self.n_nodes, np.int32), full=True,
+            )
+        return self._full_layout
+
+    def full_per_op(
+        self,
+        srcs: np.ndarray,
+        dsts: np.ndarray,
+        valid: np.ndarray,
+        as_numpy: bool = False,
+    ):
+        """Per-op columns ``(loc_src, loc_dst, dst_ids, h)`` for the
+        whole-graph window — the slim form of
+        ``build_sssp_problem(full=True)`` for callers that already hold
+        the shared layout (:meth:`ensure_full_layout`): no O(N) window
+        enumeration or cross_w rebuild per chunk, and the padded window
+        coordinates stay device-resident. ``h`` is computed by the exact
+        code path of the full build, so results remain bit-identical.
+        """
+        w_pad = self.ensure_full_layout()[0]
+        loc_src = np.where(valid, srcs, 0).astype(np.int32)
+        loc_dst = np.where(valid, dsts, 0).astype(np.int32)
+        dst_safe = np.where(valid, dsts, 0)
+        if self._device_h_ok:
+            if self._full_lonlat is None:
+                pad = np.zeros(w_pad - self.n_nodes, np.float32)
+                self._full_lonlat = (
+                    jnp.asarray(np.concatenate([self._lon, pad])),
+                    jnp.asarray(np.concatenate([self._lat, pad])),
+                )
+            h = _device_h(
+                self._full_lonlat[0], self._full_lonlat[1],
+                jnp.asarray(self._lon[dst_safe]), jnp.asarray(self._lat[dst_safe]),
+            )
+            if as_numpy:
+                h = np.asarray(h)
+        else:
+            h = np.zeros((w_pad, srcs.shape[0]), dtype=np.float32)
+            h[: self.n_nodes] = self._host_h(
+                np.arange(self.n_nodes, dtype=np.int64), dst_safe
+            )
+        return loc_src, loc_dst, dst_safe.astype(np.int32), h
 
     def build_sssp_problem(
         self,

@@ -36,8 +36,10 @@ reduced on-device (``member & accepted`` summed over ops, scattered by
 global window ids) through :func:`repro.distributed.counters.make_scatter_psum`;
 per-op counters return to the host and are written back in log order.
 Window acceptance stays host-side in float64 (a float32 false-accept would
-break exactness); rejected ops are re-solved on the full graph in the same
-sharded rounds.
+break exactness); rejected ops are re-solved on the whole graph in a redo
+pass whose gather layout is **replicated once, device-resident** — per-op
+columns stay data-sharded, but the layout tables are no longer restacked
+per shard per round (ROADMAP "sharded GIS redo-pass locality").
 
 Exactness: both engines are exact vs the scalar oracle, and every
 reduction here is integer (order-free) while every float path reuses the
@@ -112,6 +114,7 @@ class ShardedTrafficReplayer:
             delta_scale=delta_scale, use_kernel=use_kernel,
         )
         self.n_nodes = graph.n_nodes
+        self.last_redo_ops = 0  # windowed-pass rejects of the last replay
         if self.engine.kind == "bfs":
             self._build_bfs_fns()
         else:
@@ -127,15 +130,22 @@ class ShardedTrafficReplayer:
         axes = self.data_axes
         s2 = P(axes, None)
 
-        self._table_fn = jax.jit(eng._bfs_prefix_table)
+        # The deg-column prefix table is pure graph structure — built once
+        # and kept device-resident; only the cross column (parts-dependent)
+        # is recomputed per replay. In the dynamic experiment this halves
+        # the per-slice table work vs the single-device engine's fused
+        # two-column build.
+        self._one_table_fn = jax.jit(eng._bfs_prefix_one)
+        self._deg_table = self._one_table_fn(eng._deg_j)
 
-        def per_op_body(starts, levels, p):
-            return p[starts[0], levels[0]][None]  # [1, B, 2]
+        def per_op_body(starts, levels, p_deg, p_cross):
+            st, lvl = starts[0], levels[0]
+            return jnp.stack([p_deg[st, lvl], p_cross[st, lvl]], axis=-1)[None]
 
         self._per_op_fn = jax.jit(shard_map(
             per_op_body,
             mesh=self.mesh,
-            in_specs=(s2, s2, P()),
+            in_specs=(s2, s2, P(), P()),
             out_specs=P(axes, None, None),
             check_rep=False,
         ))
@@ -192,24 +202,36 @@ class ShardedTrafficReplayer:
         starts = ops.starts.astype(np.int32)
         n_ops = ops.n_ops
 
-        p = self._table_fn(jnp.asarray(cross_deg))
         per_op = np.asarray(self._per_op_fn(
-            self._shard_pad(starts, 0), self._shard_pad(levels, 0), p
+            self._shard_pad(starts, 0), self._shard_pad(levels, 0),
+            self._deg_table, self._one_table_fn(jnp.asarray(cross_deg)),
         )).reshape(-1, 2)[:n_ops]
         edges = per_op[:, 0].astype(np.int64)
         cross = per_op[:, 1].astype(np.int64)
 
-        acc = CounterAccumulator(self.n_nodes)
-        for lo, hi in self._bfs_waves(edges):
-            b = _ceil_div(hi - lo, self.n_shards)
-            valid = np.ones(hi - lo, dtype=bool)
-            acc.add(self._tm_fn(
-                self._shard_pad(starts[lo:hi], 0, b),
-                self._shard_pad(levels[lo:hi], 1, b),
-                self._shard_pad(valid, False, b),
-                eng._s_j, eng._r_j,
-            ))
-        return edges, cross, acc.total
+        # Frontier mass is (graph, ops)-pure — independent of the partition
+        # map — so the replayer keeps it resident across replays of one
+        # log: the dynamic experiment replays the same evaluation log
+        # against an evolving partition map every slice, and this is the
+        # "per-vertex traffic lives on the mesh across the cycle" leg of
+        # the device runtime (only the cross/partition counters, which do
+        # depend on parts, are recomputed per slice).
+        tm_cache = ops.__dict__.setdefault("_sharded_tm_cache", {})
+        tm = tm_cache.get(self)
+        if tm is None:
+            acc = CounterAccumulator(self.n_nodes)
+            for lo, hi in self._bfs_waves(edges):
+                b = _ceil_div(hi - lo, self.n_shards)
+                valid = np.ones(hi - lo, dtype=bool)
+                acc.add(self._tm_fn(
+                    self._shard_pad(starts[lo:hi], 0, b),
+                    self._shard_pad(levels[lo:hi], 1, b),
+                    self._shard_pad(valid, False, b),
+                    eng._s_j, eng._r_j,
+                ))
+            tm = acc.total
+            tm_cache[self] = tm
+        return edges, cross, tm
 
     # ====================================================== GIS batched SSSP
     def _build_sssp_fns(self) -> None:
@@ -242,11 +264,56 @@ class ShardedTrafficReplayer:
             check_rep=False,
         ))
 
+        # Redo (whole-graph) pass: the gather layout is op- and
+        # parts-independent, so it is replicated once — only the per-op
+        # columns (src/dst/valid/heuristic rows) are data-sharded. The old
+        # path restacked the full layout once per shard per round.
+        def solve_full_body(loc_src, loc_dst, dst_ids, valid, h,
+                            deg_w, cross_w, ids_w, nbr, w_inf,
+                            sp_s, sp_r, sp_w, delta):
+            member, edges, cross, f_dst, done = _sssp_solve_body(
+                loc_src[0], loc_dst[0], dst_ids[0], valid[0],
+                deg_w, cross_w, ids_w, nbr, w_inf, sp_s, sp_r, sp_w, h[0],
+                delta,
+                max_expansions=eng.max_expansions,
+                finite_delta=eng.delta_scale is not None,
+                use_kernel=eng.use_kernel,
+                interpret=eng.interpret,
+            )
+            return member[None], edges[None], cross[None], f_dst[None], done[None]
+
+        self._solve_full_fn = jax.jit(shard_map(
+            solve_full_body,
+            mesh=self.mesh,
+            in_specs=(s2, s2, s2, s2, s3) + (P(),) * 9,
+            out_specs=(s3, s2, s2, s2, s2),
+            check_rep=False,
+        ))
+        self._full_static_dev = None
+        self._scatter_psum_shared = None
+
         # member [S, W, C] stays device-resident between the solve and this
         # shard-local mass reduce (no communication: inputs are data-sharded).
         self._mass_fn = jax.jit(
             lambda member, okm: (member & okm[:, None, :]).sum(axis=2, dtype=jnp.int32)
         )
+
+    def _full_static(self):
+        """Device-resident replicated whole-graph layout (built once)."""
+        if self._full_static_dev is None:
+            w_pad, nbr, w_inf, sp_s, sp_r, sp_w, ids_w, deg_w = (
+                self.engine.ensure_full_layout()
+            )
+            self._full_static_dev = (
+                w_pad,
+                jnp.asarray(deg_w), jnp.asarray(ids_w),
+                jnp.asarray(nbr), jnp.asarray(w_inf),
+                jnp.asarray(sp_s), jnp.asarray(sp_r), jnp.asarray(sp_w),
+            )
+            self._scatter_psum_shared = make_scatter_psum(
+                self.mesh, self.n_nodes, self.data_axes, shared_ids=True
+            )
+        return self._full_static_dev
 
     def _stack_problems(self, probs):
         """Pad per-shard problems to common shapes and stack [S, ...]."""
@@ -284,7 +351,7 @@ class ShardedTrafficReplayer:
         acc = CounterAccumulator(self.n_nodes)
         redo: List[np.ndarray] = []
 
-        def run_pass(op_idx: np.ndarray, full: bool) -> None:
+        def run_pass(op_idx: np.ndarray) -> None:
             for lo in range(0, op_idx.shape[0], s * chunk):
                 round_idx = op_idx[lo: lo + s * chunk]
                 probs, metas = [], []
@@ -295,7 +362,7 @@ class ShardedTrafficReplayer:
                     valid = _pad_to(np.ones(idx.shape[0], bool), chunk, False)
                     if idx.shape[0]:
                         args, window, w_real, box, eff_full = eng.build_sssp_problem(
-                            srcs, dsts, valid, cross_deg, full, as_numpy=True
+                            srcs, dsts, valid, cross_deg, False, as_numpy=True
                         )
                     else:
                         # Idle shard this round: an inert all-invalid
@@ -311,7 +378,7 @@ class ShardedTrafficReplayer:
                             np.zeros(0, np.float32),
                             np.zeros((1, chunk), np.float32),
                         )
-                        window, w_real, box, eff_full = None, 0, None, full
+                        window, w_real, box, eff_full = None, 0, None, False
                     probs.append(args)
                     metas.append((idx, srcs, dsts, valid, window, w_real, box, eff_full))
 
@@ -349,10 +416,87 @@ class ShardedTrafficReplayer:
                 mass = self._mass_fn(member, jnp.asarray(ok_all))
                 acc.add(self._scatter_psum(jnp.asarray(stacked[6]), mass))
 
-        run_pass(order, full=False)
+        run_pass(order)
+        self.last_redo_ops = int(sum(r.shape[0] for r in redo))
         if redo:
-            run_pass(np.concatenate(redo), full=True)
+            self._run_full_pass(
+                ops, np.concatenate(redo), cross_deg,
+                per_op_edges, per_op_cross, acc,
+            )
         return per_op_edges, per_op_cross, acc.total
+
+    def _run_full_pass(
+        self,
+        ops,
+        op_idx: np.ndarray,
+        cross_deg: np.ndarray,
+        per_op_edges: np.ndarray,
+        per_op_cross: np.ndarray,
+        acc: CounterAccumulator,
+    ) -> None:
+        """Re-solve rejected ops on the whole graph, replicated-layout form.
+
+        The gather layout is shared by every shard (one device-resident
+        copy, not one stacked copy per shard per round); only the per-op
+        columns are packed and sharded. The solve body — and therefore
+        every float32 operation and counter — is identical to the windowed
+        pass and the single-device engine, so the pass stays bit-exact.
+        """
+        eng, s, chunk = self.engine, self.n_shards, self.engine.chunk
+        w_pad, deg_w_d, ids_w_d, nbr_d, w_inf_d, sp_s_d, sp_r_d, sp_w_d = (
+            self._full_static()
+        )
+        cross_w = np.zeros(w_pad, dtype=np.int32)
+        cross_w[: self.n_nodes] = cross_deg
+        cross_w_d = jnp.asarray(cross_w)
+        for lo in range(0, op_idx.shape[0], s * chunk):
+            round_idx = op_idx[lo: lo + s * chunk]
+            per_op, metas = [], []
+            for sh in range(s):
+                idx = round_idx[sh * chunk: (sh + 1) * chunk]
+                srcs = _pad_to(ops.starts[idx], chunk, 0)
+                dsts = _pad_to(ops.ends[idx], chunk, 0)
+                valid = _pad_to(np.ones(idx.shape[0], bool), chunk, False)
+                if idx.shape[0]:
+                    loc_src, loc_dst, dst_ids, h = eng.full_per_op(
+                        srcs, dsts, valid, as_numpy=True
+                    )
+                    per_op.append((loc_src, loc_dst, dst_ids, valid, h))
+                else:
+                    per_op.append((
+                        np.zeros(chunk, np.int32), np.zeros(chunk, np.int32),
+                        np.zeros(chunk, np.int32), valid,
+                        np.zeros((w_pad, chunk), np.float32),
+                    ))
+                metas.append((idx, srcs, dsts, valid))
+
+            stacked = tuple(np.stack(col) for col in zip(*per_op))
+            member, edges, cross, f_dst, done = self._solve_full_fn(
+                *stacked, deg_w_d, cross_w_d, ids_w_d, nbr_d, w_inf_d,
+                sp_s_d, sp_r_d, sp_w_d, jnp.float32(eng.delta),
+            )
+            if not np.asarray(done).all():
+                raise RuntimeError(
+                    "sharded SSSP hit its round cap before all ops "
+                    "settled; raise delta_scale (or use delta_scale=None)"
+                )
+            edges_h = np.asarray(edges, dtype=np.int64)
+            cross_h = np.asarray(cross, dtype=np.int64)
+            f_dst_h = np.asarray(f_dst, dtype=np.float64)
+
+            ok_all = np.zeros((s, chunk), dtype=bool)
+            for sh, (idx, srcs, dsts, valid) in enumerate(metas):
+                if not idx.shape[0]:
+                    continue
+                ok = eng.window_accept(srcs, dsts, valid, f_dst_h[sh], None, True)
+                ok_all[sh] = ok
+                nsh = idx.shape[0]
+                accepted = idx[ok[:nsh]]
+                per_op_edges[accepted] = edges_h[sh, :nsh][ok[:nsh]]
+                per_op_cross[accepted] = cross_h[sh, :nsh][ok[:nsh]]
+
+            mass = self._mass_fn(member, jnp.asarray(ok_all))
+            acc.add(self._scatter_psum_shared(ids_w_d, mass))
 
     # ------------------------------------------------------------------ run
     def replay(self, ops, parts: np.ndarray, k: int):

@@ -43,24 +43,31 @@ def make_scatter_psum(
     mesh: Mesh,
     n_rows: int,
     data_axes: Tuple[str, ...] = ("data",),
+    shared_ids: bool = False,
 ) -> Callable[[jax.Array, jax.Array], jax.Array]:
-    """Return a jitted ``(ids [S, W], mass [S, W] int32) -> [n_rows] int32``.
+    """Return a jitted ``(ids, mass [S, W] int32) -> [n_rows] int32``.
 
-    Each data shard owns one row of ``ids``/``mass``; the result is the
-    dense global scatter-add, identical (replicated) on every shard.
+    Each data shard owns one row of ``mass``; the result is the dense
+    global scatter-add, identical (replicated) on every shard.
     Out-of-range ids are dropped — pad with ``n_rows`` (or any id ≥
     ``n_rows``) to make padding inert.
+
+    ``ids`` is ``[S, W]`` (one row per shard) by default; with
+    ``shared_ids=True`` it is one replicated ``[W]`` row every shard
+    scatters through — the shape of the sharded replayer's whole-graph
+    redo pass, where all shards solve on the same replicated layout.
     """
     from jax.experimental.shard_map import shard_map
 
     def body(ids, mass):
-        local = jnp.zeros((n_rows,), jnp.int32).at[ids[0]].add(mass[0], mode="drop")
+        row = ids if shared_ids else ids[0]
+        local = jnp.zeros((n_rows,), jnp.int32).at[row].add(mass[0], mode="drop")
         return jax.lax.psum(local, data_axes)
 
     smapped = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(data_axes, None), P(data_axes, None)),
+        in_specs=(P() if shared_ids else P(data_axes, None), P(data_axes, None)),
         out_specs=P(),
         check_rep=False,
     )

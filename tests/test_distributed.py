@@ -175,10 +175,29 @@ _DIDIC_DISTRIBUTED = textwrap.dedent("""
     cfg = DidicConfig(k=4, iterations=40)
     parts_d, _ = didic_partition_distributed(g, cfg, mesh, ("data",), seed=0)
     parts_h, _ = didic_partition(g, cfg, seed=0)
+
+    # Sharded maintenance (ISSUE 3): halo-exchange refine repairs damage
+    # with its diffusion state carried on the mesh between calls.
+    from repro.core.didic_distributed import didic_refine_distributed
+    rng = np.random.default_rng(0)
+    damaged = parts_d.copy()
+    idx = rng.choice(g.n_nodes, size=g.n_nodes // 4, replace=False)
+    damaged[idx] = rng.integers(0, 4, size=idx.shape[0])
+    cut_damaged = metrics.edge_cut_fraction(g, damaged)
+    repaired, state = didic_refine_distributed(g, damaged, cfg, mesh, ("data",),
+                                               iterations=1)
+    cut_repaired = metrics.edge_cut_fraction(g, repaired)
+    repaired2, _ = didic_refine_distributed(g, repaired, cfg, mesh, ("data",),
+                                            state=state, iterations=1)
+    cut_repaired2 = metrics.edge_cut_fraction(g, repaired2)
+
     print(json.dumps({
         "cut_distributed": metrics.edge_cut_fraction(g, parts_d),
         "cut_host": metrics.edge_cut_fraction(g, parts_h),
         "sizes": np.bincount(parts_d, minlength=4).tolist(),
+        "cut_damaged": cut_damaged,
+        "cut_repaired": cut_repaired,
+        "cut_repaired2": cut_repaired2,
     }))
 """)
 
@@ -198,6 +217,11 @@ class TestDistributedDidic:
         assert res["cut_distributed"] < 0.25
         assert res["cut_distributed"] < max(2.5 * res["cut_host"], 0.1)
         assert min(res["sizes"]) > 0
+        # sharded maintenance repairs most of the 25 % damage, and a
+        # second refine on the carried mesh state does not regress
+        assert res["cut_damaged"] > 2 * res["cut_distributed"]
+        assert res["cut_repaired"] < 0.5 * res["cut_damaged"]
+        assert res["cut_repaired2"] < res["cut_damaged"]
 
 
 class TestExpertPlacement:

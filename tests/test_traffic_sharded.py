@@ -93,6 +93,42 @@ _SHARDED_EQUIVALENCE = textwrap.dedent("""
     out["int64_boundary_closed_form"] = bool(np.array_equal(got.per_vertex, pv_want))
     out["int64_boundary_vs_batched"] = equal(got, ref)
 
+    # --- replicated-layout redo pass (ISSUE 3 satellite) -------------------
+    # Detour graph: src/dst are close in space but the only route climbs a
+    # long chain, so f_dst blows past the windowed pass's margin -> the
+    # windowed solve must reject and the whole-graph redo pass (one
+    # device-resident replicated layout, per-op columns sharded) must
+    # reproduce the engine bit-for-bit.
+    from repro.core.traffic_sharded import ShardedTrafficReplayer
+    pts = (
+        [(0.0, float(y)) for y in range(0, 61)]
+        + [(float(x), 60.0) for x in range(1, 3)]
+        + [(2.0, float(y)) for y in range(59, -1, -1)]
+        + [(0.1 * i, -0.5) for i in range(20)]
+    )
+    pts = np.array(pts, dtype=np.float32)
+    chain_len, blob0 = 63 + 60, 123
+    es, er = list(range(chain_len - 1)), list(range(1, chain_len))
+    es += list(range(blob0, blob0 + 19)) + [0]
+    er += list(range(blob0 + 1, blob0 + 20)) + [blob0]
+    ew = np.hypot(*(pts[er] - pts[es]).T).astype(np.float32)
+    detour = Graph(n_nodes=pts.shape[0], senders=np.array(es, np.int64),
+                   receivers=np.array(er, np.int64), edge_weight=ew,
+                   name="detour")
+    detour.node_attrs["lon"] = pts[:, 0].astype(np.float64)
+    detour.node_attrs["lat"] = pts[:, 1].astype(np.float64)
+    dst = chain_len - 1
+    ops = OpLog("gis_short",
+                np.array([0, blob0, blob0 + 2, 0, blob0 + 5, 1], np.int64),
+                np.array([dst, blob0 + 10, blob0 + 4, blob0 + 19, dst, dst], np.int64),
+                t_l=8, t_pg=1)
+    parts = (np.arange(detour.n_nodes) % 4).astype(np.int64)
+    rep = ShardedTrafficReplayer(detour, "gis_short", mesh, chunk=2)
+    got = rep.replay(ops, parts, 4)
+    ref = execute_ops(detour, ops, parts, 4, engine="batched")
+    out["redo_pass_exercised"] = rep.last_redo_ops > 0
+    out["redo_pass_bit_equal"] = equal(got, ref)
+
     print(json.dumps(out))
 """)
 
@@ -132,6 +168,10 @@ class TestShardedReplay:
         assert results["int64_boundary_exceeds_int32"]
         assert results["int64_boundary_closed_form"]
         assert results["int64_boundary_vs_batched"]
+
+    def test_replicated_layout_redo_pass(self, results):
+        assert results["redo_pass_exercised"]
+        assert results["redo_pass_bit_equal"]
 
 
 class TestCounterPrimitives:
