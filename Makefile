@@ -10,19 +10,23 @@
 #   make traffic-smoke-dist  sharded replay smoke, 2-shard CPU mesh
 #   make dynamic-smoke-dist  dynamic-experiment smoke, 8-shard CPU mesh
 #                            (device runtime vs host loop, bit-exact parity)
+#   make dynamic-resident-smoke  resident-replay smoke, 8-shard CPU mesh
+#                            (cold vs resident bit-equality per slice +
+#                            structural-insert partial redo)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
 #                            (add WRITE=--write-baseline to any full bench
 #                            to refresh benchmarks/BENCH_traffic.json)
 #   make check               test + traffic-smoke + traffic-smoke-dist
-#                            + dynamic-smoke-dist
+#                            + dynamic-smoke-dist + dynamic-resident-smoke
 
 PY := PYTHONPATH=src python
 WRITE :=
 
 .PHONY: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	traffic-bench traffic-bench-dist dynamic-bench-dist check
+	dynamic-resident-smoke traffic-bench traffic-bench-dist \
+	dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,6 +42,10 @@ dynamic-smoke-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --dynamic-smoke
 
+dynamic-resident-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --dynamic-resident-smoke
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -49,4 +57,5 @@ dynamic-bench-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
-check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist
+check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
+	dynamic-resident-smoke

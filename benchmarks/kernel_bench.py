@@ -14,6 +14,9 @@ Usage:
   python -m benchmarks.kernel_bench --dynamic       # dynamic-experiment bench
       (host loop vs device runtime, bit-exact parity asserted per slice)
   python -m benchmarks.kernel_bench --dynamic-smoke # parity + rate smoke
+  python -m benchmarks.kernel_bench --dynamic-resident-smoke  # resident replay
+      parity smoke: cold vs resident bit-equality per slice, plus a
+      structural-insert partial-redo leg
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
@@ -87,7 +90,45 @@ def bench_rows() -> List[str]:
     f_attn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
     us4 = _time(f_attn, q, k, v)
     rows.append(f"kernel/attention_ref/us_per_call,{us4:.1f},BH=8 T=512 Dh=64 GQA2")
+
+    # Unrolled dynamism scan (dynamic-experiment hot path; ROADMAP tracks
+    # the µs/unit figure — the pre-unroll scan sat at ~10 µs/unit on CPU)
+    for method, us in scan_us_per_unit().items():
+        rows.append(
+            f"dynamism/{method}/scan_us_per_unit,{us:.2f},"
+            f"4096 units n=50000 k=4 unroll={_scan_unroll()}"
+        )
     return rows
+
+
+def _scan_unroll() -> int:
+    from repro.core.dynamic_runtime import _SCAN_UNROLL
+
+    return _SCAN_UNROLL
+
+
+def scan_us_per_unit(n: int = 50_000, units: int = 4096, k: int = 4,
+                     reps: int = 5) -> Dict[str, float]:
+    """µs per move unit of the device dynamism scan, per insert method."""
+    from repro.core.dynamic_runtime import scan_dynamism_targets
+
+    rng = np.random.default_rng(0)
+    parts = rng.integers(0, k, size=n).astype(np.int64)
+    movers = rng.integers(0, n, size=units)
+    vt = rng.integers(0, 1 << 30, size=n)
+    out = {}
+    for method, kw in (
+        ("fewest_vertices", {}),
+        ("least_traffic", {"vertex_traffic": vt}),
+    ):
+        scan_dynamism_targets(parts, movers, method, k, **kw)  # warm
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            scan_dynamism_targets(parts, movers, method, k, **kw)
+            best = min(best, time.perf_counter() - t0)
+        out[method] = round(best / units * 1e6, 3)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -217,10 +258,13 @@ def traffic_dist_bench(
                 raise AssertionError(
                     f"{pattern}: sharded != batched on {field} — benchmark void"
                 )
+        # resident=False: this bench measures the *cold* sharded solve
+        # (comparable across PRs); the resident fold's cross-slice win is
+        # what the dynamic bench and resident smoke record.
         best = np.inf
         for _ in range(reps):
             t0 = time.perf_counter()
-            replay_sharded(g, ops, mesh, parts, 4)
+            replay_sharded(g, ops, mesh, parts, 4, resident=False)
             best = min(best, time.perf_counter() - t0)
 
         out[pattern] = {
@@ -310,6 +354,7 @@ def dynamic_bench(
         run(build(mesh))
         device_s = min(device_s, time.perf_counter() - t0)
 
+    scan_us = scan_us_per_unit()
     return {"filesystem": {
         "scale": scale,
         "n_ops": n_ops,
@@ -319,6 +364,8 @@ def dynamic_bench(
         "shards": shards,
         "host_slices_per_s": round(n_slices / host_s, 2),
         "device_slices_per_s": round(n_slices / device_s, 2),
+        "scan_us_per_unit": scan_us,
+        "scan_unroll": _scan_unroll(),
         "parity": True,
     }}
 
@@ -330,6 +377,96 @@ def dynamic_rows(results: Dict[str, Dict[str, float]]) -> List[str]:
                 f"shards={r['shards']} scale={r['scale']} (bit-exact parity)")
         rows.append(f"dynamic/{name}/host_slices_per_s,{r['host_slices_per_s']},{note}")
         rows.append(f"dynamic/{name}/device_slices_per_s,{r['device_slices_per_s']},{note}")
+        for method, us in r.get("scan_us_per_unit", {}).items():
+            rows.append(
+                f"dynamic/{name}/scan_us_per_unit/{method},{us},"
+                f"unroll={r.get('scan_unroll')}"
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Resident replay: cold vs resident bit-equality smoke (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+def dynamic_resident_smoke(scale: float = 0.004) -> List[str]:
+    """Resident-path parity smoke on a mesh over every visible device.
+
+    Replays one log against a dynamically-churned partition map: the
+    first replay cold-captures the :class:`ResidentReplayState`, every
+    later one takes the resident fold — each compared **bit-for-bit** on
+    all four counters against a forced cold solve (``resident=False``).
+    A structural-insert leg then dirties two vertices, forcing a partial
+    redo through the replicated layout, and compares again. Raises on any
+    mismatch; returns rate rows.
+    """
+    from repro.core import partitioners
+    from repro.core.dynamism import apply_dynamism, generate_dynamism
+    from repro.core.traffic import generate_ops
+    from repro.core.traffic_sharded import (
+        get_replayer, migrate_resident_states, replay_sharded,
+    )
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+
+    def check(got, ref, what: str) -> None:
+        for f in fields:
+            if not np.array_equal(getattr(got, f), getattr(ref, f)):
+                raise AssertionError(f"resident != cold on {what} {f} — smoke void")
+
+    rows = []
+    for dataset, pattern, n_ops in (
+        ("filesystem", "filesystem", 3_000),
+        ("gis", "gis_short", 300),
+    ):
+        g = datasets.load(dataset, scale=scale)
+        ops = generate_ops(g, n_ops=n_ops, seed=0, pattern=pattern)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+        got = replay_sharded(g, ops, mesh, parts, 4)  # cold capture (+compile)
+        check(got, replay_sharded(g, ops, mesh, parts, 4, resident=False),
+              f"{pattern} slice 0")
+        best = cold_best = np.inf
+        for i in range(1, 4):
+            log = generate_dynamism(parts, 0.05, "random", k=4, seed=i)
+            parts = apply_dynamism(parts, log)
+            t0 = time.perf_counter()
+            got = replay_sharded(g, ops, mesh, parts, 4)  # resident fold
+            best = min(best, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ref = replay_sharded(g, ops, mesh, parts, 4, resident=False)
+            cold_best = min(cold_best, time.perf_counter() - t0)  # warm cold
+            check(got, ref, f"{pattern} slice {i}")
+        rows.append(
+            f"resident/{pattern}/replay_speedup,{cold_best / best:.2f},"
+            f"warm cold {cold_best * 1e3:.1f}ms vs resident {best * 1e3:.1f}ms "
+            f"shards={shards} (bit-exact x3 slices)"
+        )
+        if pattern != "gis_short":
+            continue
+        # Structural leg: insert an edge touching one op's source — only
+        # the touched ops may re-solve, and the result must equal a full
+        # cold solve on the updated graph.
+        u, v = int(ops.starts[0]), int(ops.ends[-1])
+        lon = g.node_attrs["lon"]
+        lat = g.node_attrs["lat"]
+        w = np.float32(np.hypot(lon[u] - lon[v], lat[u] - lat[v]) + 1e-6)
+        g2 = g.with_edges([u], [v], [w])
+        migrate_resident_states(ops, g, g2, np.array([u, v]))
+        got = replay_sharded(g2, ops, mesh, parts, 4)  # partial redo
+        redo = get_replayer(g2, pattern, mesh).last_redo_ops
+        check(got, replay_sharded(g2, ops, mesh, parts, 4, resident=False),
+              f"{pattern} structural insert")
+        if not 0 < redo < n_ops:
+            raise AssertionError(
+                f"structural redo should be partial, got {redo}/{n_ops}"
+            )
+        rows.append(
+            f"resident/{pattern}/structural_redo_ops,{redo},"
+            f"of {n_ops} after 1 edge insert (bit-exact vs cold)"
+        )
     return rows
 
 
@@ -348,6 +485,9 @@ def main() -> None:
                     help="dynamic-experiment bench: host loop vs device runtime")
     ap.add_argument("--dynamic-smoke", action="store_true",
                     help="dynamic-experiment parity + rate smoke")
+    ap.add_argument("--dynamic-resident-smoke", action="store_true",
+                    help="resident replay parity smoke (cold vs resident "
+                         "bit-equality, incl. structural-insert redo)")
     ap.add_argument("--scale", type=float, default=0.004)
     ap.add_argument("--write-baseline", action="store_true",
                     help="write results to benchmarks/BENCH_traffic.json")
@@ -387,6 +527,9 @@ def main() -> None:
             if args.traffic_dist_smoke:
                 raise SystemExit("--write-baseline requires the full --traffic-dist run")
             write_baseline({"sharded": results})
+    elif args.dynamic_resident_smoke:
+        for row in dynamic_resident_smoke(scale=args.scale):
+            print(row)
     elif args.dynamic or args.dynamic_smoke:
         results = dynamic_bench(scale=args.scale, smoke=args.dynamic_smoke)
         for row in dynamic_rows(results):

@@ -45,6 +45,29 @@ halo-exchange DiDiC is float32-sum-order different from the
 single-device refine (same algorithm, different reduction association),
 so that mode trades bit-parity for mesh scalability and is validated by
 quality tests instead.
+
+Resident replay state (ISSUE 4 tentpole)
+----------------------------------------
+Each replay the cycle issues goes through
+:class:`repro.core.traffic_sharded.ResidentReplayState`, which keeps one
+log's solve artifacts device-resident across every slice of a dynamic
+run. Its lifecycle splits three ways:
+
+* **graph-pure** (solved once per (graph, log), reused for every slice):
+  GIS window membership/footprint masks ``[S, W, C]`` with their window
+  ids, per-op edge counts, BFS per-op expansion levels and the per-vertex
+  frontier mass ``tm`` — none of these read the partition map.
+* **parts-dependent** (recomputed every slice from the current map):
+  cross-degree, the per-op cross counters (an integer
+  ``member × cross_w`` fold over the resident masks — order-free, hence
+  bit-identical to the cold solve), and the finalize-side
+  per-partition/per-vertex attribution.
+* **slice-dirty** (invalidated by a slice's *structural* inserts): a
+  :class:`~repro.core.dynamism.DynamismLog` that inserts edges dirties
+  exactly the vertices it touches; ops whose expansion footprint
+  intersects that set are re-solved through the replicated whole-graph
+  redo layout on the next replay, and everything else stays resident.
+  Pure partition moves — the generator's entire output — dirty nothing.
 """
 
 from __future__ import annotations
@@ -79,6 +102,23 @@ _DIGIT_BITS = 20
 _DIGIT = np.int32(1 << _DIGIT_BITS)
 _VALUE_CEIL = 1 << (31 + _DIGIT_BITS)
 
+# Move units processed per lax.scan step. The sequential oracles are pure
+# dispatch overhead on CPU (~10 µs/unit at unroll 1 — every step is one
+# tiny argmin + two scatters behind a while-loop trip); unrolling amortizes
+# the dispatch over _SCAN_UNROLL units while keeping the *sequence* of
+# (argmin, update) operations — and therefore every target — bit-identical.
+# The tail is masked: dead sub-steps add 0 and leave the carry untouched.
+#
+# The scans deliberately carry NO [N]-sized partition map. A unit only ever
+# reads ``cur[v]`` for its own mover, and that value is either the mover's
+# *initial* partition or the target of its previous move — an index into
+# the targets emitted so far. Previous-occurrence indices are a pure
+# function of the mover sequence, computed vectorized on the host
+# (:func:`_unroll_blocks`), so the device state is just the k-sized
+# counters plus the [units] target buffer: per-unit work is O(k + unroll),
+# independent of graph size.
+_SCAN_UNROLL = 8
+
 
 def _split_digits(x64: np.ndarray):
     """int64 ≥ 0 → (hi, lo) int32 digits with ``x = hi·2²⁰ + lo``."""
@@ -87,34 +127,99 @@ def _split_digits(x64: np.ndarray):
     return hi, lo
 
 
+def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
+                   extra: Tuple[np.ndarray, ...] = ()) -> np.ndarray:
+    """Host-side block prep for the unrolled scans.
+
+    Returns one packed int32 array ``[T/U, 4 + len(extra), U]`` — a
+    *single* device transfer per call (per-call transfer count dominates
+    the dynamic cycle's insert leg at real slice sizes). Rows per block:
+    ``src0`` (each mover's initial partition), ``prev_in`` (in-block
+    offset of the mover's previous move, −1 if none), ``prev_out`` (its
+    absolute index when in an earlier block, −1 otherwise), ``live`` (the
+    tail mask), then any ``extra`` per-unit rows (the least-traffic
+    digits).
+    """
+    u = _SCAN_UNROLL
+    movers = np.asarray(movers, dtype=np.int64)
+    units = movers.shape[0]
+    # prev[j] = latest j' < j with movers[j'] == movers[j], else -1
+    # (stable sort groups occurrences of one mover in index order).
+    order = np.lexsort((np.arange(units), movers))
+    sm = movers[order]
+    prev = np.full(units, -1, dtype=np.int64)
+    if units > 1:
+        same = sm[1:] == sm[:-1]
+        prev[order[1:][same]] = order[:-1][same]
+    j0s = (np.arange(units) // u) * u
+    in_block = prev >= j0s
+    prev_in = np.where(in_block, prev - j0s, -1)
+    prev_out = np.where(~in_block & (prev >= 0), prev, -1)
+
+    rows = (
+        np.asarray(parts, dtype=np.int64)[movers], prev_in, prev_out,
+        np.ones(units, dtype=np.int64),
+    ) + tuple(extra)
+    pad = (-units) % u
+    packed = np.zeros((len(rows), units + pad), dtype=np.int32)
+    packed[2, units:] = -1  # padded prev_out must stay "none"
+    for i, row in enumerate(rows):
+        packed[i, :units] = row
+    return packed.reshape(len(rows), -1, u).transpose(1, 0, 2)
+
+
+def _block_src(buf, blk, ts, j):
+    """The mover's current partition as the sequential oracle sees it:
+    its previous move's target (this block: a few scalar selects; earlier
+    blocks: one read of the target buffer), else its initial partition."""
+    src = jnp.where(blk[2, j] >= 0, buf[jnp.maximum(blk[2, j], 0)], blk[0, j])
+    for jp in range(j):
+        src = jnp.where(blk[1, j] == jp, ts[jp], src)
+    return src
+
+
 @jax.jit
-def _fewest_vertices_scan(cur0, counts0, movers):
-    """Sequential fewest-vertices oracle as one scan over move units.
+def _fewest_vertices_scan(counts0, packed):
+    """Sequential fewest-vertices oracle, ``_SCAN_UNROLL`` units per step.
 
     ``jnp.argmin`` and ``np.argmin`` both return the *first* minimum, so
     the tie-breaks — the only freedom in the policy — match the host loop
     exactly; counts are integers, so everything else is exact arithmetic.
+    A dead (tail-mask) sub-step adds 0 to the counts, so the live prefix
+    sees the exact sequential state.
     """
+    n_pad = packed.shape[0] * _SCAN_UNROLL
+    buf0 = jnp.zeros((max(n_pad, _SCAN_UNROLL),), jnp.int32)
 
-    def step(carry, v):
-        counts, cur = carry
-        t = jnp.argmin(counts).astype(jnp.int32)
-        counts = counts.at[cur[v]].add(-1).at[t].add(1)
-        cur = cur.at[v].set(t)
-        return (counts, cur), t
+    def step(carry, blk):
+        counts, buf, base = carry
+        ts = []
+        for j in range(_SCAN_UNROLL):
+            src = _block_src(buf, blk, ts, j)
+            t = jnp.argmin(counts).astype(jnp.int32)
+            inc = blk[3, j]  # live mask as 0/1
+            counts = counts.at[src].add(-inc).at[t].add(inc)
+            ts.append(t)
+        buf = jax.lax.dynamic_update_slice(buf, jnp.stack(ts), (base,))
+        return (counts, buf, base + _SCAN_UNROLL), None
 
-    (_, _), targets = jax.lax.scan(step, (counts0, cur0), movers)
-    return targets
+    (_, buf, _), _ = jax.lax.scan(
+        step, (counts0, buf0, jnp.int32(0)), packed
+    )
+    return buf[:n_pad]
 
 
 @jax.jit
-def _least_traffic_scan(cur0, tr_hi0, tr_lo0, vt_hi, vt_lo, movers):
-    """Sequential least-traffic oracle as one scan, in digit arithmetic.
+def _least_traffic_scan(tr_hi0, tr_lo0, packed):
+    """Sequential least-traffic oracle, unrolled, in digit arithmetic.
 
     Per-partition traffic is ``hi·2²⁰ + lo`` with ``0 ≤ lo < 2²⁰`` (the
-    carry is normalized every step), so lexicographic ``(hi, lo)`` order
-    equals numeric order and the first-lex-min below reproduces
-    ``np.argmin`` over the oracle's float64 totals bit-for-bit.
+    carry is normalized every sub-step), so lexicographic ``(hi, lo)``
+    order equals numeric order and the first-lex-min below reproduces
+    ``np.argmin`` over the oracle's float64 totals bit-for-bit. Dead
+    sub-steps move 0 traffic, so the normalization is a no-op there.
+    ``packed`` rows 4/5 carry the movers' traffic digits (host-gathered —
+    every scan input is [units]-sized, never [N]-sized).
     """
 
     def lex_argmin(hi, lo):
@@ -123,20 +228,30 @@ def _least_traffic_scan(cur0, tr_hi0, tr_lo0, vt_hi, vt_lo, movers):
         m_lo = jnp.min(jnp.where(cand, lo, jnp.int32(_DIGIT)))
         return jnp.argmax(cand & (lo == m_lo)).astype(jnp.int32)
 
-    def step(carry, v):
-        hi, lo, cur = carry
-        t = lex_argmin(hi, lo)
-        src = cur[v]
-        lo = lo.at[src].add(-vt_lo[v]).at[t].add(vt_lo[v])
-        hi = hi.at[src].add(-vt_hi[v]).at[t].add(vt_hi[v])
-        carry_d = jnp.floor_divide(lo, _DIGIT)  # ∈ {-1, 0, 1} by construction
-        lo = lo - carry_d * _DIGIT
-        hi = hi + carry_d
-        cur = cur.at[v].set(t)
-        return (hi, lo, cur), t
+    n_pad = packed.shape[0] * _SCAN_UNROLL
+    buf0 = jnp.zeros((max(n_pad, _SCAN_UNROLL),), jnp.int32)
 
-    (_, _, _), targets = jax.lax.scan(step, (tr_hi0, tr_lo0, cur0), movers)
-    return targets
+    def step(carry, blk):
+        hi, lo, buf, base = carry
+        ts = []
+        for j in range(_SCAN_UNROLL):
+            src = _block_src(buf, blk, ts, j)
+            t = lex_argmin(hi, lo)
+            inc = blk[3, j]  # live mask as 0/1
+            d_hi, d_lo = blk[4, j] * inc, blk[5, j] * inc
+            lo = lo.at[src].add(-d_lo).at[t].add(d_lo)
+            hi = hi.at[src].add(-d_hi).at[t].add(d_hi)
+            carry_d = jnp.floor_divide(lo, _DIGIT)  # ∈ {-1, 0, 1} by construction
+            lo = lo - carry_d * _DIGIT
+            hi = hi + carry_d
+            ts.append(t)
+        buf = jax.lax.dynamic_update_slice(buf, jnp.stack(ts), (base,))
+        return (hi, lo, buf, base + _SCAN_UNROLL), None
+
+    (_, _, buf, _), _ = jax.lax.scan(
+        step, (tr_hi0, tr_lo0, buf0, jnp.int32(0)), packed
+    )
+    return buf[:n_pad]
 
 
 def scan_dynamism_targets(
@@ -154,13 +269,14 @@ def scan_dynamism_targets(
     for :attr:`TrafficResult.per_vertex` int64 counts); anything else
     raises rather than silently degrading exactness.
     """
-    n = parts.shape[0]
-    cur0 = jnp.asarray(np.asarray(parts, dtype=np.int32))
-    movers_j = jnp.asarray(np.asarray(movers, dtype=np.int32))
+    movers = np.asarray(movers)
+    units = int(movers.shape[0])
     if method == "fewest_vertices":
         counts0 = np.bincount(parts, minlength=k).astype(np.int32)
-        targets = _fewest_vertices_scan(cur0, jnp.asarray(counts0), movers_j)
-        return np.asarray(targets, dtype=np.int32)
+        targets = _fewest_vertices_scan(
+            jnp.asarray(counts0), jnp.asarray(_unroll_blocks(movers, parts))
+        )
+        return np.asarray(targets, dtype=np.int32)[:units]
     if method != "least_traffic":
         raise ValueError(f"no device scan for insert method {method!r}")
     if vertex_traffic is None:
@@ -179,14 +295,12 @@ def scan_dynamism_targets(
     tr0 = np.zeros(k, dtype=np.int64)
     np.add.at(tr0, np.asarray(parts, dtype=np.int64), vt64)
     tr_hi0, tr_lo0 = _split_digits(tr0)
-    vt_hi, vt_lo = _split_digits(vt64)
+    vt_hi, vt_lo = _split_digits(vt64[movers.astype(np.int64)])
     targets = _least_traffic_scan(
-        cur0,
         jnp.asarray(tr_hi0), jnp.asarray(tr_lo0),
-        jnp.asarray(vt_hi), jnp.asarray(vt_lo),
-        movers_j,
+        jnp.asarray(_unroll_blocks(movers, parts, extra=(vt_hi, vt_lo))),
     )
-    return np.asarray(targets, dtype=np.int32)
+    return np.asarray(targets, dtype=np.int32)[:units]
 
 
 # ===========================================================================
@@ -278,6 +392,11 @@ class DynamicExperimentRuntime:
                     self.scheduler, step=i, iterations=iterations
                 )
             result = svc.run_ops(ops)
+            if maintained:
+                # The degradation check must be judged against what the
+                # current graph can achieve, not the first-ever quality
+                # (which a long run can never get back to).
+                self.scheduler.record_maintenance(result.percent_global)
             if on_slice is not None:
                 on_slice(i, result)
             records.append(SliceRecord(

@@ -38,10 +38,43 @@ class DynamismLog:
     targets: np.ndarray    # [units] destination partition
     method: str
     k: int
+    # Optional structural inserts: edges written during the slice. The
+    # paper's insert-partitioner allocates *new* entities at write time;
+    # pure-move logs (the generator's output) model that as partition-map
+    # churn only, but a slice may additionally carry inserted edges. Only
+    # these dirty the graph-pure replay artifacts (GIS expansion sets, BFS
+    # frontier mass) that the resident replay path keeps device-resident —
+    # partition moves never do, because those artifacts do not read the
+    # partition map.
+    insert_senders: Optional[np.ndarray] = None    # [inserts] int
+    insert_receivers: Optional[np.ndarray] = None  # [inserts] int
+    insert_weights: Optional[np.ndarray] = None    # [inserts] float32
 
     @property
     def units(self) -> int:
         return int(self.vertices.shape[0])
+
+    @property
+    def structural(self) -> bool:
+        """True when the log inserts edges (changes graph structure)."""
+        return (
+            self.insert_senders is not None
+            and np.asarray(self.insert_senders).shape[0] > 0
+        )
+
+    def dirty_vertices(self) -> np.ndarray:
+        """Vertices whose *graph structure* this log changes.
+
+        The resident replay path re-solves exactly the ops whose expansion
+        footprint touches one of these; partition moves contribute nothing
+        here because graph-pure artifacts never read the partition map.
+        """
+        if not self.structural:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(np.concatenate([
+            np.asarray(self.insert_senders, dtype=np.int64),
+            np.asarray(self.insert_receivers, dtype=np.int64),
+        ]))
 
     def _endpoint(self, frac: float) -> int:
         """Map a fraction to a unit index so that *equal rationals map to
@@ -60,6 +93,10 @@ class DynamismLog:
         Consecutive slices partition the log exactly: ``slice(a, b)`` and
         ``slice(b', c)`` share their boundary unit whenever ``b`` and
         ``b'`` are float renderings of the same fraction."""
+        if self.structural:
+            # Structural inserts have no per-unit attribution, so a
+            # sub-slice would silently drop or double-apply them.
+            raise ValueError("structural dynamism logs cannot be sub-sliced")
         lo = self._endpoint(start_frac)
         hi = self._endpoint(stop_frac)
         return DynamismLog(self.vertices[lo:hi], self.targets[lo:hi], self.method, self.k)

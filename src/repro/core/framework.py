@@ -195,19 +195,37 @@ class MigrationScheduler:
     Decides when the Partition-Mapping produced by runtime partitioning is
     applied. Policy: migrate when the fraction of vertices wanting to move
     exceeds ``min_move_fraction`` AND the observed global-traffic share has
-    degraded ``degradation_factor``× over the best seen (or on an explicit
-    interval — the paper's Dynamic experiment uses a fixed interval).
+    degraded ``degradation_factor``× over the **post-maintenance baseline**
+    (or on an explicit interval — the paper's Dynamic experiment uses a
+    fixed interval).
+
+    The baseline resets every time maintenance runs
+    (:meth:`record_maintenance`). Comparing against the first-ever/best
+    measurement instead — the old behaviour — permanently locks a long
+    dynamic run into migration once the graph has drifted past what
+    maintenance can recover: every slice reads as "degraded" relative to a
+    quality level that no longer exists.
     """
 
     def __init__(self, min_move_fraction: float = 0.002, degradation_factor: float = 1.25):
         self.min_move_fraction = min_move_fraction
         self.degradation_factor = degradation_factor
-        self.best_percent_global = np.inf
+        self.baseline_percent_global = np.inf
         self.history: List[Dict] = []
 
     def should_migrate(self, percent_global: float) -> bool:
-        self.best_percent_global = min(self.best_percent_global, percent_global)
-        return percent_global > self.best_percent_global * self.degradation_factor
+        self.baseline_percent_global = min(self.baseline_percent_global, percent_global)
+        return percent_global > self.baseline_percent_global * self.degradation_factor
+
+    def record_maintenance(self, percent_global: float) -> None:
+        """Reset the degradation baseline to a post-maintenance measurement.
+
+        Callers (the dynamic-experiment runtime) invoke this with the
+        traffic share measured right after a maintenance pass, so
+        :meth:`should_migrate` judges degradation relative to what the
+        *current* graph can achieve, not the first-ever measurement.
+        """
+        self.baseline_percent_global = float(percent_global)
 
     def plan(
         self, old_parts: np.ndarray, new_parts: np.ndarray, step: int = 0
@@ -275,6 +293,9 @@ class PartitionedGraphService:
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.parts = np.zeros(graph.n_nodes, dtype=np.int32)
+        # Evaluation logs served so far: structural dynamism must migrate
+        # their device-resident replay state onto the updated graph.
+        self._replayed_logs: List[OpLog] = []
         self.logger = RuntimeLogger(k)
         maint_mesh = mesh if maintenance in ("auto", "sharded") else None
         self.runtime = RuntimePartitioner(
@@ -327,21 +348,32 @@ class PartitionedGraphService:
         return int(sum(c.vertices.shape[0] for c in cmds))
 
     # -- workload -----------------------------------------------------------
-    def run_ops(self, ops: OpLog, engine: str = "auto") -> TrafficResult:
+    def run_ops(self, ops: OpLog, engine: str = "auto",
+                resident: bool = True) -> TrafficResult:
         """Replay an evaluation log.
 
         ``engine``: ``auto`` (sharded when the service has a mesh, else
         the batched single-device engine) | ``sharded`` | ``batched`` |
         ``scalar``. All engines are bit-equal on every counter.
+
+        ``resident`` (sharded path only) keeps the log's parts-independent
+        solve artifacts device-resident across replays
+        (:class:`repro.core.traffic_sharded.ResidentReplayState`), so
+        repeated replays of one log against an evolving partition map —
+        the dynamic experiment's measurement loop — reduce to the
+        partition-dependent counter fold. ``resident=False`` forces a full
+        cold solve (the bit-equality comparator).
         """
         if engine == "sharded" and self.mesh is None:
             raise ValueError("engine='sharded' requires a service mesh")
         if engine == "sharded" or (engine == "auto" and self.mesh is not None):
             from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
 
+            if all(o is not ops for o in self._replayed_logs):
+                self._replayed_logs.append(ops)
             result = replay_sharded(
                 self.graph, ops, self.mesh, self.parts, self.k,
-                data_axes=self.data_axes,
+                data_axes=self.data_axes, resident=resident,
             )
         else:
             result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
@@ -353,8 +385,63 @@ class PartitionedGraphService:
 
     # -- dynamism -----------------------------------------------------------
     def apply_dynamism(self, log: DynamismLog) -> None:
+        """Apply a dynamism slice: partition moves + (optional) edge inserts.
+
+        A structural log rebuilds the service graph via
+        :meth:`~repro.graphs.structure.Graph.with_edges` and migrates the
+        device-resident replay state of every served evaluation log onto
+        the new graph, marking the log's dirty vertices so only the ops
+        whose expansion footprint they touch are re-solved on the next
+        replay (pure-move logs never dirty graph-pure artifacts).
+        """
         self.parts = apply_dynamism(self.parts, log)
+        if log.structural:
+            old_graph = self.graph
+            new_graph = old_graph.with_edges(  # validates shapes + bounds
+                log.insert_senders, log.insert_receivers, log.insert_weights
+            )
+            self._check_insert_admissible(log)
+            self.graph = new_graph
+            if self.mesh is not None:
+                from repro.core.traffic_sharded import migrate_resident_states
+
+                dirty = log.dirty_vertices()
+                for ops in self._replayed_logs:
+                    migrate_resident_states(ops, old_graph, self.graph, dirty)
         self.logger.observe_structure(self.graph, self.parts)
+
+    def _check_insert_admissible(self, log: DynamismLog) -> None:
+        """Reject edge inserts lighter than the straight-line distance.
+
+        On coordinate graphs the whole GIS measurement stack — the A*
+        heuristic, the window-acceptance proof, and the resident path's
+        footprint invalidation ("any changed route has an endpoint inside
+        the old f ≤ f_dst set") — relies on weights ≥ Euclidean length.
+        An underweight insert would silently break the bit-identical
+        contract instead of failing loudly, so it is refused here.
+        """
+        attrs = self.graph.node_attrs
+        if "lon" not in attrs or "lat" not in attrs:
+            return
+        s = np.asarray(log.insert_senders, dtype=np.int64)
+        r = np.asarray(log.insert_receivers, dtype=np.int64)
+        w = (np.ones(s.shape[0], dtype=np.float32)
+             if log.insert_weights is None
+             else np.asarray(log.insert_weights, dtype=np.float32))
+        lon = np.asarray(attrs["lon"], dtype=np.float64)
+        lat = np.asarray(attrs["lat"], dtype=np.float64)
+        dist = np.hypot(lon[s] - lon[r], lat[s] - lat[r])
+        # float32 storage may round the weight to just under the float64
+        # distance; allow that rounding, nothing more.
+        short = w.astype(np.float64) < dist * (1.0 - 1e-6)
+        if short.any():
+            i = int(np.nonzero(short)[0][0])
+            raise ValueError(
+                "structural insert weight below straight-line length "
+                f"(edge {int(s[i])}→{int(r[i])}: w={float(w[i]):g} < "
+                f"{float(dist[i]):g}) — inadmissible for the GIS heuristic "
+                "and the resident footprint invariant"
+            )
 
     # -- reporting ----------------------------------------------------------
     def report(self) -> Dict[str, float]:

@@ -94,6 +94,18 @@ __all__ = ["BatchedTrafficEngine", "execute_ops_batched", "get_engine"]
 
 _BIG_ID = np.int32(2**31 - 1)
 
+# Engine-wide default for the A*-expansion-set truncation. Callers that
+# don't care pass ``max_expansions=None`` everywhere (engine, sharded
+# replayer, resident state) and resolve to this one value — the engine's
+# config is authoritative end-to-end, so a non-default engine can never be
+# silently paired with a default-capped replay path.
+_DEFAULT_MAX_EXPANSIONS = 50_000
+
+
+def resolve_max_expansions(max_expansions: Optional[int]) -> int:
+    """Normalize a ``max_expansions`` override (None → engine default)."""
+    return _DEFAULT_MAX_EXPANSIONS if max_expansions is None else int(max_expansions)
+
 
 def _capped_gather_layout(
     s_loc: np.ndarray, r_loc: np.ndarray, w: np.ndarray, n_rows: int, cap: int
@@ -203,6 +215,13 @@ def _sssp_solve_body(
         (f == f_dst[None, :]) & (ids_w[:, None] < dst_ids[None, :])
     )
     member = member & jnp.isfinite(f) & valid[None, :]
+    # Invalidation footprint for the resident replay path: every vertex
+    # with f ≤ f_dst (boundary *included*, cap *not* applied). With road
+    # weights ≥ straight-line length, any inserted edge that could change
+    # this op's distances-to-members, its f_dst, a membership tie-break,
+    # or the max_expansions ranking has an endpoint inside this set — so
+    # "footprint ∩ dirty = ∅" proves the cached solve stays bit-exact.
+    foot = (f <= f_dst[None, :]) & jnp.isfinite(f) & valid[None, :]
     if w_nodes > max_expansions:
         # Keep the max_expansions lex-smallest members: stable argsort of f
         # ties by row position; rows ascend in global id, i.e. (f, id) order.
@@ -216,7 +235,7 @@ def _sssp_solve_body(
     m = member.astype(jnp.int32)
     edges = (m * deg_w[:, None]).sum(axis=0)
     cross = (m * cross_w[:, None]).sum(axis=0)
-    return member, edges, cross, f_dst, done
+    return member, foot, edges, cross, f_dst, done
 
 
 _sssp_solve = jax.jit(
@@ -233,7 +252,7 @@ class BatchedTrafficEngine:
         graph: Graph,
         pattern: str,
         chunk: Optional[int] = None,
-        max_expansions: int = 50_000,
+        max_expansions: Optional[int] = None,
         delta_scale: Optional[float] = None,
         use_kernel: Optional[bool] = None,
     ):
@@ -241,7 +260,7 @@ class BatchedTrafficEngine:
 
         self.graph = graph
         self.pattern = pattern
-        self.max_expansions = int(max_expansions)
+        self.max_expansions = resolve_max_expansions(max_expansions)
         self.n_nodes = graph.n_nodes
         # Relaxation path: Pallas frontier kernel on TPU, unrolled XLA
         # gather on CPU; REPRO_FRONTIER_KERNEL=1/0 or the ctor arg
@@ -640,7 +659,7 @@ class BatchedTrafficEngine:
         args, window, w_real, box, full = self.build_sssp_problem(
             srcs, dsts, valid, cross_deg, full
         )
-        member, edges, cross, f_dst, done = _sssp_solve(
+        member, _foot, edges, cross, f_dst, done = _sssp_solve(
             *(jnp.asarray(a) for a in args),
             jnp.float32(self.delta),
             max_expansions=self.max_expansions,
@@ -759,13 +778,19 @@ def get_engine(
     graph: Graph,
     pattern: str,
     chunk: Optional[int] = None,
-    max_expansions: int = 50_000,
+    max_expansions: Optional[int] = None,
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
 ) -> BatchedTrafficEngine:
-    """Graph-lifetime engine cache (same idiom as didic.make_spmm)."""
+    """Graph-lifetime engine cache (same idiom as didic.make_spmm).
+
+    ``max_expansions`` is normalized before keying, so ``None`` and an
+    explicit default resolve to the *same* engine — the engine's value is
+    authoritative for every path (batched, sharded, redo, resident).
+    """
     cache = graph.__dict__.setdefault("_traffic_engine_cache", {})
-    key = (pattern, chunk, max_expansions, delta_scale, use_kernel)
+    key = (pattern, chunk, resolve_max_expansions(max_expansions),
+           delta_scale, use_kernel)
     if key not in cache:
         cache[key] = BatchedTrafficEngine(
             graph, pattern, chunk=chunk,
@@ -781,7 +806,7 @@ def execute_ops_batched(
     parts: np.ndarray,
     k: int,
     chunk: Optional[int] = None,
-    max_expansions: int = 50_000,
+    max_expansions: Optional[int] = None,
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
 ):

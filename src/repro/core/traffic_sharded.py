@@ -48,18 +48,38 @@ engine's verbatim solve body — so ``replay_sharded`` is bit-equal to
 shape and any (including uneven) log split. The equivalence suite in
 ``tests/test_traffic_sharded.py`` asserts this on a forced 8-device CPU
 mesh.
+
+**Resident replay (ISSUE 4 tentpole).** A log's solve artifacts split
+into a parts-independent majority (GIS window membership + invalidation
+footprint masks, per-op edge counts, BFS expansion levels and per-vertex
+frontier mass) and a parts-dependent remainder (the cross counters).
+:class:`ResidentReplayState` keeps the former device-resident across
+replays of one log, so replaying the same log against an evolving
+partition map — every slice of the dynamic experiment — reduces to an
+integer ``member × cross_deg`` fold over the resident masks plus the
+host-side finalize. Integer folds are order-free, so the resident path is
+**bit-identical** to a cold solve. Structural dynamism (edge inserts)
+dirties the touched vertices; ops whose footprint intersects the dirty
+set are re-solved through the replicated whole-graph redo layout on the
+next replay (see :mod:`repro.core.dynamic_runtime` for the lifecycle).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.traffic_batched import _BIG_ID, _sssp_solve_body, get_engine
+from repro.core.traffic_batched import (
+    _BIG_ID,
+    _sssp_solve_body,
+    get_engine,
+    resolve_max_expansions,
+)
 from repro.distributed.counters import (
     CounterAccumulator,
     data_shard_count,
@@ -67,7 +87,14 @@ from repro.distributed.counters import (
 )
 from repro.graphs.structure import Graph
 
-__all__ = ["ShardedTrafficReplayer", "replay_sharded"]
+__all__ = [
+    "ResidentReplayState",
+    "ShardedTrafficReplayer",
+    "bfs_wave_ranges",
+    "get_replayer",
+    "migrate_resident_states",
+    "replay_sharded",
+]
 
 # Per-(wave, shard) bound on Σ(1 + edges_op): keeps the int32 per-vertex
 # frontier mass of one BFS wave below 2³⁰ — half the int32 range as margin.
@@ -86,6 +113,95 @@ def _pad_to(arr: np.ndarray, length: int, fill) -> np.ndarray:
     return out
 
 
+def bfs_wave_ranges(per_op_edges: np.ndarray, budget: Optional[int] = None):
+    """Contiguous op ranges whose Σ(1+edges) ≤ ``budget`` each (every wave
+    has ≥ 1 op) — makes the per-wave int32 device mass safe by
+    construction; real logs fit in a single wave. A range's work may equal
+    the budget *exactly* (the 2³⁰ margin is itself safe: it is half the
+    int32 range); only the op that would exceed it starts a new wave."""
+    budget = _WAVE_BUDGET if budget is None else budget
+    work = np.cumsum(1 + per_op_edges.astype(np.int64))
+    waves, lo = [], 0
+    while lo < per_op_edges.shape[0]:
+        base = work[lo - 1] if lo else 0
+        hi = int(np.searchsorted(work, base + budget, side="right"))
+        hi = max(hi, lo + 1)
+        waves.append((lo, hi))
+        lo = hi
+    return waves
+
+
+# ===========================================================================
+# Device-resident replay state
+# ===========================================================================
+@dataclasses.dataclass(eq=False)
+class _ResidentRound:
+    """One solved GIS round's device-resident artifacts.
+
+    ``ids`` is ``[S, W]`` for windowed rounds (one window per shard) or
+    ``[1, W]`` for whole-graph redo rounds (a single replicated layout —
+    broadcasting recovers the per-shard view). ``member``/``foot`` are the
+    solve body's masks; ``ok`` marks the columns whose counters this round
+    owns (ops rejected by window acceptance or invalidated by a dirty set
+    have ``ok=False`` here and ``ok=True`` in a later redo round).
+    """
+
+    ids: jax.Array        # [S, W] or [1, W] int32 global window ids
+    member: jax.Array     # [S, W, C] bool expansion membership
+    foot: jax.Array       # [S, W, C] bool invalidation footprint (f ≤ f_dst)
+    opidx: np.ndarray     # [S, C] int64 op index, -1 where padding
+    ok: np.ndarray        # [S, C] bool — column counted from this round
+
+
+@dataclasses.dataclass(eq=False)
+class ResidentReplayState:
+    """Parts-independent solve artifacts of one (graph, log), kept
+    device-resident across replays (module docstring; lifecycle documented
+    in :mod:`repro.core.dynamic_runtime`).
+
+    ``per_op_edges``/``tm`` are graph-pure int64 host counters;
+    ``rounds`` hold the GIS masks on device; ``bfs_starts``/``bfs_levels``
+    are the BFS per-op gather columns. ``mark_dirty`` queues structurally
+    touched vertices — the owning replayer converts them into dirty *ops*
+    (footprint intersection) and re-solves exactly those on next replay.
+    """
+
+    graph: Graph
+    pattern: str
+    n_ops: int
+    per_op_edges: Optional[np.ndarray] = None   # [n_ops] int64, graph-pure
+    tm: Optional[np.ndarray] = None             # [N] int64 frontier mass
+    bfs_starts: Optional[jax.Array] = None      # [S, B] int32 (BFS kinds)
+    bfs_levels: Optional[jax.Array] = None      # [S, B] int32
+    rounds: List[_ResidentRound] = dataclasses.field(default_factory=list)
+    dirty_ops: Optional[np.ndarray] = None      # [n_ops] bool
+    pending_dirty: Optional[np.ndarray] = None  # queued dirty vertex ids
+
+    @property
+    def solved(self) -> bool:
+        return self.per_op_edges is not None and self.tm is not None
+
+    def mark_dirty(self, vertices) -> None:
+        """Queue structurally-touched vertices for op invalidation."""
+        v = np.unique(np.asarray(vertices, dtype=np.int64))
+        if v.size == 0:
+            return
+        self.pending_dirty = (
+            v if self.pending_dirty is None
+            else np.union1d(self.pending_dirty, v)
+        )
+
+    def reset(self) -> None:
+        """Drop every artifact (next replay is a full cold solve)."""
+        self.per_op_edges = None
+        self.tm = None
+        self.bfs_starts = None
+        self.bfs_levels = None
+        self.rounds = []
+        self.dirty_ops = None
+        self.pending_dirty = None
+
+
 class ShardedTrafficReplayer:
     """Replay evaluation logs sharded over a mesh's data axes.
 
@@ -101,7 +217,7 @@ class ShardedTrafficReplayer:
         mesh: Mesh,
         data_axes: Tuple[str, ...] = ("data",),
         chunk: Optional[int] = None,
-        max_expansions: int = 50_000,
+        max_expansions: Optional[int] = None,
         delta_scale: Optional[float] = None,
         use_kernel: Optional[bool] = None,
     ):
@@ -132,23 +248,12 @@ class ShardedTrafficReplayer:
 
         # The deg-column prefix table is pure graph structure — built once
         # and kept device-resident; only the cross column (parts-dependent)
-        # is recomputed per replay. In the dynamic experiment this halves
-        # the per-slice table work vs the single-device engine's fused
-        # two-column build.
+        # is recomputed per replay. With a resident state the per-op deg
+        # gather happens once per log too, so a slice replay is one cross
+        # table build + one cross gather.
         self._one_table_fn = jax.jit(eng._bfs_prefix_one)
         self._deg_table = self._one_table_fn(eng._deg_j)
-
-        def per_op_body(starts, levels, p_deg, p_cross):
-            st, lvl = starts[0], levels[0]
-            return jnp.stack([p_deg[st, lvl], p_cross[st, lvl]], axis=-1)[None]
-
-        self._per_op_fn = jax.jit(shard_map(
-            per_op_body,
-            mesh=self.mesh,
-            in_specs=(s2, s2, P(), P()),
-            out_specs=P(axes, None, None),
-            check_rep=False,
-        ))
+        self._per_op_one_fn = jax.jit(lambda st, lvl, table: table[st, lvl])
 
         def tm_body(starts, levels, valid, s_e, r_e):
             # Per-shard level histograms c[l][u] = #{ops: start=u, L>l},
@@ -182,55 +287,65 @@ class ShardedTrafficReplayer:
         b = width if width is not None else _ceil_div(max(arr.shape[0], 1), s)
         return _pad_to(arr, s * b, fill).reshape(s, b)
 
-    def _bfs_waves(self, per_op_edges: np.ndarray) -> List[Tuple[int, int]]:
-        """Contiguous op ranges whose Σ(1+edges) ≤ _WAVE_BUDGET each (every
-        wave has ≥1 op) — makes the per-wave int32 device mass safe by
-        construction; real logs fit in a single wave."""
-        work = np.cumsum(1 + per_op_edges.astype(np.int64))
-        waves, lo = [], 0
-        while lo < per_op_edges.shape[0]:
-            base = work[lo - 1] if lo else 0
-            hi = int(np.searchsorted(work, base + _WAVE_BUDGET, side="right"))
-            hi = max(hi, lo + 1)
-            waves.append((lo, hi))
-            lo = hi
-        return waves
+    def _round_opidx(self, round_idx: np.ndarray, chunk: int) -> np.ndarray:
+        """A round's per-(shard, column) op index, -1 where padding."""
+        opidx = np.full((self.n_shards, chunk), -1, dtype=np.int64)
+        for sh in range(self.n_shards):
+            idx = round_idx[sh * chunk: (sh + 1) * chunk]
+            opidx[sh, : idx.shape[0]] = idx
+        return opidx
 
-    def _run_bfs(self, ops, cross_deg: np.ndarray):
+    def _run_bfs(self, ops, cross_deg: np.ndarray,
+                 state: Optional[ResidentReplayState] = None):
         eng = self.engine
+        n_ops = ops.n_ops
+        if state is not None and state.pending_dirty is not None:
+            # BFS artifacts (ancestor levels, subtree prefix tables,
+            # frontier mass) are global properties of the tree/edge list —
+            # a structural insert invalidates them wholesale, so the state
+            # resets and the next replay below re-solves cold.
+            state.reset()
+        if state is not None and state.solved:
+            # Resident fast path: everything except the cross counters is
+            # (graph, ops)-pure. One cross table + one gather per slice.
+            cross = np.asarray(self._per_op_one_fn(
+                state.bfs_starts, state.bfs_levels,
+                self._one_table_fn(jnp.asarray(cross_deg)),
+            )).reshape(-1)[:n_ops].astype(np.int64)
+            return state.per_op_edges, cross, state.tm
+
         levels, _ = eng._compile_bfs_log(ops)
         starts = ops.starts.astype(np.int32)
-        n_ops = ops.n_ops
-
-        per_op = np.asarray(self._per_op_fn(
-            self._shard_pad(starts, 0), self._shard_pad(levels, 0),
-            self._deg_table, self._one_table_fn(jnp.asarray(cross_deg)),
-        )).reshape(-1, 2)[:n_ops]
-        edges = per_op[:, 0].astype(np.int64)
-        cross = per_op[:, 1].astype(np.int64)
+        st_dev = jnp.asarray(self._shard_pad(starts, 0))
+        lvl_dev = jnp.asarray(self._shard_pad(levels, 0))
+        edges = np.asarray(
+            self._per_op_one_fn(st_dev, lvl_dev, self._deg_table)
+        ).reshape(-1)[:n_ops].astype(np.int64)
+        cross = np.asarray(self._per_op_one_fn(
+            st_dev, lvl_dev, self._one_table_fn(jnp.asarray(cross_deg))
+        )).reshape(-1)[:n_ops].astype(np.int64)
 
         # Frontier mass is (graph, ops)-pure — independent of the partition
-        # map — so the replayer keeps it resident across replays of one
-        # log: the dynamic experiment replays the same evaluation log
-        # against an evolving partition map every slice, and this is the
-        # "per-vertex traffic lives on the mesh across the cycle" leg of
-        # the device runtime (only the cross/partition counters, which do
-        # depend on parts, are recomputed per slice).
-        tm_cache = ops.__dict__.setdefault("_sharded_tm_cache", {})
-        tm = tm_cache.get(self)
-        if tm is None:
-            acc = CounterAccumulator(self.n_nodes)
-            for lo, hi in self._bfs_waves(edges):
-                b = _ceil_div(hi - lo, self.n_shards)
-                valid = np.ones(hi - lo, dtype=bool)
-                acc.add(self._tm_fn(
-                    self._shard_pad(starts[lo:hi], 0, b),
-                    self._shard_pad(levels[lo:hi], 1, b),
-                    self._shard_pad(valid, False, b),
-                    eng._s_j, eng._r_j,
-                ))
-            tm = acc.total
-            tm_cache[self] = tm
+        # map — so the resident state keeps it across replays of one log:
+        # the dynamic experiment replays the same evaluation log against an
+        # evolving partition map every slice, and this is the "per-vertex
+        # traffic lives on the mesh across the cycle" leg of the device
+        # runtime (only the cross/partition counters, which do depend on
+        # parts, are recomputed per slice).
+        acc = CounterAccumulator(self.n_nodes)
+        for lo, hi in bfs_wave_ranges(edges):
+            b = _ceil_div(hi - lo, self.n_shards)
+            valid = np.ones(hi - lo, dtype=bool)
+            acc.add(self._tm_fn(
+                self._shard_pad(starts[lo:hi], 0, b),
+                self._shard_pad(levels[lo:hi], 1, b),
+                self._shard_pad(valid, False, b),
+                eng._s_j, eng._r_j,
+            ))
+        tm = acc.total
+        if state is not None:
+            state.bfs_starts, state.bfs_levels = st_dev, lvl_dev
+            state.per_op_edges, state.tm = edges, tm
         return edges, cross, tm
 
     # ====================================================== GIS batched SSSP
@@ -244,7 +359,7 @@ class ShardedTrafficReplayer:
 
         def solve_body(loc_src, loc_dst, dst_ids, valid, deg_w, cross_w,
                        ids_w, nbr, w_inf, sp_s, sp_r, sp_w, h, delta):
-            member, edges, cross, f_dst, done = _sssp_solve_body(
+            member, foot, edges, cross, f_dst, done = _sssp_solve_body(
                 loc_src[0], loc_dst[0], dst_ids[0], valid[0],
                 deg_w[0], cross_w[0], ids_w[0],
                 nbr[0], w_inf[0], sp_s[0], sp_r[0], sp_w[0], h[0],
@@ -254,13 +369,14 @@ class ShardedTrafficReplayer:
                 use_kernel=eng.use_kernel,
                 interpret=eng.interpret,
             )
-            return member[None], edges[None], cross[None], f_dst[None], done[None]
+            return (member[None], foot[None], edges[None], cross[None],
+                    f_dst[None], done[None])
 
         self._solve_fn = jax.jit(shard_map(
             solve_body,
             mesh=self.mesh,
             in_specs=(s2, s2, s2, s2, s2, s2, s2, s3, s3, s2, s2, s2, s3, P()),
-            out_specs=(s3, s2, s2, s2, s2),
+            out_specs=(s3, s3, s2, s2, s2, s2),
             check_rep=False,
         ))
 
@@ -271,7 +387,7 @@ class ShardedTrafficReplayer:
         def solve_full_body(loc_src, loc_dst, dst_ids, valid, h,
                             deg_w, cross_w, ids_w, nbr, w_inf,
                             sp_s, sp_r, sp_w, delta):
-            member, edges, cross, f_dst, done = _sssp_solve_body(
+            member, foot, edges, cross, f_dst, done = _sssp_solve_body(
                 loc_src[0], loc_dst[0], dst_ids[0], valid[0],
                 deg_w, cross_w, ids_w, nbr, w_inf, sp_s, sp_r, sp_w, h[0],
                 delta,
@@ -280,13 +396,14 @@ class ShardedTrafficReplayer:
                 use_kernel=eng.use_kernel,
                 interpret=eng.interpret,
             )
-            return member[None], edges[None], cross[None], f_dst[None], done[None]
+            return (member[None], foot[None], edges[None], cross[None],
+                    f_dst[None], done[None])
 
         self._solve_full_fn = jax.jit(shard_map(
             solve_full_body,
             mesh=self.mesh,
             in_specs=(s2, s2, s2, s2, s3) + (P(),) * 9,
-            out_specs=(s3, s2, s2, s2, s2),
+            out_specs=(s3, s3, s2, s2, s2, s2),
             check_rep=False,
         ))
         self._full_static_dev = None
@@ -296,6 +413,31 @@ class ShardedTrafficReplayer:
         # shard-local mass reduce (no communication: inputs are data-sharded).
         self._mass_fn = jax.jit(
             lambda member, okm: (member & okm[:, None, :]).sum(axis=2, dtype=jnp.int32)
+        )
+
+        # Resident-state primitives (all integer/bool — order-free, so the
+        # resident replay stays bit-equal to the cold solve). ``ids`` may
+        # be [S, W] (windowed rounds) or [1, W] (replicated redo rounds) —
+        # broadcasting recovers the per-shard view. Out-of-range padding
+        # ids (_BIG_ID) index a sentinel 0/False row via the clamp.
+        n_sentinel = jnp.int32(self.n_nodes)
+        self._fold_cross_fn = jax.jit(
+            lambda ids, member, cross_full: (
+                member.astype(jnp.int32)
+                * cross_full[jnp.minimum(ids, n_sentinel)][..., None]
+            ).sum(axis=1)
+        )
+        self._touched_fn = jax.jit(
+            lambda ids, foot, dirty_full: (
+                foot & dirty_full[jnp.minimum(ids, n_sentinel)][..., None]
+            ).any(axis=1)
+        )
+        self._drop_cols_fn = jax.jit(lambda m, keep: m & keep[:, None, :])
+        n_rows = self.n_nodes
+        self._scatter_rows_fn = jax.jit(
+            lambda ids, mass: jnp.zeros((n_rows,), jnp.int32)
+            .at[jnp.broadcast_to(ids, mass.shape).reshape(-1)]
+            .add(mass.reshape(-1), mode="drop")
         )
 
     def _full_static(self):
@@ -342,8 +484,16 @@ class ShardedTrafficReplayer:
             ))
         return tuple(np.stack(col) for col in zip(*out))
 
-    def _run_sssp(self, ops, cross_deg: np.ndarray):
+    def _run_sssp(self, ops, cross_deg: np.ndarray,
+                  state: Optional[ResidentReplayState] = None):
         eng = self.engine
+        if state is not None and state.solved:
+            return self._replay_resident_sssp(ops, cross_deg, state)
+        if state is not None:
+            # A previous cold solve may have died mid-pass (round-cap
+            # RuntimeError) after capturing some rounds; a retry must not
+            # stack a second set of ok=True columns on top of them.
+            state.reset()
         order = eng._compile_sssp_log(ops)
         n_ops, s, chunk = ops.n_ops, self.n_shards, eng.chunk
         per_op_edges = np.zeros(n_ops, dtype=np.int64)
@@ -383,7 +533,7 @@ class ShardedTrafficReplayer:
                     metas.append((idx, srcs, dsts, valid, window, w_real, box, eff_full))
 
                 stacked = self._stack_problems(probs)
-                member, edges, cross, f_dst, done = self._solve_fn(
+                member, foot, edges, cross, f_dst, done = self._solve_fn(
                     *stacked, jnp.float32(eng.delta)
                 )
                 if not np.asarray(done).all():
@@ -415,14 +565,23 @@ class ShardedTrafficReplayer:
                 # round (≤ S·chunk), int64 across rounds on the host.
                 mass = self._mass_fn(member, jnp.asarray(ok_all))
                 acc.add(self._scatter_psum(jnp.asarray(stacked[6]), mass))
+                if state is not None:
+                    state.rounds.append(_ResidentRound(
+                        ids=jnp.asarray(stacked[6]), member=member, foot=foot,
+                        opidx=self._round_opidx(round_idx, chunk), ok=ok_all,
+                    ))
 
         run_pass(order)
         self.last_redo_ops = int(sum(r.shape[0] for r in redo))
         if redo:
             self._run_full_pass(
                 ops, np.concatenate(redo), cross_deg,
-                per_op_edges, per_op_cross, acc,
+                per_op_edges, per_op_cross, acc, state=state,
             )
+        if state is not None:
+            state.per_op_edges = per_op_edges
+            state.tm = acc.total
+            state.dirty_ops = np.zeros(n_ops, dtype=bool)
         return per_op_edges, per_op_cross, acc.total
 
     def _run_full_pass(
@@ -433,6 +592,7 @@ class ShardedTrafficReplayer:
         per_op_edges: np.ndarray,
         per_op_cross: np.ndarray,
         acc: CounterAccumulator,
+        state: Optional[ResidentReplayState] = None,
     ) -> None:
         """Re-solve rejected ops on the whole graph, replicated-layout form.
 
@@ -441,6 +601,10 @@ class ShardedTrafficReplayer:
         columns are packed and sharded. The solve body — and therefore
         every float32 operation and counter — is identical to the windowed
         pass and the single-device engine, so the pass stays bit-exact.
+        Serves both window-acceptance rejects (cold solve) and dirty-set
+        redos (resident replay after structural inserts) — with a
+        ``state``, each round is captured as a resident ``[1, W]``
+        replicated-ids round.
         """
         eng, s, chunk = self.engine, self.n_shards, self.engine.chunk
         w_pad, deg_w_d, ids_w_d, nbr_d, w_inf_d, sp_s_d, sp_r_d, sp_w_d = (
@@ -471,7 +635,7 @@ class ShardedTrafficReplayer:
                 metas.append((idx, srcs, dsts, valid))
 
             stacked = tuple(np.stack(col) for col in zip(*per_op))
-            member, edges, cross, f_dst, done = self._solve_full_fn(
+            member, foot, edges, cross, f_dst, done = self._solve_full_fn(
                 *stacked, deg_w_d, cross_w_d, ids_w_d, nbr_d, w_inf_d,
                 sp_s_d, sp_r_d, sp_w_d, jnp.float32(eng.delta),
             )
@@ -497,16 +661,228 @@ class ShardedTrafficReplayer:
 
             mass = self._mass_fn(member, jnp.asarray(ok_all))
             acc.add(self._scatter_psum_shared(ids_w_d, mass))
+            if state is not None:
+                state.rounds.append(_ResidentRound(
+                    ids=ids_w_d[None], member=member, foot=foot,
+                    opidx=self._round_opidx(round_idx, chunk), ok=ok_all,
+                ))
+
+    # ------------------------------------------------- resident replay path
+    def _replay_resident_sssp(self, ops, cross_deg: np.ndarray,
+                              state: ResidentReplayState):
+        """Per-slice GIS replay from resident artifacts.
+
+        Absorb any queued dirty vertices into dirty *ops* (footprint
+        intersection), re-solve exactly those through the replicated redo
+        layout, then reduce the slice to the parts-dependent integer
+        ``member × cross_deg`` fold over the resident masks. Every
+        reduction is integer, so the result is bit-identical to a cold
+        solve of the whole log against the same partition map.
+        """
+        self.last_redo_ops = 0
+        if state.pending_dirty is not None:
+            self._absorb_dirty(state)
+        if state.dirty_ops is not None and state.dirty_ops.any():
+            self._redo_dirty(ops, state, cross_deg)
+        # Prune rounds that no longer own any op (fully superseded).
+        state.rounds = [r for r in state.rounds if r.ok.any()]
+
+        cross_full = np.zeros(self.n_nodes + 1, dtype=np.int32)
+        cross_full[: self.n_nodes] = cross_deg
+        cross_dev = jnp.asarray(cross_full)
+        per_op_cross = np.zeros(state.n_ops, dtype=np.int64)
+        for rnd in state.rounds:
+            ch = np.asarray(
+                self._fold_cross_fn(rnd.ids, rnd.member, cross_dev),
+                dtype=np.int64,
+            )
+            per_op_cross[rnd.opidx[rnd.ok]] = ch[rnd.ok]
+        return state.per_op_edges, per_op_cross, state.tm
+
+    def _absorb_dirty(self, state: ResidentReplayState) -> None:
+        """Turn queued dirty vertices into dirty ops and evict their
+        resident columns (membership mass included) from every round."""
+        pend, state.pending_dirty = state.pending_dirty, None
+        if pend is None or pend.size == 0:
+            return
+        dirty_full = np.zeros(self.n_nodes + 1, dtype=bool)
+        dirty_full[pend[pend < self.n_nodes]] = True
+        dirty_dev = jnp.asarray(dirty_full)
+        if state.dirty_ops is None:
+            state.dirty_ops = np.zeros(state.n_ops, dtype=bool)
+
+        new_dirty = np.zeros(state.n_ops, dtype=bool)
+        for rnd in state.rounds:
+            touched = np.asarray(
+                self._touched_fn(rnd.ids, rnd.foot, dirty_dev)
+            ) & (rnd.opidx >= 0)
+            if touched.any():
+                new_dirty[rnd.opidx[touched]] = True
+        new_dirty &= ~state.dirty_ops
+        if not new_dirty.any():
+            return
+        for rnd in state.rounds:
+            cols = (rnd.opidx >= 0) & new_dirty[np.clip(rnd.opidx, 0, None)]
+            if not cols.any():
+                continue
+            removed_ok = cols & rnd.ok
+            if removed_ok.any():
+                # Subtract the evicted columns' per-vertex mass so the redo
+                # pass can add the re-solved mass back (both int exact).
+                mass = self._mass_fn(rnd.member, jnp.asarray(removed_ok))
+                state.tm -= np.asarray(
+                    self._scatter_rows_fn(rnd.ids, mass)
+                ).astype(np.int64)
+            keep = jnp.asarray(~cols)
+            rnd.member = self._drop_cols_fn(rnd.member, keep)
+            rnd.foot = self._drop_cols_fn(rnd.foot, keep)
+            rnd.ok &= ~cols
+        state.dirty_ops |= new_dirty
+
+    def _redo_dirty(self, ops, state: ResidentReplayState,
+                    cross_deg: np.ndarray) -> None:
+        """Re-solve the dirty ops on the whole (possibly updated) graph,
+        capturing the fresh artifacts as new resident rounds."""
+        idx = np.nonzero(state.dirty_ops)[0]
+        acc = CounterAccumulator(self.n_nodes)
+        scratch_cross = np.zeros(state.n_ops, dtype=np.int64)
+        n_rounds = len(state.rounds)
+        try:
+            self._run_full_pass(
+                ops, idx, cross_deg, state.per_op_edges, scratch_cross, acc,
+                state=state,
+            )
+        except Exception:
+            # Rounds captured before a mid-pass failure never had their
+            # mass folded into tm — keeping them would double-count on a
+            # retry's eviction accounting.
+            del state.rounds[n_rounds:]
+            raise
+        state.tm += acc.total
+        state.dirty_ops[:] = False
+        self.last_redo_ops = int(idx.shape[0])
+
+    def _resident_state(self, ops) -> ResidentReplayState:
+        states: Dict = ops.__dict__.setdefault("_resident_replay", {})
+        st = states.get(self)
+        if st is None:
+            st = ResidentReplayState(
+                graph=self.graph, pattern=self.engine.pattern, n_ops=ops.n_ops
+            )
+            states[self] = st
+        return st
+
+    def invalidate(self, ops, vertices) -> None:
+        """Mark vertices structurally dirty for this log's resident state
+        (no-op if the log has never been replayed resident here)."""
+        st = ops.__dict__.get("_resident_replay", {}).get(self)
+        if st is not None:
+            st.mark_dirty(vertices)
+
+    def adopt_resident(self, ops, state: ResidentReplayState,
+                       dirty_vertices) -> None:
+        """Adopt a resident state solved on a prior revision of this graph.
+
+        The node set (count and coordinates) must be unchanged — only edge
+        inserts are supported — and every vertex whose structure changed
+        must be in ``dirty_vertices``: ops whose expansion footprint
+        touches one are re-solved on this replayer's (new) graph; all
+        other cached artifacts are provably still bit-exact (see the
+        footprint note in :func:`repro.core.traffic_batched._sssp_solve_body`).
+        """
+        if self.engine.kind != "sssp":
+            raise ValueError("resident adoption is defined for GIS states only")
+        if (state.pattern != self.engine.pattern
+                or state.graph.n_nodes != self.n_nodes):
+            raise ValueError("resident state is incompatible with this replayer")
+        if state.n_ops != ops.n_ops:
+            raise ValueError("resident state belongs to a different log")
+        state.graph = self.graph
+        state.mark_dirty(dirty_vertices)
+        ops.__dict__.setdefault("_resident_replay", {})[self] = state
 
     # ------------------------------------------------------------------ run
-    def replay(self, ops, parts: np.ndarray, k: int):
+    def replay(self, ops, parts: np.ndarray, k: int, resident: bool = True):
+        """Replay ``ops`` against ``parts``.
+
+        ``resident=True`` keeps/uses the log's parts-independent solve
+        artifacts across calls (bit-identical results, see module
+        docstring); ``resident=False`` forces a full cold solve with no
+        cache reads or writes — the comparator the parity smokes use.
+        """
         parts = np.asarray(parts, dtype=np.int64)
         cross_deg = self.engine.cross_degree(parts)
+        state = self._resident_state(ops) if resident else None
         if self.engine.kind == "bfs":
-            edges, cross, tm64 = self._run_bfs(ops, cross_deg)
+            edges, cross, tm64 = self._run_bfs(ops, cross_deg, state)
         else:
-            edges, cross, tm64 = self._run_sssp(ops, cross_deg)
+            edges, cross, tm64 = self._run_sssp(ops, cross_deg, state)
         return self.engine.finalize(edges, cross, tm64, parts, k, ops.t_l, ops.t_pg)
+
+
+def get_replayer(
+    graph: Graph,
+    pattern: str,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+    chunk: Optional[int] = None,
+    max_expansions: Optional[int] = None,
+    delta_scale: Optional[float] = None,
+    use_kernel: Optional[bool] = None,
+) -> ShardedTrafficReplayer:
+    """Graph-lifetime replayer cache (same idiom as ``get_engine``).
+
+    ``max_expansions`` is normalized before keying — ``None`` defers to
+    the engine's authoritative default, so a replay without an override
+    always lands on the same engine/replayer as the batched path.
+    """
+    cache = graph.__dict__.setdefault("_traffic_replayer_cache", {})
+    key = (pattern, mesh, tuple(data_axes), chunk,
+           resolve_max_expansions(max_expansions), delta_scale, use_kernel)
+    if key not in cache:
+        cache[key] = ShardedTrafficReplayer(
+            graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
+            max_expansions=max_expansions, delta_scale=delta_scale,
+            use_kernel=use_kernel,
+        )
+    return cache[key]
+
+
+def migrate_resident_states(
+    ops,
+    old_graph: Graph,
+    new_graph: Graph,
+    dirty_vertices,
+) -> int:
+    """Carry a log's resident replay states across a structural graph update.
+
+    For every replayer of ``old_graph`` holding a resident state for
+    ``ops``: GIS states move to the equivalent replayer of ``new_graph``
+    with ``dirty_vertices`` queued for invalidation (only touched ops
+    re-solve); BFS states are dropped (their artifacts are global tree
+    properties — the new replayer re-solves cold). Returns the number of
+    states migrated.
+    """
+    states = ops.__dict__.get("_resident_replay")
+    if not states:
+        return 0
+    moved = 0
+    old_cache = old_graph.__dict__.get("_traffic_replayer_cache", {})
+    for key, old_rep in list(old_cache.items()):
+        state = states.pop(old_rep, None)
+        if state is None:
+            continue
+        if old_rep.engine.kind != "sssp":
+            continue  # BFS: cold re-solve on the new graph
+        pattern, mesh, data_axes, chunk, max_exp, delta_scale, use_kernel = key
+        new_rep = get_replayer(
+            new_graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
+            max_expansions=max_exp, delta_scale=delta_scale,
+            use_kernel=use_kernel,
+        )
+        new_rep.adopt_resident(ops, state, dirty_vertices)
+        moved += 1
+    return moved
 
 
 def replay_sharded(
@@ -517,24 +893,24 @@ def replay_sharded(
     k: Optional[int] = None,
     data_axes: Tuple[str, ...] = ("data",),
     chunk: Optional[int] = None,
-    max_expansions: int = 50_000,
+    max_expansions: Optional[int] = None,
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
+    resident: bool = True,
 ):
     """Replay an evaluation log sharded over ``mesh``'s data axes.
 
     Bit-equal to ``execute_ops(graph, log, parts, k, engine="batched")`` on
     all four traffic counters; see the module docstring. Replayers are
-    cached on the graph (same idiom as ``get_engine``).
+    cached on the graph (same idiom as ``get_engine``); with ``resident``
+    (default) the log's parts-independent solve artifacts stay
+    device-resident across calls, so replaying the same log against a new
+    partition map costs only the parts-dependent counter fold.
     """
     k = int(np.asarray(parts).max()) + 1 if k is None else k
-    cache = graph.__dict__.setdefault("_traffic_replayer_cache", {})
-    key = (log.pattern, mesh, tuple(data_axes), chunk, max_expansions,
-           delta_scale, use_kernel)
-    if key not in cache:
-        cache[key] = ShardedTrafficReplayer(
-            graph, log.pattern, mesh, data_axes=data_axes, chunk=chunk,
-            max_expansions=max_expansions, delta_scale=delta_scale,
-            use_kernel=use_kernel,
-        )
-    return cache[key].replay(log, parts, k)
+    replayer = get_replayer(
+        graph, log.pattern, mesh, data_axes=data_axes, chunk=chunk,
+        max_expansions=max_expansions, delta_scale=delta_scale,
+        use_kernel=use_kernel,
+    )
+    return replayer.replay(log, parts, k, resident=resident)

@@ -249,6 +249,44 @@ class Graph:
         np.add.at(d, s, w)
         return d.astype(np.float32)
 
+    # -------------------------------------------------------------- updates
+    def with_edges(
+        self,
+        senders: np.ndarray,
+        receivers: np.ndarray,
+        weights: Optional[np.ndarray] = None,
+    ) -> "Graph":
+        """New :class:`Graph` with the given edges appended.
+
+        The node set (and ``node_attrs``, shared by reference) is
+        unchanged, so partition maps, evaluation logs, and per-vertex
+        state remain valid on the result; every structure-derived cache
+        (CSR views, padded layouts, engines) rebuilds lazily on the new
+        object. This is the structural-dynamism primitive: a
+        :class:`repro.core.dynamism.DynamismLog` carrying edge inserts is
+        applied by the graph service through this method.
+        """
+        senders = np.asarray(senders, dtype=self.senders.dtype)
+        receivers = np.asarray(receivers, dtype=self.receivers.dtype)
+        if weights is None:
+            weights = np.ones(senders.shape[0], dtype=np.float32)
+        weights = np.asarray(weights, dtype=np.float32)
+        if not (senders.shape == receivers.shape == weights.shape):
+            raise ValueError("with_edges arrays must have matching shapes")
+        for ends in (senders, receivers):
+            if ends.size and (ends.min() < 0 or ends.max() >= self.n_nodes):
+                raise ValueError("with_edges endpoints must be existing vertices")
+        return Graph(
+            n_nodes=self.n_nodes,
+            senders=np.concatenate([self.senders, senders]),
+            receivers=np.concatenate([self.receivers, receivers]),
+            edge_weight=np.concatenate(
+                [self.edge_weight, np.asarray(weights, dtype=np.float32)]
+            ),
+            node_attrs=self.node_attrs,
+            name=self.name,
+        )
+
     # ------------------------------------------------------------- CSR views
     @cached_property
     def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

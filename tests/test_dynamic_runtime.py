@@ -64,6 +64,27 @@ class TestDeviceScanDynamism:
         parts = (np.arange(n) % 4).astype(np.int32)
         self._assert_equal(parts, 0.1, "fewest_vertices", 4, seed=2)
 
+    def test_unrolled_tail_and_duplicate_movers(self):
+        """ISSUE 4: the unrolled scan's masked tail (units not a multiple
+        of the unroll) and its intra-block read resolution (one vertex
+        moved several times inside one block) must stay bit-identical."""
+        rng = np.random.default_rng(3)
+        parts = rng.integers(0, 3, size=8).astype(np.int32)  # tiny: heavy dups
+        vt = rng.integers(0, 100, size=8)
+        for method, kw in (("fewest_vertices", {}),
+                           ("least_traffic", {"vertex_traffic": vt})):
+            # 1, 3 (< unroll), 11, 24 (tail of every phase) units
+            for amount in (0.125, 0.375, 1.375, 3.0):
+                for seed in range(3):
+                    self._assert_equal(parts, amount, method, 3,
+                                       vt=kw.get("vertex_traffic"), seed=seed)
+
+    def test_unrolled_zero_units(self, fs):
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        log = generate_dynamism(parts, 0.0, "fewest_vertices", k=4,
+                                engine="device")
+        assert log.units == 0
+
     def test_least_traffic_measured_counts(self, fs):
         """Real measured per-vertex traffic (int64 counts), moving mass."""
         ops = generate_ops(fs, n_ops=300, seed=0)
@@ -159,6 +180,28 @@ class TestMigrationScheduler:
         assert sched.plan(old, new, step=0) == []
         assert sched.history == []
 
+    def test_degradation_baseline_resets_after_maintenance(self):
+        """ISSUE 4 bugfix: the degradation check compares against the
+        post-maintenance baseline. Against the first-ever measurement
+        (old behaviour), a long dynamic run whose recoverable quality has
+        drifted from 10% to 18% would demand migration on every slice
+        forever, even right after maintenance just ran."""
+        sched = MigrationScheduler(degradation_factor=1.25)
+        assert not sched.should_migrate(0.10)      # baseline established
+        assert sched.should_migrate(0.20)          # degraded: migrate
+        # maintenance runs; the graph has drifted — 18% is now the best
+        # achievable quality, and becomes the new baseline.
+        sched.record_maintenance(0.18)
+        for pg in (0.19, 0.20, 0.22):              # ≤ 1.25 × 0.18
+            assert not sched.should_migrate(pg), pg  # old code: stuck True
+        assert sched.should_migrate(0.18 * 1.25 + 0.01)  # real degradation
+
+    def test_degradation_baseline_tracks_improvements(self):
+        sched = MigrationScheduler(degradation_factor=1.25)
+        sched.record_maintenance(0.30)
+        assert not sched.should_migrate(0.10)      # better: becomes baseline
+        assert sched.should_migrate(0.20)          # 2× the improved baseline
+
 
 _DYNAMIC_PARITY = textwrap.dedent("""
     import os
@@ -212,6 +255,26 @@ _DYNAMIC_PARITY = textwrap.dedent("""
     )
     out["maintained_slices"] = sum(r.maintained for r in dev.records)
     out["some_migration"] = bool(any(r.migrated > 0 for r in dev.records))
+
+    # ISSUE 4 acceptance: the resident replay must be bit-identical to a
+    # forced cold solve for the full 20x5% schedule under the *other*
+    # insert policy too (least_traffic is covered by the host-parity run
+    # above — svc.run_ops uses the resident path on the device service).
+    from repro.core.framework import InsertPartitioner
+    from repro.core.traffic_sharded import replay_sharded
+    rt_fv = build(mesh, "shared")
+    rt_fv.insert = InsertPartitioner("fewest_vertices", 4, seed=0, engine="device")
+    svc_fv = rt_fv.service
+    resident_vs_cold = []
+    def check_cold(i, r):
+        cold = replay_sharded(g, ops, mesh, svc_fv.parts, 4, resident=False)
+        resident_vs_cold.append(all(
+            np.array_equal(getattr(r, f), getattr(cold, f)) for f in fields
+        ))
+    res_fv = rt_fv.run(ops, n_slices=20, amount=0.05, maintain_every=4,
+                       on_slice=check_cold)
+    out["fewest_vertices_slices"] = len(resident_vs_cold)
+    out["fewest_vertices_resident_equals_cold"] = all(resident_vs_cold)
 
     # sharded maintenance mode: not bit-parity, but the cycle must hold
     # quality (stay below the unmaintained degradation). k must cover the
@@ -271,3 +334,12 @@ class TestDynamicRuntimeParity:
             results["sharded_percent_global"],
             results["unmaintained_percent_global"],
         )
+
+    def test_resident_equals_cold_both_insert_policies(self, results):
+        """ISSUE 4 acceptance: resident replay bit-identical to cold solve
+        for the full 20×5% schedule. least_traffic is covered by the
+        host-vs-device parity above (the device service replays resident);
+        fewest_vertices compares resident vs forced-cold per slice."""
+        assert results["all_counters_equal"]           # least_traffic leg
+        assert results["fewest_vertices_slices"] == 20
+        assert results["fewest_vertices_resident_equals_cold"]

@@ -109,6 +109,24 @@ class TestEquivalence:
         parts = partitioners.random_partition(gis.n_nodes, 4, seed=2)
         _assert_exact(gis, ops, parts, 4, delta_scale=4.0)
 
+    def test_max_expansions_default_normalized(self, gis):
+        """ISSUE 4 satellite: ``None`` and the explicit default resolve to
+        the *same* cached engine — the engine's value is authoritative, so
+        a default-capped replay can never sit beside a differently-capped
+        engine for the same configuration."""
+        from repro.core.traffic_batched import (
+            _DEFAULT_MAX_EXPANSIONS, resolve_max_expansions,
+        )
+
+        assert resolve_max_expansions(None) == _DEFAULT_MAX_EXPANSIONS
+        assert get_engine(gis, "gis_short") is get_engine(
+            gis, "gis_short", max_expansions=_DEFAULT_MAX_EXPANSIONS
+        )
+        assert get_engine(gis, "gis_short").max_expansions == _DEFAULT_MAX_EXPANSIONS
+        eng = get_engine(gis, "gis_short", max_expansions=64)
+        assert eng.max_expansions == 64
+        assert eng is not get_engine(gis, "gis_short")
+
     def test_small_chunk_padding(self, gis):
         """n_ops far below / not divisible by the chunk size."""
         ops = generate_ops(gis, n_ops=13, seed=7, pattern="gis_short")

@@ -129,6 +129,98 @@ _SHARDED_EQUIVALENCE = textwrap.dedent("""
     out["redo_pass_exercised"] = rep.last_redo_ops > 0
     out["redo_pass_bit_equal"] = equal(got, ref)
 
+    # --- resident replay across slices (ISSUE 4 tentpole) ------------------
+    # Same log, evolving partition map: replay 1 cold-captures the
+    # ResidentReplayState, later replays take the resident fold — each must
+    # be bit-equal to both the batched engine and a forced cold solve.
+    from repro.core.dynamism import DynamismLog, apply_dynamism, generate_dynamism
+    from repro.core.traffic_sharded import get_replayer, migrate_resident_states
+    for name, pattern, n_ops in (("filesystem", "filesystem", 403),
+                                 ("gis", "gis_short", 157)):
+        g = datasets.load(name, scale=0.004)
+        ops = generate_ops(g, n_ops=n_ops, seed=1, pattern=pattern)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+        res_ok = equal(replay_sharded(g, ops, mesh, parts, 4),
+                       execute_ops(g, ops, parts, 4, engine="batched"))
+        for i in range(3):
+            log = generate_dynamism(parts, 0.05, "random", k=4, seed=i)
+            parts = apply_dynamism(parts, log)
+            got = replay_sharded(g, ops, mesh, parts, 4)       # resident fold
+            cold = replay_sharded(g, ops, mesh, parts, 4, resident=False)
+            res_ok &= equal(got, execute_ops(g, ops, parts, 4, engine="batched"))
+            res_ok &= equal(got, cold)
+        out[f"resident_{pattern}_bit_equal"] = res_ok
+
+    # --- uneven-shard dirty-set redo ---------------------------------------
+    # 157 ops over 8 shards (uneven): invalidate a few vertices on the
+    # *unchanged* graph — the touched ops re-solve through the replicated
+    # redo layout and the result must still be bit-equal to the engine.
+    g = datasets.load("gis", scale=0.004)
+    ops = generate_ops(g, n_ops=157, seed=1, pattern="gis_short")
+    parts = partitioners.random_partition(g.n_nodes, 4, seed=3)
+    ref = execute_ops(g, ops, parts, 4, engine="batched")
+    replay_sharded(g, ops, mesh, parts, 4)  # capture
+    rep = get_replayer(g, "gis_short", mesh)
+    rep.invalidate(ops, ops.starts[:5])
+    got = replay_sharded(g, ops, mesh, parts, 4)
+    out["dirty_redo_partial"] = 0 < rep.last_redo_ops < ops.n_ops
+    out["dirty_redo_bit_equal"] = equal(got, ref)
+
+    # --- max_expansions: engine value authoritative end-to-end -------------
+    # A tight cap must reach the windowed pass, the redo pass, and the
+    # resident fold of the sharded replayer — and actually bite.
+    from repro.core.traffic_batched import execute_ops_batched
+    parts = (np.arange(detour.n_nodes) % 4).astype(np.int64)
+    ops = OpLog("gis_short",
+                np.array([0, blob0, blob0 + 2, 0, blob0 + 5, 1], np.int64),
+                np.array([dst, blob0 + 10, blob0 + 4, blob0 + 19, dst, dst], np.int64),
+                t_l=8, t_pg=1)
+    ref_uncapped = execute_ops(detour, ops, parts, 4, engine="batched")
+    ref_cap = execute_ops_batched(detour, ops, parts, 4, chunk=2, max_expansions=7)
+    got_cap = replay_sharded(detour, ops, mesh, parts, 4, chunk=2, max_expansions=7)
+    rep_cap = get_replayer(detour, "gis_short", mesh, chunk=2, max_expansions=7)
+    out["max_expansions_engine_value"] = rep_cap.engine.max_expansions == 7
+    out["max_expansions_redo_exercised"] = rep_cap.last_redo_ops > 0
+    out["max_expansions_bit_equal"] = equal(got_cap, ref_cap)
+    out["max_expansions_bites"] = not equal(got_cap, ref_uncapped)
+    parts2 = np.roll(parts, 1)
+    out["max_expansions_resident_bit_equal"] = equal(
+        replay_sharded(detour, ops, mesh, parts2, 4, chunk=2, max_expansions=7),
+        execute_ops_batched(detour, ops, parts2, 4, chunk=2, max_expansions=7),
+    )
+
+    # --- structural insert invalidation (ISSUE 4 satellite) ----------------
+    # A dynamism slice inserts a shortcut edge that shortens the detour
+    # route: ops whose expansion footprint touches the insert re-solve on
+    # the new graph, the rest stay resident — and the result is bit-equal
+    # to a cold solve of the updated graph.
+    from repro.core.framework import PartitionedGraphService
+    svc = PartitionedGraphService(detour, 4, mesh=mesh)
+    svc.partition_with(parts.astype(np.int32))
+    before = svc.run_ops(ops)
+    w_short = np.float32(np.hypot(
+        detour.node_attrs["lon"][dst] - detour.node_attrs["lon"][0],
+        detour.node_attrs["lat"][dst] - detour.node_attrs["lat"][0],
+    ))
+    slice_log = DynamismLog(
+        vertices=np.array([5]), targets=np.array([1], np.int32),
+        method="random", k=4,
+        insert_senders=np.array([0]), insert_receivers=np.array([dst]),
+        insert_weights=np.array([w_short], np.float32),
+    )
+    svc.apply_dynamism(slice_log)
+    after = svc.run_ops(ops)                     # resident, partial redo
+    cold_new = execute_ops(svc.graph, ops, svc.parts, 4, engine="batched")
+    rep_new = get_replayer(svc.graph, "gis_short", mesh)
+    out["structural_bit_equal"] = equal(after, cold_new)
+    out["structural_route_shortened"] = bool(
+        after.per_op_total[0] < before.per_op_total[0]
+    )
+    out["structural_redo_partial"] = 0 < rep_new.last_redo_ops < ops.n_ops
+    out["structural_next_slice_bit_equal"] = equal(
+        svc.run_ops(ops), cold_new
+    )
+
     print(json.dumps(out))
 """)
 
@@ -172,6 +264,68 @@ class TestShardedReplay:
     def test_replicated_layout_redo_pass(self, results):
         assert results["redo_pass_exercised"]
         assert results["redo_pass_bit_equal"]
+
+    def test_resident_replay_bit_equal_across_slices(self, results):
+        """ISSUE 4 tentpole: resident fold == cold solve == batched engine,
+        every slice, both pattern families."""
+        assert results["resident_filesystem_bit_equal"]
+        assert results["resident_gis_short_bit_equal"]
+
+    def test_uneven_shard_dirty_set_redo(self, results):
+        assert results["dirty_redo_partial"]
+        assert results["dirty_redo_bit_equal"]
+
+    def test_max_expansions_authoritative(self, results):
+        """ISSUE 4 satellite: a non-default cap survives the sharded,
+        redo, and resident paths — and actually changes the counters."""
+        assert results["max_expansions_engine_value"]
+        assert results["max_expansions_redo_exercised"]
+        assert results["max_expansions_bit_equal"]
+        assert results["max_expansions_bites"]
+        assert results["max_expansions_resident_bit_equal"]
+
+    def test_structural_insert_invalidation(self, results):
+        """ISSUE 4 satellite: a slice's edge insert shortens a GIS route;
+        the resident path re-solves only the touched ops and matches a
+        cold solve of the updated graph bit-exactly."""
+        assert results["structural_bit_equal"]
+        assert results["structural_route_shortened"]
+        assert results["structural_redo_partial"]
+        assert results["structural_next_slice_bit_equal"]
+
+
+class TestWaveBoundary:
+    """ISSUE 4 satellite: int32→int64 hand-off at exactly the 2³⁰ margin."""
+
+    def test_wave_splits_at_exact_budget(self):
+        from repro.core.traffic_sharded import _WAVE_BUDGET, bfs_wave_ranges
+
+        # Two ops whose Σ(1+edges) is exactly the budget stay one wave —
+        # the boundary value itself is safe (half the int32 range) …
+        half = _WAVE_BUDGET // 2
+        edges = np.array([half - 1, half - 1], dtype=np.int64)
+        assert bfs_wave_ranges(edges) == [(0, 2)]
+        # … and one more unit of work starts a new wave.
+        edges = np.array([half - 1, half], dtype=np.int64)
+        assert bfs_wave_ranges(edges) == [(0, 1), (1, 2)]
+        # A single over-budget op still forms its own (≥1 op) wave.
+        edges = np.array([2 * half + 5], dtype=np.int64)
+        assert bfs_wave_ranges(edges) == [(0, 1)]
+
+    def test_accumulator_exact_at_wave_margin(self):
+        from repro.core.traffic_sharded import _WAVE_BUDGET
+        from repro.distributed.counters import CounterAccumulator
+
+        # Per-wave mass at exactly the documented 2³⁰ margin: int32-valid
+        # on device, and four such waves (> int32 range in total) must
+        # accumulate exactly on the host.
+        wave = np.array([_WAVE_BUDGET, 1], dtype=np.int32)
+        assert wave[0] == 2**30  # the boundary value is itself int32-safe
+        acc = CounterAccumulator(2)
+        for _ in range(4):
+            acc.add(wave)
+        assert acc.total[0] == 4 * 2**30
+        assert acc.total[0] > np.iinfo(np.int32).max
 
 
 class TestCounterPrimitives:
