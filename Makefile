@@ -13,6 +13,11 @@
 #   make dynamic-resident-smoke  resident-replay smoke, 8-shard CPU mesh
 #                            (cold vs resident bit-equality per slice +
 #                            structural-insert partial redo)
+#   make insert-smoke-dist   vertex-growth Insert-workload smoke, 8-shard
+#                            CPU mesh (20x5% schedule with new-vertex
+#                            inserts: resident vs cold bit-equality under
+#                            both insert policies + structural
+#                            DynamismLog.slice round-trip)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
@@ -20,13 +25,14 @@
 #                            to refresh benchmarks/BENCH_traffic.json)
 #   make check               test + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
+#                            + insert-smoke-dist
 
 PY := PYTHONPATH=src python
 WRITE :=
 
 .PHONY: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke traffic-bench traffic-bench-dist \
-	dynamic-bench-dist check
+	dynamic-resident-smoke insert-smoke-dist traffic-bench \
+	traffic-bench-dist dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q
@@ -46,6 +52,10 @@ dynamic-resident-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --dynamic-resident-smoke
 
+insert-smoke-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --insert-smoke
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -58,4 +68,4 @@ dynamic-bench-dist:
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
 check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke
+	dynamic-resident-smoke insert-smoke-dist

@@ -17,6 +17,9 @@ Usage:
   python -m benchmarks.kernel_bench --dynamic-resident-smoke  # resident replay
       parity smoke: cold vs resident bit-equality per slice, plus a
       structural-insert partial-redo leg
+  python -m benchmarks.kernel_bench --insert-smoke  # vertex-growth Insert
+      workload: 20x5% schedule with new-vertex inserts, resident vs cold
+      bit-equality under both policies + structural slice round-trip
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
@@ -29,7 +32,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -470,6 +473,137 @@ def dynamic_resident_smoke(scale: float = 0.004) -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Insert experiment: vertex-growth schedule parity smoke (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+def insert_smoke(scale: Optional[float] = None) -> List[str]:
+    """Vertex-growth Insert-workload smoke on a mesh over every visible
+    device (the Makefile target forces 8 CPU devices).
+
+    Runs the 20×5 % Insert-experiment schedule — every slice interleaves
+    partition moves with *new-vertex* inserts (incident edges + metadata),
+    the service grows graph and partition map, and resident replay states
+    migrate across each growth — under both sequential insert policies.
+    Every slice's resident replay is compared **bit-for-bit** on all four
+    counters against a forced cold solve of the grown graph. A second leg
+    checks that :meth:`DynamismLog.slice` round-trips a structural log
+    exactly: concatenated slices ≡ the whole log, and applying the slices
+    in sequence reproduces the whole log's partition map and graph.
+    Raises on any mismatch; returns rate rows.
+    """
+    from repro.core.didic import DidicConfig, didic_partition
+    from repro.core.dynamic_runtime import DynamicExperimentRuntime
+    from repro.core.dynamism import apply_dynamism, generate_dynamism
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.traffic import generate_ops
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    # Default below the other smokes' 0.004: every growth slice rebuilds
+    # the engines/replayer on the grown graph, so compile cost scales with
+    # the slice count, and 20 slices × 2 policies is the schedule here.
+    scale = 0.002 if scale is None else scale
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+    rows = []
+
+    g0 = datasets.load("gis", scale=scale)
+    ops = generate_ops(g0, n_ops=150, seed=0, pattern="gis_short")
+    cfg = DidicConfig(k=4, iterations=8, primary_steps=3, secondary_steps=3,
+                      smooth_cap=16)
+    parts0, _ = didic_partition(g0, cfg, seed=0)
+
+    for method in ("fewest_vertices", "least_traffic"):
+        svc = PartitionedGraphService(g0, 4, didic=cfg, mesh=mesh,
+                                      maintenance="shared")
+        svc.partition_with(parts0.copy())
+        runtime = DynamicExperimentRuntime(svc, insert_method=method, seed=0)
+        mismatches = []
+
+        def check(i, got):
+            cold = replay_sharded(svc.graph, ops, mesh, svc.parts, 4,
+                                  resident=False)
+            for f in fields:
+                if not np.array_equal(getattr(got, f), getattr(cold, f)):
+                    mismatches.append((i, f))
+
+        t0 = time.perf_counter()
+        res = runtime.run(ops, n_slices=20, amount=0.05, maintain_every=4,
+                          insert_rate=0.25, on_slice=check)
+        wall = time.perf_counter() - t0
+        if mismatches:
+            raise AssertionError(
+                f"{method}: resident != cold on slices {mismatches[:4]} — "
+                "smoke void"
+            )
+        grown = svc.graph.n_nodes - g0.n_nodes
+        inserted = sum(r.inserted for r in res.records)
+        if grown != inserted or grown <= 0:
+            raise AssertionError(
+                f"{method}: grew {grown} vertices, log allocated {inserted}"
+            )
+        if svc.parts.shape[0] != svc.graph.n_nodes:
+            raise AssertionError(f"{method}: parts/graph size mismatch")
+        rows.append(
+            f"insert/{method}/grown_vertices,{grown},"
+            f"20x5% insert_rate=0.25 shards={shards} in {wall:.1f}s "
+            "(resident bit-exact vs cold every slice)"
+        )
+
+    # Structural-slice round-trip: concatenated slices ≡ whole log, and
+    # slice-by-slice application reproduces the whole-log parts + graph.
+    log = generate_dynamism(parts0, 0.25, "fewest_vertices", k=4, seed=7,
+                            insert_rate=0.3, graph=g0)
+    pieces, f = [], 0.0
+    while f < 1.0 - 1e-12:
+        nf = f + 0.05
+        pieces.append(log.slice(f, min(nf, 1.0)))
+        f = nf
+    cat = {
+        "vertices": np.concatenate([p.vertices for p in pieces]),
+        "targets": np.concatenate([p.targets for p in pieces]),
+        "unit_is_insert": np.concatenate([p.unit_is_insert for p in pieces]),
+        "insert_senders": np.concatenate([p.insert_senders for p in pieces]),
+        "insert_receivers": np.concatenate([p.insert_receivers for p in pieces]),
+        "insert_weights": np.concatenate([p.insert_weights for p in pieces]),
+    }
+    for key, got in cat.items():
+        if not np.array_equal(got, getattr(log, key)):
+            raise AssertionError(f"slice round-trip lost {key} — smoke void")
+    for key, whole_rows in log.insert_attrs.items():
+        got = np.concatenate([p.insert_attrs[key] for p in pieces])
+        if not np.array_equal(got, whole_rows):
+            raise AssertionError(f"slice round-trip lost attrs[{key}] — smoke void")
+    parts_seq, g_seq = parts0.copy(), g0
+    for p in pieces:
+        parts_seq = apply_dynamism(parts_seq, p)
+        g_seq = g_seq.with_vertices(p.n_new_vertices, p.insert_attrs,
+                                    p.insert_senders, p.insert_receivers,
+                                    p.insert_weights)
+    g_whole = g0.with_vertices(log.n_new_vertices, log.insert_attrs,
+                               log.insert_senders, log.insert_receivers,
+                               log.insert_weights)
+    if not np.array_equal(parts_seq, apply_dynamism(parts0, log)):
+        raise AssertionError("sliced parts != whole-log parts — smoke void")
+    same_graph = (
+        g_seq.n_nodes == g_whole.n_nodes
+        and np.array_equal(g_seq.senders, g_whole.senders)
+        and np.array_equal(g_seq.receivers, g_whole.receivers)
+        and np.array_equal(g_seq.edge_weight, g_whole.edge_weight)
+        and all(np.array_equal(g_seq.node_attrs[k], g_whole.node_attrs[k])
+                for k in g_whole.node_attrs)
+    )
+    if not same_graph:
+        raise AssertionError("sliced graph != whole-log graph — smoke void")
+    rows.append(
+        f"insert/slice_roundtrip/inserts,{log.n_new_vertices},"
+        f"20x5% slices of one structural log (exact)"
+    )
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -488,10 +622,17 @@ def main() -> None:
     ap.add_argument("--dynamic-resident-smoke", action="store_true",
                     help="resident replay parity smoke (cold vs resident "
                          "bit-equality, incl. structural-insert redo)")
-    ap.add_argument("--scale", type=float, default=0.004)
+    ap.add_argument("--insert-smoke", action="store_true",
+                    help="vertex-growth Insert-workload smoke (20x5% "
+                         "schedule, resident vs cold bit-equality under "
+                         "both policies + structural slice round-trip)")
+    # None = per-mode default (0.004 everywhere except the insert smoke,
+    # which pins 0.002 — see insert_smoke); an explicit value wins always.
+    ap.add_argument("--scale", type=float, default=None)
     ap.add_argument("--write-baseline", action="store_true",
                     help="write results to benchmarks/BENCH_traffic.json")
     args = ap.parse_args()
+    scale = 0.004 if args.scale is None else args.scale
 
     baseline_path = os.path.join(os.path.dirname(__file__), "BENCH_traffic.json")
 
@@ -510,7 +651,7 @@ def main() -> None:
         print(f"# baseline written to {baseline_path}")
 
     if args.traffic or args.traffic_smoke:
-        results = traffic_bench(scale=args.scale, smoke=args.traffic_smoke)
+        results = traffic_bench(scale=scale, smoke=args.traffic_smoke)
         for row in traffic_rows(results):
             print(row)
         if args.write_baseline:
@@ -520,18 +661,21 @@ def main() -> None:
                 raise SystemExit("--write-baseline requires the full --traffic run")
             write_baseline(results)
     elif args.traffic_dist or args.traffic_dist_smoke:
-        results = traffic_dist_bench(scale=args.scale, smoke=args.traffic_dist_smoke)
+        results = traffic_dist_bench(scale=scale, smoke=args.traffic_dist_smoke)
         for row in traffic_dist_rows(results):
             print(row)
         if args.write_baseline:
             if args.traffic_dist_smoke:
                 raise SystemExit("--write-baseline requires the full --traffic-dist run")
             write_baseline({"sharded": results})
+    elif args.insert_smoke:
+        for row in insert_smoke(scale=args.scale):
+            print(row)
     elif args.dynamic_resident_smoke:
-        for row in dynamic_resident_smoke(scale=args.scale):
+        for row in dynamic_resident_smoke(scale=scale):
             print(row)
     elif args.dynamic or args.dynamic_smoke:
-        results = dynamic_bench(scale=args.scale, smoke=args.dynamic_smoke)
+        results = dynamic_bench(scale=scale, smoke=args.dynamic_smoke)
         for row in dynamic_rows(results):
             print(row)
         if args.write_baseline:

@@ -9,6 +9,8 @@ minutes; ``--scale`` raises toward paper sizes.
   static_traffic     Figs 7.1–7.3: T_G% per method + reduction vs random
   correlation_check  Eq. 7.3 predicted vs measured T_G%
   insert_experiment  §7.4: dynamism levels × insert methods
+  insert_growth_experiment  §7.4 with write-time vertex allocation:
+                     quality/balance vs insert rate per policy
   stress_experiment  §7.5: one DiDiC iteration repairs 25 % dynamism
   dynamic_experiment §7.6: intermittent DiDiC under ongoing dynamism
   maintenance_cost   §Abstract: maintenance ≈ 1 % of initial partitioning
@@ -198,6 +200,44 @@ class PaperBench:
                     )
         return rows
 
+    def insert_growth_experiment(self, k: int = 4, mesh=None,
+                                 n_slices: int = 4, amount: float = 0.05) -> List[Row]:
+        """§7.4's Insert experiment with *write-time vertex allocation*
+        (Tables 7.5-style): traffic quality and balance vs insert rate,
+        per insert policy. Each run drives the dynamic cycle with
+        ``insert_rate`` of every slice's units allocating a new vertex
+        (plus incident edges) on the evolving graph — the service grows
+        graph and partition map, resident replay states migrate across
+        each growth, and intermittent DiDiC maintains the grown graph.
+        Rows record the final T_G%, the served-traffic balance CV, and
+        the realized vertex growth.
+        """
+        rows = []
+        for name in self.cfg.datasets:
+            g = self.graph(name)
+            for method in ("random", "fewest_vertices", "least_traffic"):
+                for rate in (0.1, 0.3):
+                    runtime = self._runtime_for(name, k, method, mesh=mesh)
+                    res = runtime.run(
+                        self.ops(name), n_slices=n_slices, amount=amount,
+                        maintain_every=2, insert_rate=rate,
+                    )
+                    svc = runtime.service
+                    grown = svc.graph.n_nodes - g.n_nodes
+                    tag = f"insert_growth/{name}/{method}/rate{int(rate * 100)}"
+                    rows.append(Row(
+                        f"{tag}/percent_global",
+                        round(res.final.percent_global * 100, 3),
+                        "paper: repartitioning holds quality under inserts",
+                    ))
+                    rows.append(Row(
+                        f"{tag}/cv_traffic_pct",
+                        round(metrics.coefficient_of_variation(
+                            res.final.per_partition) * 100, 2),
+                    ))
+                    rows.append(Row(f"{tag}/grown_vertices", grown))
+        return rows
+
     def _runtime_for(self, name: str, k: int, insert_method: str, mesh=None,
                      maintenance: str = "auto",
                      carry_state: bool = True) -> DynamicExperimentRuntime:
@@ -302,7 +342,8 @@ class PaperBench:
         rows = []
         for fn in (
             self.table_7_1, self.tables_7_2_to_7_4, self.static_traffic,
-            self.correlation_check, self.insert_experiment, self.stress_experiment,
+            self.correlation_check, self.insert_experiment,
+            self.insert_growth_experiment, self.stress_experiment,
             self.dynamic_experiment, self.maintenance_cost,
         ):
             t0 = time.perf_counter()

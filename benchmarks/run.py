@@ -16,7 +16,8 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.01,
                     help="fraction of paper dataset sizes (1.0 = paper)")
     ap.add_argument("--tables", type=str, default="all",
-                    help="comma list: 7.1,7.2,static,corr,insert,stress,dynamic,maint,kernels,roofline")
+                    help="comma list: 7.1,7.2,static,corr,insert,insert-growth,"
+                         "stress,dynamic,maint,kernels,roofline")
     ap.add_argument("--didic-iters", type=int, default=100)
     args = ap.parse_args()
 
@@ -35,6 +36,7 @@ def main() -> None:
         "static": bench.static_traffic,
         "corr": bench.correlation_check,
         "insert": bench.insert_experiment,
+        "insert-growth": bench.insert_growth_experiment,
         "stress": bench.stress_experiment,
         "dynamic": bench.dynamic_experiment,
         "maint": bench.maintenance_cost,

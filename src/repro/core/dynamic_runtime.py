@@ -63,17 +63,20 @@ run. Its lifecycle splits three ways:
   bit-identical to the cold solve), and the finalize-side
   per-partition/per-vertex attribution.
 * **slice-dirty** (invalidated by a slice's *structural* inserts): a
-  :class:`~repro.core.dynamism.DynamismLog` that inserts edges dirties
+  :class:`~repro.core.dynamism.DynamismLog` that inserts edges — or, for
+  the Insert workload (``insert_rate > 0``), whole new vertices — dirties
   exactly the vertices it touches; ops whose expansion footprint
   intersects that set are re-solved through the replicated whole-graph
-  redo layout on the next replay, and everything else stays resident.
-  Pure partition moves — the generator's entire output — dirty nothing.
+  redo layout on the next replay, and everything else stays resident
+  (migrated onto the grown graph by
+  :func:`repro.core.traffic_sharded.migrate_resident_states`).
+  Pure partition moves dirty nothing.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -128,25 +131,33 @@ def _split_digits(x64: np.ndarray):
 
 
 def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
-                   extra: Tuple[np.ndarray, ...] = ()) -> np.ndarray:
+                   extra: Tuple[np.ndarray, ...] = (),
+                   insert: Optional[np.ndarray] = None) -> np.ndarray:
     """Host-side block prep for the unrolled scans.
 
-    Returns one packed int32 array ``[T/U, 4 + len(extra), U]`` — a
+    Returns one packed int32 array ``[T/U, 5 + len(extra), U]`` — a
     *single* device transfer per call (per-call transfer count dominates
     the dynamic cycle's insert leg at real slice sizes). Rows per block:
     ``src0`` (each mover's initial partition), ``prev_in`` (in-block
     offset of the mover's previous move, −1 if none), ``prev_out`` (its
     absolute index when in an earlier block, −1 otherwise), ``live`` (the
-    tail mask), then any ``extra`` per-unit rows (the least-traffic
-    digits).
+    tail mask), ``is_insert`` (vertex-allocation units — no source to
+    decrement, and their mover slot is the attachment anchor, not a moved
+    vertex), then any ``extra`` per-unit rows (the least-traffic digits).
     """
     u = _SCAN_UNROLL
     movers = np.asarray(movers, dtype=np.int64)
     units = movers.shape[0]
     # prev[j] = latest j' < j with movers[j'] == movers[j], else -1
-    # (stable sort groups occurrences of one mover in index order).
-    order = np.lexsort((np.arange(units), movers))
-    sm = movers[order]
+    # (stable sort groups occurrences of one mover in index order). Insert
+    # units never move their anchor, so they take unique pseudo-ids: they
+    # link to nothing and later moves of the anchor skip past them.
+    movers_eff = movers
+    if insert is not None and insert.any():
+        movers_eff = movers.copy()
+        movers_eff[insert] = -1 - np.arange(int(insert.sum()), dtype=np.int64)
+    order = np.lexsort((np.arange(units), movers_eff))
+    sm = movers_eff[order]
     prev = np.full(units, -1, dtype=np.int64)
     if units > 1:
         same = sm[1:] == sm[:-1]
@@ -159,6 +170,8 @@ def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
     rows = (
         np.asarray(parts, dtype=np.int64)[movers], prev_in, prev_out,
         np.ones(units, dtype=np.int64),
+        np.zeros(units, dtype=np.int64) if insert is None
+        else insert.astype(np.int64),
     ) + tuple(extra)
     pad = (-units) % u
     packed = np.zeros((len(rows), units + pad), dtype=np.int32)
@@ -186,7 +199,8 @@ def _fewest_vertices_scan(counts0, packed):
     the tie-breaks — the only freedom in the policy — match the host loop
     exactly; counts are integers, so everything else is exact arithmetic.
     A dead (tail-mask) sub-step adds 0 to the counts, so the live prefix
-    sees the exact sequential state.
+    sees the exact sequential state. Insert units (blk row 4) allocate a
+    new vertex: the target gains one, no source loses one.
     """
     n_pad = packed.shape[0] * _SCAN_UNROLL
     buf0 = jnp.zeros((max(n_pad, _SCAN_UNROLL),), jnp.int32)
@@ -198,7 +212,8 @@ def _fewest_vertices_scan(counts0, packed):
             src = _block_src(buf, blk, ts, j)
             t = jnp.argmin(counts).astype(jnp.int32)
             inc = blk[3, j]  # live mask as 0/1
-            counts = counts.at[src].add(-inc).at[t].add(inc)
+            dec = inc * (1 - blk[4, j])  # moves decrement their source
+            counts = counts.at[src].add(-dec).at[t].add(inc)
             ts.append(t)
         buf = jax.lax.dynamic_update_slice(buf, jnp.stack(ts), (base,))
         return (counts, buf, base + _SCAN_UNROLL), None
@@ -218,8 +233,11 @@ def _least_traffic_scan(tr_hi0, tr_lo0, packed):
     order equals numeric order and the first-lex-min below reproduces
     ``np.argmin`` over the oracle's float64 totals bit-for-bit. Dead
     sub-steps move 0 traffic, so the normalization is a no-op there.
-    ``packed`` rows 4/5 carry the movers' traffic digits (host-gathered —
-    every scan input is [units]-sized, never [N]-sized).
+    ``packed`` rows 5/6 carry the movers' traffic digits (host-gathered —
+    every scan input is [units]-sized, never [N]-sized); insert units'
+    digits are zeroed on the host (a new vertex has no observed traffic),
+    which makes their whole sub-step a traffic no-op — exactly the host
+    oracle's behaviour.
     """
 
     def lex_argmin(hi, lo):
@@ -238,7 +256,7 @@ def _least_traffic_scan(tr_hi0, tr_lo0, packed):
             src = _block_src(buf, blk, ts, j)
             t = lex_argmin(hi, lo)
             inc = blk[3, j]  # live mask as 0/1
-            d_hi, d_lo = blk[4, j] * inc, blk[5, j] * inc
+            d_hi, d_lo = blk[5, j] * inc, blk[6, j] * inc
             lo = lo.at[src].add(-d_lo).at[t].add(d_lo)
             hi = hi.at[src].add(-d_hi).at[t].add(d_hi)
             carry_d = jnp.floor_divide(lo, _DIGIT)  # ∈ {-1, 0, 1} by construction
@@ -260,9 +278,15 @@ def scan_dynamism_targets(
     method: str,
     k: int,
     vertex_traffic: Optional[np.ndarray] = None,
+    insert_mask: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Device-scan targets for a mover sequence — bit-identical to the
     sequential host oracle in :func:`repro.core.dynamism.generate_dynamism`.
+
+    ``insert_mask`` flags vertex-allocation units (the Insert workload):
+    their slot in ``movers`` is the attachment anchor, the policy treats
+    them as a pure addition to the chosen target (no source decrement, no
+    traffic carried — a new vertex has none observed yet).
 
     ``least_traffic`` requires integer-valued, non-negative
     ``vertex_traffic`` with per-partition totals below 2⁵¹ (always true
@@ -271,10 +295,15 @@ def scan_dynamism_targets(
     """
     movers = np.asarray(movers)
     units = int(movers.shape[0])
+    if insert_mask is not None:
+        insert_mask = np.asarray(insert_mask, dtype=bool)
+        if insert_mask.shape[0] != units:
+            raise ValueError("insert_mask must be one flag per unit")
     if method == "fewest_vertices":
         counts0 = np.bincount(parts, minlength=k).astype(np.int32)
         targets = _fewest_vertices_scan(
-            jnp.asarray(counts0), jnp.asarray(_unroll_blocks(movers, parts))
+            jnp.asarray(counts0),
+            jnp.asarray(_unroll_blocks(movers, parts, insert=insert_mask)),
         )
         return np.asarray(targets, dtype=np.int32)[:units]
     if method != "least_traffic":
@@ -295,10 +324,14 @@ def scan_dynamism_targets(
     tr0 = np.zeros(k, dtype=np.int64)
     np.add.at(tr0, np.asarray(parts, dtype=np.int64), vt64)
     tr_hi0, tr_lo0 = _split_digits(tr0)
-    vt_hi, vt_lo = _split_digits(vt64[movers.astype(np.int64)])
+    vt_unit = vt64[movers.astype(np.int64)]
+    if insert_mask is not None:
+        vt_unit = np.where(insert_mask, np.int64(0), vt_unit)
+    vt_hi, vt_lo = _split_digits(vt_unit)
     targets = _least_traffic_scan(
         jnp.asarray(tr_hi0), jnp.asarray(tr_lo0),
-        jnp.asarray(_unroll_blocks(movers, parts, extra=(vt_hi, vt_lo))),
+        jnp.asarray(_unroll_blocks(movers, parts, extra=(vt_hi, vt_lo),
+                                   insert=insert_mask)),
     )
     return np.asarray(targets, dtype=np.int32)[:units]
 
@@ -316,6 +349,7 @@ class SliceRecord:
     maintained: bool
     migrated: int                              # vertices moved by migration
     damaged_percent_global: Optional[float] = None
+    inserted: int = 0                          # new vertices allocated
 
 
 @dataclasses.dataclass
@@ -359,6 +393,7 @@ class DynamicExperimentRuntime:
         maintain_every: int = 1,
         iterations: int = 1,
         measure_damaged: bool = False,
+        insert_rate: float = 0.0,
         on_slice: Optional[Callable[[int, TrafficResult], None]] = None,
     ) -> DynamicRunResult:
         """Run ``n_slices`` slices of ``amount`` dynamism each.
@@ -369,7 +404,11 @@ class DynamicExperimentRuntime:
         ``iterations`` + migration via the scheduler), then replay ``ops``
         for the slice's traffic measurement. ``measure_damaged`` adds a
         pre-maintenance measurement (the Stress experiment's
-        ``damaged_pg``). ``on_slice`` sees every post-maintenance
+        ``damaged_pg``). ``insert_rate`` makes that fraction of each
+        slice's units *allocate new vertices* (with incident edges) on the
+        service's current graph — the paper's Insert workload — so the
+        graph, the partition map, and the per-vertex traffic feed all grow
+        across slices. ``on_slice`` sees every post-maintenance
         :class:`TrafficResult` — the parity test uses it to compare all
         four counters per slice without bloating the records.
         """
@@ -379,7 +418,8 @@ class DynamicExperimentRuntime:
         records: List[SliceRecord] = []
         for i in range(n_slices):
             log = self.insert.allocate(
-                svc.parts, amount, vertex_traffic=result.per_vertex
+                svc.parts, amount, vertex_traffic=result.per_vertex,
+                insert_rate=insert_rate, graph=svc.graph,
             )
             svc.apply_dynamism(log)
             damaged_pg = (
@@ -406,6 +446,7 @@ class DynamicExperimentRuntime:
                 maintained=maintained,
                 migrated=migrated,
                 damaged_percent_global=damaged_pg,
+                inserted=log.n_new_vertices,
             ))
         return DynamicRunResult(
             baseline=baseline,

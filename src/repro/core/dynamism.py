@@ -1,29 +1,44 @@
 """Dynamism generation and insert-partitioning methods (paper §6.4).
 
-One *unit of dynamism* moves one vertex to a partition chosen by an
-insert-partitioning method; ``dynamism = units / |V|`` (Eq. 6.1). Graph
-structure never changes — only the partition map — matching the paper's
-requirement that evaluation logs stay valid.
+The log model: a :class:`DynamismLog` is a *replayable* sequence of units,
+each of which is either
+
+* a **partition move** — an existing vertex is re-assigned to a partition
+  chosen by an insert-partitioning method (``dynamism = units / |V|``,
+  Eq. 6.1), or
+* a **vertex insert** — a *new* vertex (plus its incident edges and
+  metadata) is allocated to a partition by the same method, the way the
+  paper's Insert-Partitioning component allocates entities at write time.
 
 Insert methods (paper §6.4):
 * ``random``          — uniform target partition (baseline),
 * ``fewest_vertices`` — target = partition with fewest vertices,
 * ``least_traffic``   — target = partition with least accumulated traffic.
 
-Moves are generated *sequentially* (each choice sees the counts updated by
-all previous moves), exactly like the paper's simulator, and recorded in a
-replayable :class:`DynamismLog` — the Dynamic experiment re-applies the
-same log in 5 % slices.
+Units are generated *sequentially* (each choice sees the counts updated by
+all previous units), exactly like the paper's simulator. Pure-move logs
+(``insert_rate=0``, the default) leave graph structure untouched, so
+evaluation logs stay valid verbatim; structural logs additionally carry
+inserted edges — and, for vertex growth, per-unit attribution
+(:attr:`DynamismLog.unit_is_insert` / :attr:`DynamismLog.insert_unit`) plus
+the new vertices' metadata rows — so :meth:`DynamismLog.slice` can cut a
+structural log into the Dynamic experiment's 5 % slices without dropping
+or double-applying an insert. Only inserted edges dirty the graph-pure
+replay artifacts (GIS expansion sets, BFS frontier mass) that the resident
+replay path keeps device-resident; partition moves never do, because those
+artifacts do not read the partition map.
 
 The Python loops below are the semantic reference; ``engine="device"``
 runs the same sequential policies as a single :func:`jax.lax.scan`
-(:mod:`repro.core.dynamic_runtime`) with bit-identical targets.
+(:mod:`repro.core.dynamic_runtime`) with bit-identical targets — including
+insert units, which add a vertex to their target without decrementing any
+source partition.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -34,33 +49,65 @@ INSERT_METHODS = ("random", "fewest_vertices", "least_traffic")
 
 @dataclasses.dataclass
 class DynamismLog:
-    vertices: np.ndarray   # [units] vertex moved at each step
+    vertices: np.ndarray   # [units] vertex moved (move) or allocated (insert)
     targets: np.ndarray    # [units] destination partition
     method: str
     k: int
-    # Optional structural inserts: edges written during the slice. The
-    # paper's insert-partitioner allocates *new* entities at write time;
-    # pure-move logs (the generator's output) model that as partition-map
-    # churn only, but a slice may additionally carry inserted edges. Only
-    # these dirty the graph-pure replay artifacts (GIS expansion sets, BFS
-    # frontier mass) that the resident replay path keeps device-resident —
-    # partition moves never do, because those artifacts do not read the
-    # partition map.
+    # Structural inserts: edges written during the slice. Only these dirty
+    # the graph-pure replay artifacts the resident replay path keeps
+    # device-resident — partition moves never do (those artifacts do not
+    # read the partition map).
     insert_senders: Optional[np.ndarray] = None    # [inserts] int
     insert_receivers: Optional[np.ndarray] = None  # [inserts] int
     insert_weights: Optional[np.ndarray] = None    # [inserts] float32
+    # Vertex growth: units flagged in ``unit_is_insert`` allocate a *new*
+    # vertex (its id recorded in ``vertices``, contiguous from
+    # ``base_nodes``); ``insert_unit[e]`` is the unit that wrote edge ``e``
+    # (per-unit attribution — what makes :meth:`slice` exact on structural
+    # logs), and ``insert_attrs`` carries one metadata row per new vertex
+    # in allocation order (coordinates for GIS graphs, type/parent/depth
+    # for filesystem trees).
+    base_nodes: Optional[int] = None               # |V| before this log
+    unit_is_insert: Optional[np.ndarray] = None    # [units] bool
+    insert_unit: Optional[np.ndarray] = None       # [inserts] int64, -1 = unattributed
+    insert_attrs: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
     def units(self) -> int:
         return int(self.vertices.shape[0])
 
     @property
+    def n_new_vertices(self) -> int:
+        """New vertices this log allocates (0 for pure-move logs)."""
+        if self.unit_is_insert is None:
+            return 0
+        return int(np.asarray(self.unit_is_insert).sum())
+
+    @property
     def structural(self) -> bool:
-        """True when the log inserts edges (changes graph structure)."""
-        return (
+        """True when the log changes graph structure (edges or vertices)."""
+        has_edges = (
             self.insert_senders is not None
             and np.asarray(self.insert_senders).shape[0] > 0
         )
+        return has_edges or self.n_new_vertices > 0
+
+    @property
+    def _unit_attributed(self) -> bool:
+        """Structural payload carries per-unit attribution (sliceable)."""
+        return (
+            self.base_nodes is not None
+            and self.unit_is_insert is not None
+            and self.insert_unit is not None
+        )
+
+    def new_vertices(self) -> np.ndarray:
+        """Ids of the vertices this log allocates, in allocation order."""
+        if self.unit_is_insert is None:
+            return np.zeros(0, dtype=np.int64)
+        return np.asarray(self.vertices, dtype=np.int64)[
+            np.asarray(self.unit_is_insert, dtype=bool)
+        ]
 
     def dirty_vertices(self) -> np.ndarray:
         """Vertices whose *graph structure* this log changes.
@@ -68,13 +115,19 @@ class DynamismLog:
         The resident replay path re-solves exactly the ops whose expansion
         footprint touches one of these; partition moves contribute nothing
         here because graph-pure artifacts never read the partition map.
+        New vertices appear alongside their attachment anchors — a new
+        vertex is only reachable through its anchors, so a changed route
+        always has an anchor inside the old footprint.
         """
         if not self.structural:
             return np.zeros(0, dtype=np.int64)
-        return np.unique(np.concatenate([
-            np.asarray(self.insert_senders, dtype=np.int64),
-            np.asarray(self.insert_receivers, dtype=np.int64),
-        ]))
+        parts = [self.new_vertices()]
+        if self.insert_senders is not None:
+            parts += [
+                np.asarray(self.insert_senders, dtype=np.int64),
+                np.asarray(self.insert_receivers, dtype=np.int64),
+            ]
+        return np.unique(np.concatenate(parts))
 
     def _endpoint(self, frac: float) -> int:
         """Map a fraction to a unit index so that *equal rationals map to
@@ -92,14 +145,115 @@ class DynamismLog:
 
         Consecutive slices partition the log exactly: ``slice(a, b)`` and
         ``slice(b', c)`` share their boundary unit whenever ``b`` and
-        ``b'`` are float renderings of the same fraction."""
-        if self.structural:
-            # Structural inserts have no per-unit attribution, so a
-            # sub-slice would silently drop or double-apply them.
-            raise ValueError("structural dynamism logs cannot be sub-sliced")
+        ``b'`` are float renderings of the same fraction. Structural logs
+        slice too when their inserts carry per-unit attribution (the
+        generator's vertex-growth output always does): each slice keeps
+        exactly the edges and new-vertex metadata its units wrote, and its
+        ``base_nodes`` advances past earlier slices' inserts so slices
+        apply in sequence — concatenated slices ≡ the whole log.
+        """
+        if self.structural and not self._unit_attributed:
+            # Hand-built structural logs without per-unit attribution: a
+            # sub-slice would silently drop or double-apply the inserts.
+            raise ValueError(
+                "structural dynamism log has no per-unit insert attribution "
+                "and cannot be sub-sliced"
+            )
         lo = self._endpoint(start_frac)
         hi = self._endpoint(stop_frac)
-        return DynamismLog(self.vertices[lo:hi], self.targets[lo:hi], self.method, self.k)
+        if not self.structural and self.unit_is_insert is None:
+            return DynamismLog(
+                self.vertices[lo:hi], self.targets[lo:hi], self.method, self.k
+            )
+        ins = np.asarray(self.unit_is_insert, dtype=bool)
+        unit_of_edge = np.asarray(self.insert_unit, dtype=np.int64)
+        sel = (unit_of_edge >= lo) & (unit_of_edge < hi)
+        first_new = int(ins[:lo].sum())
+        n_new = int(ins[lo:hi].sum())
+        return DynamismLog(
+            vertices=self.vertices[lo:hi],
+            targets=self.targets[lo:hi],
+            method=self.method,
+            k=self.k,
+            insert_senders=np.asarray(self.insert_senders)[sel],
+            insert_receivers=np.asarray(self.insert_receivers)[sel],
+            insert_weights=(
+                None if self.insert_weights is None
+                else np.asarray(self.insert_weights)[sel]
+            ),
+            base_nodes=int(self.base_nodes) + first_new,
+            unit_is_insert=ins[lo:hi],
+            insert_unit=unit_of_edge[sel] - lo,
+            insert_attrs={
+                key: rows[first_new: first_new + n_new]
+                for key, rows in self.insert_attrs.items()
+            },
+        )
+
+
+def _grow_payload(graph, anchors: np.ndarray, new_ids: np.ndarray, rng):
+    """Structural payload for one new vertex per anchor.
+
+    Deterministic given ``rng`` state and policy-independent, so both
+    engines share it (targets never feed back into the payload). Flavors:
+
+    * coordinate graphs (GIS): the new vertex lands a small offset from
+      its anchor, one edge new→anchor with weight ≥ the Euclidean length
+      (the A*/resident-footprint admissibility invariant; the undirected
+      view symmetrizes it);
+    * filesystem trees: the new vertex is a file under the anchor's
+      nearest enclosing folder (edge folder→file, the BFS universe);
+    * everything else (twitter): a follow edge each way.
+
+    Returns ``(senders, receivers, weights, attrs)`` with ``attrs`` rows
+    aligned to ``new_ids`` order.
+    """
+    attrs = graph.node_attrs
+    n_ins = anchors.shape[0]
+    if "lon" in attrs and "lat" in attrs:
+        lon = np.asarray(attrs["lon"], dtype=np.float64)
+        lat = np.asarray(attrs["lat"], dtype=np.float64)
+        off = rng.normal(0.0, 0.01, size=(n_ins, 2))
+        new_lon = lon[anchors] + off[:, 0]
+        new_lat = lat[anchors] + off[:, 1]
+        # Weight strictly above the straight-line length, with margin far
+        # beyond float32 storage rounding of the coordinates (~1 ulp).
+        w = (np.hypot(off[:, 0], off[:, 1]) * 1.001 + 1e-5).astype(np.float32)
+        return (
+            new_ids.copy(), anchors.copy(), w,
+            {"lon": new_lon.astype(attrs["lon"].dtype),
+             "lat": new_lat.astype(attrs["lat"].dtype)},
+        )
+    if "node_type" in attrs:
+        from repro.graphs.generators import FS_FILE, FS_FOLDER  # lazy: no cycle
+
+        nt = np.asarray(attrs["node_type"])
+        parent = np.asarray(attrs["parent"], dtype=np.int64)
+        depth = np.asarray(attrs["depth"], dtype=np.int64)
+        folder = anchors.astype(np.int64).copy()
+        for _ in range(int(depth.max()) + 2):
+            step = (nt[folder] != FS_FOLDER) & (parent[folder] >= 0)
+            if not step.any():
+                break
+            folder[step] = parent[folder[step]]
+        return (
+            folder.copy(), new_ids.copy(),
+            np.ones(n_ins, dtype=np.float32),
+            {"node_type": np.full(n_ins, FS_FILE, dtype=nt.dtype),
+             "parent": folder.astype(attrs["parent"].dtype),
+             "depth": (depth[folder] + 1).astype(attrs["depth"].dtype)},
+        )
+    # Plain graphs (twitter): one follow edge in each direction. Emitted
+    # unit-major (the pair of each insert adjacent) so slicing a log and
+    # concatenating the slices preserves edge order exactly — the graphs
+    # built from slices and from the whole log must be identical arrays,
+    # not merely equal sets (CSR layouts are edge-order-dependent).
+    return (
+        np.stack([anchors, new_ids], axis=1).reshape(-1),
+        np.stack([new_ids, anchors], axis=1).reshape(-1),
+        np.ones(2 * n_ins, dtype=np.float32),
+        {},
+    )
 
 
 def generate_dynamism(
@@ -110,41 +264,98 @@ def generate_dynamism(
     vertex_traffic: Optional[np.ndarray] = None,
     seed: "int | np.random.SeedSequence" = 0,
     engine: str = "host",
+    insert_rate: float = 0.0,
+    graph=None,
 ) -> DynamismLog:
-    """Create ``amount·|V|`` sequential move operations.
+    """Create ``amount·|V|`` sequential move/insert operations.
 
     ``vertex_traffic`` (required for ``least_traffic``) is the per-vertex
     traffic estimate from a prior simulation run — the paper interleaves
     reads with inserts so the insert method can observe traffic; we feed it
     the measured distribution (``TrafficResult.per_vertex``, identical
     int64 counts from either the batched or scalar engine), and partition
-    traffic totals are updated as vertices (and their traffic) move.
+    traffic totals are updated as vertices (and their traffic) move. It
+    may be shorter than ``parts`` (vertices grown since the measurement
+    carry zero observed traffic) — it is zero-padded.
+
+    ``insert_rate`` is the fraction of units that *allocate a new vertex*
+    instead of moving an existing one (the paper's write-time Insert
+    workload); it requires ``graph``, whose metadata seeds the new
+    vertices' attributes and incident edges (:func:`_grow_payload`). The
+    resulting log carries per-unit insert attribution, so it slices
+    exactly. With ``insert_rate=0`` the draw sequence — and therefore the
+    log — is bit-identical to the pre-growth generator.
 
     ``engine="device"`` runs the sequential policies as a
     :func:`jax.lax.scan` (:func:`repro.core.dynamic_runtime.scan_dynamism_targets`)
-    with **bit-identical targets**; the Python loops below stay as the
-    semantic reference. ``seed`` may be a :class:`np.random.SeedSequence`
-    (the insert partitioner passes spawned per-call streams); both engines
-    draw the same movers either way.
+    with **bit-identical targets**, insert units included; the Python
+    loops below stay as the semantic reference. ``seed`` may be a
+    :class:`np.random.SeedSequence` (the insert partitioner passes spawned
+    per-call streams); both engines draw the same movers either way.
     """
     if method not in INSERT_METHODS:
         raise ValueError(f"unknown insert method {method!r}")
     if engine not in ("host", "device"):
         raise ValueError(f"unknown dynamism engine {engine!r}")
+    if not 0.0 <= insert_rate <= 1.0:
+        raise ValueError(f"insert_rate must be in [0, 1], got {insert_rate}")
     k = int(parts.max()) + 1 if k is None else k
     n = parts.shape[0]
     units = int(round(amount * n))
     rng = np.random.default_rng(seed)
     movers = rng.integers(0, n, size=units)
 
+    if insert_rate > 0.0:
+        if graph is None:
+            raise ValueError("insert_rate > 0 requires the graph")
+        if graph.n_nodes != n:
+            raise ValueError(
+                f"graph has {graph.n_nodes} vertices but parts has {n}"
+            )
+        is_insert = rng.random(units) < insert_rate
+        n_ins = int(is_insert.sum())
+        new_ids = n + np.arange(n_ins, dtype=np.int64)
+        anchors = movers[is_insert].astype(np.int64)
+        ins_s, ins_r, ins_w, ins_attrs = _grow_payload(graph, anchors, new_ids, rng)
+        # Payloads are unit-major (every insert's edges adjacent), so the
+        # per-edge attribution is a plain repeat — and slice concatenation
+        # preserves edge order bit-for-bit.
+        unit_ids = np.nonzero(is_insert)[0].astype(np.int64)
+        reps = ins_s.shape[0] // max(n_ins, 1) if n_ins else 0
+        insert_unit = np.repeat(unit_ids, reps) if n_ins else np.zeros(0, np.int64)
+        vertices = movers.astype(np.int64)
+        vertices[is_insert] = new_ids
+        growth = dict(
+            insert_senders=ins_s.astype(np.int64),
+            insert_receivers=ins_r.astype(np.int64),
+            insert_weights=ins_w,
+            base_nodes=n,
+            unit_is_insert=is_insert,
+            insert_unit=insert_unit,
+            insert_attrs=ins_attrs,
+        )
+    else:
+        is_insert = None
+        vertices = None  # set below: pure-move logs keep the old layout
+        growth = {}
+
+    if vertex_traffic is not None and np.asarray(vertex_traffic).shape[0] < n:
+        vertex_traffic = np.concatenate([
+            np.asarray(vertex_traffic),
+            np.zeros(n - np.asarray(vertex_traffic).shape[0],
+                     dtype=np.asarray(vertex_traffic).dtype),
+        ])
+
     if engine == "device" and method != "random":
         from repro.core.dynamic_runtime import scan_dynamism_targets  # lazy: jax
 
         targets = scan_dynamism_targets(
-            parts, movers, method, k, vertex_traffic=vertex_traffic
+            parts, movers, method, k, vertex_traffic=vertex_traffic,
+            insert_mask=is_insert,
         )
         return DynamismLog(
-            vertices=movers.astype(np.int64), targets=targets, method=method, k=k
+            vertices=movers.astype(np.int64) if vertices is None else vertices,
+            targets=targets, method=method, k=k, **growth,
         )
 
     cur = parts.astype(np.int64).copy()
@@ -155,6 +366,7 @@ def generate_dynamism(
         traffic = np.zeros(k, dtype=np.float64)
         np.add.at(traffic, cur, vertex_traffic)
     targets = np.empty(units, dtype=np.int32)
+    ins = np.zeros(units, dtype=bool) if is_insert is None else is_insert
 
     if method == "random":
         # Targets are independent of the running counts, so the sequential
@@ -165,25 +377,48 @@ def generate_dynamism(
         for i, v in enumerate(movers):
             t = int(np.argmin(counts))
             targets[i] = t
-            counts[cur[v]] -= 1
-            counts[t] += 1
-            cur[v] = t
+            if ins[i]:
+                counts[t] += 1  # new vertex: no source to decrement
+            else:
+                counts[cur[v]] -= 1
+                counts[t] += 1
+                cur[v] = t
     else:  # least_traffic
         vt = np.asarray(vertex_traffic, dtype=np.float64)
         for i, v in enumerate(movers):
             t = int(np.argmin(traffic))
             targets[i] = t
-            traffic[cur[v]] -= vt[v]
-            traffic[t] += vt[v]
-            counts[cur[v]] -= 1
-            counts[t] += 1
-            cur[v] = t
+            if ins[i]:
+                counts[t] += 1  # new vertex: zero observed traffic so far
+            else:
+                traffic[cur[v]] -= vt[v]
+                traffic[t] += vt[v]
+                counts[cur[v]] -= 1
+                counts[t] += 1
+                cur[v] = t
 
-    return DynamismLog(vertices=movers.astype(np.int64), targets=targets, method=method, k=k)
+    return DynamismLog(
+        vertices=movers.astype(np.int64) if vertices is None else vertices,
+        targets=targets, method=method, k=k, **growth,
+    )
 
 
 def apply_dynamism(parts: np.ndarray, log: DynamismLog) -> np.ndarray:
-    """Replay a dynamism log onto a partition map (last write wins)."""
-    out = parts.copy()
+    """Replay a dynamism log onto a partition map (last write wins).
+
+    Vertex-growth logs extend the map: new vertices take the partition the
+    log allocated them (the service applies the matching graph growth via
+    :meth:`repro.graphs.structure.Graph.with_vertices`).
+    """
+    n_new = log.n_new_vertices
+    if n_new:
+        if log.base_nodes is not None and parts.shape[0] != log.base_nodes:
+            raise ValueError(
+                f"partition map has {parts.shape[0]} vertices but the log "
+                f"grows a base of {log.base_nodes}"
+            )
+        out = np.concatenate([parts, np.zeros(n_new, dtype=parts.dtype)])
+    else:
+        out = parts.copy()
     out[log.vertices] = log.targets
     return out

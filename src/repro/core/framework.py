@@ -31,6 +31,7 @@ same cycle, same seeds, same results where bit-parity is contracted.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -87,11 +88,18 @@ class InsertPartitioner:
         parts: np.ndarray,
         amount: float,
         vertex_traffic: Optional[np.ndarray] = None,
+        insert_rate: float = 0.0,
+        graph: Optional[Graph] = None,
     ) -> DynamismLog:
+        """Allocate one dynamism slice; ``insert_rate`` of the units
+        allocate *new* vertices (with incident edges sampled on ``graph``,
+        required then) instead of moving existing ones — the paper's
+        write-time Insert workload."""
         (stream,) = self._seeds.spawn(1)
         return generate_dynamism(
             parts, amount, self.method, self.k,
             vertex_traffic=vertex_traffic, seed=stream, engine=self.engine,
+            insert_rate=insert_rate, graph=graph,
         )
 
 
@@ -112,12 +120,19 @@ class RuntimeLogger:
             self.infos[i].n_edges = int(counts["edges"][i])
 
     def observe_traffic(self, result: TrafficResult) -> None:
-        global_total = result.global_
-        # Global traffic is attributed proportionally to partition traffic
-        # share (the emulator counts a cross-partition action on both ends).
+        """Attribute served traffic per partition, split local vs global
+        (§5.2). Global actions are attributed proportionally to each
+        partition's served share (the emulator counts a cross-partition
+        action on both ends); the split is exact integer arithmetic, so
+        ``local + global == served`` holds per partition and the summed
+        global attribution never exceeds the measured global total."""
+        total = int(result.per_op_total.sum())
+        global_total = int(result.per_op_global.sum())
         for i in range(self.k):
             served = int(result.per_partition[i])
-            self.infos[i].local_traffic += served
+            g = (global_total * served) // total if total > 0 else 0
+            self.infos[i].global_traffic += g
+            self.infos[i].local_traffic += served - g
         # store aggregate for degradation detection
         self._last_percent_global = result.percent_global
 
@@ -130,8 +145,11 @@ class RuntimeLogger:
                 np.array([i.n_vertices for i in self.infos])
             ),
             "edges": metrics.coefficient_of_variation(np.array([i.n_edges for i in self.infos])),
+            # Balance is judged on *served* traffic — local and global
+            # attribution together, i.e. exactly the per-partition units
+            # of the TrafficResult(s) observed so far.
             "traffic": metrics.coefficient_of_variation(
-                np.array([i.local_traffic for i in self.infos])
+                np.array([i.local_traffic + i.global_traffic for i in self.infos])
             ),
         }
 
@@ -199,12 +217,16 @@ class MigrationScheduler:
     (or on an explicit interval — the paper's Dynamic experiment uses a
     fixed interval).
 
-    The baseline resets every time maintenance runs
-    (:meth:`record_maintenance`). Comparing against the first-ever/best
-    measurement instead — the old behaviour — permanently locks a long
-    dynamic run into migration once the graph has drifted past what
-    maintenance can recover: every slice reads as "degraded" relative to a
-    quality level that no longer exists.
+    The baseline moves only at well-defined points: the first measurement
+    establishes it, and every maintenance pass resets it
+    (:meth:`record_maintenance`). The old behaviour min-ratcheted it on
+    *every* :meth:`should_migrate` call, so one lucky low slice — traffic
+    noise, a transiently favourable map — dragged the baseline below
+    anything the graph can sustain and every later slice read as
+    "degraded": the service migrated permanently until the next
+    maintenance reset (and forever, for callers that migrate outside the
+    maintenance cycle). Improvements worth keeping as the reference are
+    recorded explicitly via :meth:`record_maintenance`.
     """
 
     def __init__(self, min_move_fraction: float = 0.002, degradation_factor: float = 1.25):
@@ -214,7 +236,10 @@ class MigrationScheduler:
         self.history: List[Dict] = []
 
     def should_migrate(self, percent_global: float) -> bool:
-        self.baseline_percent_global = min(self.baseline_percent_global, percent_global)
+        if not np.isfinite(self.baseline_percent_global):
+            # First-ever measurement: nothing to compare against yet.
+            self.baseline_percent_global = float(percent_global)
+            return False
         return percent_global > self.baseline_percent_global * self.degradation_factor
 
     def record_maintenance(self, percent_global: float) -> None:
@@ -293,9 +318,16 @@ class PartitionedGraphService:
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.parts = np.zeros(graph.n_nodes, dtype=np.int32)
-        # Evaluation logs served so far: structural dynamism must migrate
-        # their device-resident replay state onto the updated graph.
-        self._replayed_logs: List[OpLog] = []
+        # Evaluation logs served so far, keyed by content fingerprint (the
+        # same identity contract as ``get_replayer``'s cache): structural
+        # dynamism must migrate their device-resident replay state onto
+        # the updated graph, and a regenerated-but-equal log must land on
+        # the original's resident state, not allocate a second one. LRU —
+        # logs beyond ``max_resident_logs`` have their device-resident
+        # replay artifacts evicted so a long-running service's memory is
+        # bounded by the working set, not its history.
+        self._replayed_logs: "OrderedDict[str, OpLog]" = OrderedDict()
+        self.max_resident_logs = 8
         self.logger = RuntimeLogger(k)
         maint_mesh = mesh if maintenance in ("auto", "sharded") else None
         self.runtime = RuntimePartitioner(
@@ -362,15 +394,15 @@ class PartitionedGraphService:
         repeated replays of one log against an evolving partition map —
         the dynamic experiment's measurement loop — reduce to the
         partition-dependent counter fold. ``resident=False`` forces a full
-        cold solve (the bit-equality comparator).
+        cold solve (the bit-equality comparator). Equal-content logs share
+        one resident state (:meth:`_register_log`).
         """
         if engine == "sharded" and self.mesh is None:
             raise ValueError("engine='sharded' requires a service mesh")
         if engine == "sharded" or (engine == "auto" and self.mesh is not None):
             from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
 
-            if all(o is not ops for o in self._replayed_logs):
-                self._replayed_logs.append(ops)
+            ops = self._register_log(ops)
             result = replay_sharded(
                 self.graph, ops, self.mesh, self.parts, self.k,
                 data_axes=self.data_axes, resident=resident,
@@ -380,34 +412,84 @@ class PartitionedGraphService:
         self.logger.observe_traffic(result)
         return result
 
+    def _register_log(self, ops: OpLog) -> OpLog:
+        """Register an evaluation log in the resident-replay working set.
+
+        Dedupe is by content fingerprint: a regenerated-but-equal log
+        resolves to the first-seen object (whose device-resident solve
+        state it then reuses — a second object would silently double the
+        device footprint). The registry is LRU-bounded; evicted logs have
+        their resident replay states dropped so long-running services do
+        not leak device memory across an unbounded log history.
+        """
+        fp = ops.fingerprint()
+        cached = self._replayed_logs.get(fp)
+        if cached is not None:
+            self._replayed_logs.move_to_end(fp)
+            return cached
+        self._replayed_logs[fp] = ops
+        while len(self._replayed_logs) > self.max_resident_logs:
+            _, evicted = self._replayed_logs.popitem(last=False)
+            evicted.__dict__.pop("_resident_replay", None)
+        return ops
+
     def make_ops(self, n_ops: int = 10_000, seed: int = 0, pattern: Optional[str] = None) -> OpLog:
         return generate_ops(self.graph, n_ops=n_ops, seed=seed, pattern=pattern)
 
     # -- dynamism -----------------------------------------------------------
     def apply_dynamism(self, log: DynamismLog) -> None:
-        """Apply a dynamism slice: partition moves + (optional) edge inserts.
+        """Apply a dynamism slice: partition moves, edge inserts, and —
+        for vertex-growth logs — new vertices.
 
         A structural log rebuilds the service graph via
+        :meth:`~repro.graphs.structure.Graph.with_vertices` /
         :meth:`~repro.graphs.structure.Graph.with_edges` and migrates the
         device-resident replay state of every served evaluation log onto
         the new graph, marking the log's dirty vertices so only the ops
         whose expansion footprint they touch are re-solved on the next
-        replay (pure-move logs never dirty graph-pure artifacts).
+        replay (pure-move logs never dirty graph-pure artifacts). New
+        vertices join ``parts`` on the partition the log allocated them.
+
+        The application is atomic: every validation — shape/bounds checks
+        in the graph rebuild, the admissibility check — runs *before* any
+        service state mutates, so a rejected log leaves ``parts``,
+        ``graph``, and the logger exactly as they were.
         """
-        self.parts = apply_dynamism(self.parts, log)
-        if log.structural:
-            old_graph = self.graph
+        if not log.structural:
+            self.parts = apply_dynamism(self.parts, log)
+            self.logger.observe_structure(self.graph, self.parts)
+            return
+        old_graph = self.graph
+        # -- validate (no mutation yet) ------------------------------------
+        if log.n_new_vertices:
+            if log.base_nodes is not None and log.base_nodes != old_graph.n_nodes:
+                raise ValueError(
+                    f"vertex-growth log grows a base of {log.base_nodes} "
+                    f"vertices but the service graph has {old_graph.n_nodes}"
+                )
+            new_graph = old_graph.with_vertices(  # validates shapes + bounds
+                log.n_new_vertices, log.insert_attrs,
+                log.insert_senders, log.insert_receivers, log.insert_weights,
+            )
+        else:
             new_graph = old_graph.with_edges(  # validates shapes + bounds
                 log.insert_senders, log.insert_receivers, log.insert_weights
             )
-            self._check_insert_admissible(log)
-            self.graph = new_graph
-            if self.mesh is not None:
-                from repro.core.traffic_sharded import migrate_resident_states
+        self._check_insert_admissible(log)
+        new_parts = apply_dynamism(self.parts, log)
+        # -- commit (nothing below may raise) ------------------------------
+        self.parts = new_parts
+        self.graph = new_graph
+        if log.n_new_vertices:
+            # Carried diffusion state is per-vertex; growth invalidates it.
+            # The next maintenance pass re-seeds from the (grown) parts.
+            self.runtime.state = None
+        if self.mesh is not None:
+            from repro.core.traffic_sharded import migrate_resident_states
 
-                dirty = log.dirty_vertices()
-                for ops in self._replayed_logs:
-                    migrate_resident_states(ops, old_graph, self.graph, dirty)
+            dirty = log.dirty_vertices()
+            for ops in self._replayed_logs.values():
+                migrate_resident_states(ops, old_graph, self.graph, dirty)
         self.logger.observe_structure(self.graph, self.parts)
 
     def _check_insert_admissible(self, log: DynamismLog) -> None:
@@ -418,7 +500,10 @@ class PartitionedGraphService:
         footprint invalidation ("any changed route has an endpoint inside
         the old f ≤ f_dst set") — relies on weights ≥ Euclidean length.
         An underweight insert would silently break the bit-identical
-        contract instead of failing loudly, so it is refused here.
+        contract instead of failing loudly, so it is refused here. Runs
+        before :meth:`apply_dynamism` mutates anything, so new vertices'
+        coordinates come from the *log's* attribute rows, not the (still
+        un-grown) service graph.
         """
         attrs = self.graph.node_attrs
         if "lon" not in attrs or "lat" not in attrs:
@@ -430,6 +515,20 @@ class PartitionedGraphService:
              else np.asarray(log.insert_weights, dtype=np.float32))
         lon = np.asarray(attrs["lon"], dtype=np.float64)
         lat = np.asarray(attrs["lat"], dtype=np.float64)
+        if log.n_new_vertices:
+            if "lon" not in log.insert_attrs or "lat" not in log.insert_attrs:
+                raise ValueError(
+                    "vertex growth on a coordinate graph requires lon/lat "
+                    "rows in the log's insert_attrs"
+                )
+            # Compare against the coordinates as they will be *stored*
+            # (graph dtype), so admissibility matches the grown graph.
+            lon = np.concatenate([lon, np.asarray(
+                log.insert_attrs["lon"], dtype=attrs["lon"].dtype
+            ).astype(np.float64)])
+            lat = np.concatenate([lat, np.asarray(
+                log.insert_attrs["lat"], dtype=attrs["lat"].dtype
+            ).astype(np.float64)])
         dist = np.hypot(lon[s] - lon[r], lat[s] - lat[r])
         # float32 storage may round the weight to just under the float64
         # distance; allow that rounding, nothing more.

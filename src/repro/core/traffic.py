@@ -64,6 +64,7 @@ the default for A/B runs.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 import os
 from typing import Optional, Tuple
@@ -95,6 +96,24 @@ class OpLog:
     @property
     def n_ops(self) -> int:
         return int(self.starts.shape[0])
+
+    def fingerprint(self) -> str:
+        """Content hash, stable across regenerated-but-equal logs.
+
+        The service keys its resident-replay registry by this (not object
+        identity), so re-generating an identical evaluation log cannot
+        allocate a second device-resident solve state. Cached: logs are
+        immutable by contract (§6.1 — deterministic, reusable).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(self.pattern.encode())
+            h.update(np.asarray([self.t_l, self.t_pg], dtype=np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.starts, dtype=np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.ends, dtype=np.int64).tobytes())
+            fp = self.__dict__["_fingerprint"] = h.hexdigest()
+        return fp
 
 
 @dataclasses.dataclass

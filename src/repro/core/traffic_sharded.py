@@ -783,20 +783,31 @@ class ShardedTrafficReplayer:
                        dirty_vertices) -> None:
         """Adopt a resident state solved on a prior revision of this graph.
 
-        The node set (count and coordinates) must be unchanged — only edge
-        inserts are supported — and every vertex whose structure changed
-        must be in ``dirty_vertices``: ops whose expansion footprint
-        touches one are re-solved on this replayer's (new) graph; all
-        other cached artifacts are provably still bit-exact (see the
-        footprint note in :func:`repro.core.traffic_batched._sssp_solve_body`).
+        The revision may only have *added* structure — edge inserts, and
+        appended vertices (existing ids, coordinates, and edges must be
+        unchanged) — and every vertex whose incident structure changed
+        must be in ``dirty_vertices``. For GIS states, ops whose expansion
+        footprint touches a dirty vertex are re-solved on this replayer's
+        (new) graph and everything else is provably still bit-exact (see
+        the footprint note in
+        :func:`repro.core.traffic_batched._sssp_solve_body`; an appended
+        vertex is only reachable through its dirty anchors, so it can
+        never silently change a cached route). BFS states reset wholesale
+        on their next replay — their artifacts are global tree properties
+        — but stay adopted so later slices replay resident again.
         """
-        if self.engine.kind != "sssp":
-            raise ValueError("resident adoption is defined for GIS states only")
         if (state.pattern != self.engine.pattern
-                or state.graph.n_nodes != self.n_nodes):
+                or state.graph.n_nodes > self.n_nodes):
             raise ValueError("resident state is incompatible with this replayer")
         if state.n_ops != ops.n_ops:
             raise ValueError("resident state belongs to a different log")
+        grown = self.n_nodes - state.graph.n_nodes
+        if grown and state.tm is not None:
+            # Appended vertices carry zero frontier mass until a redo pass
+            # (or BFS cold re-solve) touches them.
+            state.tm = np.concatenate(
+                [state.tm, np.zeros(grown, dtype=state.tm.dtype)]
+            )
         state.graph = self.graph
         state.mark_dirty(dirty_vertices)
         ops.__dict__.setdefault("_resident_replay", {})[self] = state
@@ -854,14 +865,15 @@ def migrate_resident_states(
     new_graph: Graph,
     dirty_vertices,
 ) -> int:
-    """Carry a log's resident replay states across a structural graph update.
+    """Carry a log's resident replay states across a structural graph update
+    (edge inserts, and — the Insert workload — appended vertices).
 
     For every replayer of ``old_graph`` holding a resident state for
-    ``ops``: GIS states move to the equivalent replayer of ``new_graph``
-    with ``dirty_vertices`` queued for invalidation (only touched ops
-    re-solve); BFS states are dropped (their artifacts are global tree
-    properties — the new replayer re-solves cold). Returns the number of
-    states migrated.
+    ``ops``, the state moves to the equivalent replayer of ``new_graph``
+    with ``dirty_vertices`` queued for invalidation: GIS states re-solve
+    only footprint-touched ops; BFS states re-solve cold on their next
+    replay (global tree properties) but stay resident for the slices after
+    that. Returns the number of states migrated.
     """
     states = ops.__dict__.get("_resident_replay")
     if not states:
@@ -872,8 +884,6 @@ def migrate_resident_states(
         state = states.pop(old_rep, None)
         if state is None:
             continue
-        if old_rep.engine.kind != "sssp":
-            continue  # BFS: cold re-solve on the new graph
         pattern, mesh, data_axes, chunk, max_exp, delta_scale, use_kernel = key
         new_rep = get_replayer(
             new_graph, pattern, mesh, data_axes=data_axes, chunk=chunk,

@@ -287,6 +287,79 @@ class Graph:
             name=self.name,
         )
 
+    def with_vertices(
+        self,
+        n_new: int,
+        attrs: Optional[Dict[str, np.ndarray]] = None,
+        senders: Optional[np.ndarray] = None,
+        receivers: Optional[np.ndarray] = None,
+        weights: Optional[np.ndarray] = None,
+    ) -> "Graph":
+        """New :class:`Graph` with ``n_new`` vertices appended, plus their
+        incident edges.
+
+        The new vertices take ids ``n_nodes .. n_nodes + n_new - 1``; edge
+        endpoints may reference old or new vertices. ``attrs[key]`` supplies
+        the appended rows (shape ``[n_new, ...]``) for per-node metadata;
+        keys of ``node_attrs`` not supplied get zero rows of the matching
+        dtype (sentinel-valued attrs like ``parent = -1`` must be passed
+        explicitly). Attr arrays are reallocated — the old graph and
+        everything derived from it stay valid — and every structure cache
+        (CSR views, padded layouts, engines) rebuilds lazily on the new
+        object. This is the vertex-growth primitive behind the Insert
+        experiment: a :class:`repro.core.dynamism.DynamismLog` that
+        allocates new vertices is applied by the graph service through
+        this method.
+        """
+        n_new = int(n_new)
+        if n_new < 0:
+            raise ValueError("with_vertices needs n_new >= 0")
+        n_total = self.n_nodes + n_new
+        attrs = attrs or {}
+        unknown = set(attrs) - set(self.node_attrs)
+        if unknown:
+            raise ValueError(f"with_vertices attrs not in node_attrs: {sorted(unknown)}")
+        new_attrs: Dict[str, np.ndarray] = {}
+        for key, old in self.node_attrs.items():
+            if old.shape[0] != self.n_nodes:
+                new_attrs[key] = old  # not per-node metadata; carried as-is
+                continue
+            rows = attrs.get(key)
+            if rows is None:
+                rows = np.zeros((n_new,) + old.shape[1:], dtype=old.dtype)
+            else:
+                rows = np.asarray(rows, dtype=old.dtype)
+                if rows.shape != (n_new,) + old.shape[1:]:
+                    raise ValueError(
+                        f"with_vertices attrs[{key!r}] has shape {rows.shape}, "
+                        f"want {(n_new,) + old.shape[1:]}"
+                    )
+            new_attrs[key] = np.concatenate([old, rows])
+        if senders is None:
+            senders = np.zeros(0, dtype=self.senders.dtype)
+        if receivers is None:
+            receivers = np.zeros(0, dtype=self.receivers.dtype)
+        senders = np.asarray(senders, dtype=self.senders.dtype)
+        receivers = np.asarray(receivers, dtype=self.receivers.dtype)
+        if weights is None:
+            weights = np.ones(senders.shape[0], dtype=np.float32)
+        weights = np.asarray(weights, dtype=np.float32)
+        if not (senders.shape == receivers.shape == weights.shape):
+            raise ValueError("with_vertices edge arrays must have matching shapes")
+        for ends in (senders, receivers):
+            if ends.size and (ends.min() < 0 or ends.max() >= n_total):
+                raise ValueError(
+                    "with_vertices endpoints must be existing or appended vertices"
+                )
+        return Graph(
+            n_nodes=n_total,
+            senders=np.concatenate([self.senders, senders]),
+            receivers=np.concatenate([self.receivers, receivers]),
+            edge_weight=np.concatenate([self.edge_weight, weights]),
+            node_attrs=new_attrs,
+            name=self.name,
+        )
+
     # ------------------------------------------------------------- CSR views
     @cached_property
     def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -141,6 +141,123 @@ class TestDynamism:
         full = apply_dynamism(parts, log)
         assert np.array_equal(full_via_halves, full)
 
+    def test_insert_rate_grows_vertices(self, fs):
+        """ISSUE 5 tentpole: insert units allocate new vertices with
+        incident edges + metadata, and the policies target them with the
+        same sequential scan (a pure addition, no source decrement)."""
+        parts = np.zeros(fs.n_nodes, dtype=np.int32)  # all on partition 0
+        log = generate_dynamism(parts, 0.1, "fewest_vertices", k=4, seed=0,
+                                insert_rate=0.5, graph=fs)
+        n_new = log.n_new_vertices
+        assert 0 < n_new < log.units
+        # new ids are contiguous from the base and recorded per unit
+        np.testing.assert_array_equal(
+            log.new_vertices(), fs.n_nodes + np.arange(n_new))
+        assert log.base_nodes == fs.n_nodes
+        # every insert wrote one folder->file edge, attributed to its unit
+        assert log.insert_senders.shape == log.insert_unit.shape
+        assert np.all(np.asarray(log.unit_is_insert)[log.insert_unit])
+        assert log.insert_attrs["node_type"].shape[0] == n_new
+        # the grown partition map holds every new vertex's allocation
+        out = apply_dynamism(parts, log)
+        assert out.shape[0] == fs.n_nodes + n_new
+        ins = np.asarray(log.unit_is_insert)
+        np.testing.assert_array_equal(
+            out[log.vertices[ins]], log.targets[ins])
+        # fewest_vertices sends the early allocations off partition 0
+        assert (out[fs.n_nodes:] != 0).any()
+        # the graph applies the same payload
+        g2 = fs.with_vertices(n_new, log.insert_attrs, log.insert_senders,
+                              log.insert_receivers, log.insert_weights)
+        assert g2.n_nodes == out.shape[0]
+
+    def test_insert_rate_requires_graph(self, fs):
+        parts = np.zeros(fs.n_nodes, dtype=np.int32)
+        with pytest.raises(ValueError, match="requires the graph"):
+            generate_dynamism(parts, 0.1, "random", k=4, insert_rate=0.5)
+
+    def test_structural_slices_roundtrip(self, fs):
+        """ISSUE 5: per-unit insert attribution makes structural logs
+        sliceable — concatenated slices ≡ the whole log, and applying the
+        slices in sequence reproduces the whole log's map and graph."""
+        parts = np.arange(fs.n_nodes, dtype=np.int32) % 4
+        log = generate_dynamism(parts, 0.2, "random", k=4, seed=2,
+                                insert_rate=0.4, graph=fs)
+        pieces, f = [], 0.0
+        while f < 1.0 - 1e-12:
+            nf = f + 0.05
+            pieces.append(log.slice(f, min(nf, 1.0)))
+            f = nf
+        np.testing.assert_array_equal(
+            np.concatenate([p.vertices for p in pieces]), log.vertices)
+        np.testing.assert_array_equal(
+            np.concatenate([p.insert_senders for p in pieces]),
+            log.insert_senders)
+        for key in log.insert_attrs:
+            np.testing.assert_array_equal(
+                np.concatenate([p.insert_attrs[key] for p in pieces]),
+                log.insert_attrs[key])
+        # slices apply in sequence: base_nodes advances past earlier inserts
+        cur, g = parts, fs
+        for p in pieces:
+            assert p.base_nodes == cur.shape[0]
+            cur = apply_dynamism(cur, p)
+            g = g.with_vertices(p.n_new_vertices, p.insert_attrs,
+                                p.insert_senders, p.insert_receivers,
+                                p.insert_weights)
+        np.testing.assert_array_equal(cur, apply_dynamism(parts, log))
+        g_whole = fs.with_vertices(log.n_new_vertices, log.insert_attrs,
+                                   log.insert_senders, log.insert_receivers,
+                                   log.insert_weights)
+        assert g.n_nodes == g_whole.n_nodes
+        np.testing.assert_array_equal(g.senders, g_whole.senders)
+        np.testing.assert_array_equal(g.edge_weight, g_whole.edge_weight)
+
+    def test_structural_slices_roundtrip_plain_graph(self):
+        """Plain-graph (twitter-flavor) inserts write *two* edges per unit;
+        the payload must be unit-major so slice concatenation preserves
+        edge order exactly — the graph built from slices and from the
+        whole log must be identical arrays (CSR layouts are
+        edge-order-dependent), not merely equal sets."""
+        g = generators.random_graph(60, avg_degree=3.0, seed=0)
+        parts = np.arange(g.n_nodes, dtype=np.int32) % 3
+        log = generate_dynamism(parts, 0.5, "random", k=3, seed=1,
+                                insert_rate=0.5, graph=g)
+        assert log.insert_senders.shape[0] == 2 * log.n_new_vertices
+        halves = [log.slice(0.0, 0.5), log.slice(0.5, 1.0)]
+        np.testing.assert_array_equal(
+            np.concatenate([p.insert_senders for p in halves]),
+            log.insert_senders)
+        np.testing.assert_array_equal(
+            np.concatenate([p.insert_receivers for p in halves]),
+            log.insert_receivers)
+        g_seq = g
+        for p in halves:
+            g_seq = g_seq.with_vertices(p.n_new_vertices, p.insert_attrs,
+                                        p.insert_senders, p.insert_receivers,
+                                        p.insert_weights)
+        g_whole = g.with_vertices(log.n_new_vertices, log.insert_attrs,
+                                  log.insert_senders, log.insert_receivers,
+                                  log.insert_weights)
+        np.testing.assert_array_equal(g_seq.senders, g_whole.senders)
+        np.testing.assert_array_equal(g_seq.receivers, g_whole.receivers)
+
+    def test_unattributed_structural_log_refuses_slice(self):
+        log = DynamismLog(
+            vertices=np.arange(10), targets=np.zeros(10, np.int32),
+            method="random", k=2,
+            insert_senders=np.array([0]), insert_receivers=np.array([1]),
+        )
+        with pytest.raises(ValueError, match="attribution"):
+            log.slice(0.0, 0.5)
+
+    def test_growth_log_rejects_mismatched_base(self, fs):
+        parts = np.zeros(fs.n_nodes, dtype=np.int32)
+        log = generate_dynamism(parts, 0.05, "random", k=4, seed=0,
+                                insert_rate=1.0, graph=fs)
+        with pytest.raises(ValueError, match="base"):
+            apply_dynamism(parts[:-1], log)
+
     def test_consecutive_slices_partition_exactly(self):
         """Regression (ISSUE 2): the Dynamic experiment walks the log in
         5 % slices with *accumulated* float boundaries (0.05 + 0.05 + ...),

@@ -27,7 +27,7 @@ from repro.core import partitioners
 from repro.core.dynamism import generate_dynamism
 from repro.core.framework import InsertPartitioner, MigrationScheduler
 from repro.core.traffic import execute_ops, generate_ops
-from repro.graphs import datasets
+from repro.graphs import datasets, generators
 
 
 @pytest.fixture(scope="module")
@@ -38,15 +38,19 @@ def fs():
 class TestDeviceScanDynamism:
     """scan_dynamism_targets == sequential host oracle, bit for bit."""
 
-    def _assert_equal(self, parts, amount, method, k, vt=None, seed=0):
+    def _assert_equal(self, parts, amount, method, k, vt=None, seed=0,
+                      insert_rate=0.0, graph=None):
         host = generate_dynamism(
-            parts, amount, method, k=k, vertex_traffic=vt, seed=seed, engine="host"
+            parts, amount, method, k=k, vertex_traffic=vt, seed=seed,
+            engine="host", insert_rate=insert_rate, graph=graph,
         )
         dev = generate_dynamism(
-            parts, amount, method, k=k, vertex_traffic=vt, seed=seed, engine="device"
+            parts, amount, method, k=k, vertex_traffic=vt, seed=seed,
+            engine="device", insert_rate=insert_rate, graph=graph,
         )
         np.testing.assert_array_equal(host.vertices, dev.vertices)
         np.testing.assert_array_equal(host.targets, dev.targets)
+        return host, dev
 
     def test_random_identical(self, fs):
         parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
@@ -102,6 +106,44 @@ class TestDeviceScanDynamism:
         vt = rng.integers(0, 1 << 40, size=n)
         vt[::3] = 0  # ties in the running totals
         self._assert_equal(parts, 0.3, "least_traffic", k, vt=vt, seed=9)
+
+    def test_insert_bearing_logs_identical(self, fs):
+        """ISSUE 5 acceptance: host/device targets stay bit-identical for
+        insert-bearing logs — insert units are pure additions (no source
+        decrement, zero traffic) in both engines, and the structural
+        payload (edges, attrs, attribution) is byte-equal too."""
+        ops = generate_ops(fs, n_ops=300, seed=0)
+        parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
+        vt = execute_ops(fs, ops, parts, 4).per_vertex
+        for method, kw in (("fewest_vertices", {}),
+                           ("least_traffic", {"vt": vt})):
+            for rate in (0.2, 0.6, 1.0):
+                for seed in range(2):
+                    host, dev = self._assert_equal(
+                        parts, 0.05, method, 4, seed=seed,
+                        insert_rate=rate, graph=fs, **kw)
+                    assert host.n_new_vertices == dev.n_new_vertices > 0
+                    np.testing.assert_array_equal(
+                        host.unit_is_insert, dev.unit_is_insert)
+                    np.testing.assert_array_equal(
+                        host.insert_senders, dev.insert_senders)
+                    np.testing.assert_array_equal(
+                        host.insert_unit, dev.insert_unit)
+
+    def test_insert_heavy_duplicate_anchors(self):
+        """Tiny vertex pool: the same anchor appears as both mover and
+        insert anchor inside one unroll block — insert units must neither
+        link into nor break the mover's prev-occurrence chain."""
+        rng = np.random.default_rng(5)
+        parts = rng.integers(0, 3, size=6).astype(np.int32)
+        vt = rng.integers(0, 50, size=6)
+        g = generators.random_graph(6, avg_degree=2.0, seed=0)
+        for method, kw in (("fewest_vertices", {}),
+                           ("least_traffic", {"vt": vt})):
+            for amount in (0.5, 2.0, 4.0):
+                for seed in range(3):
+                    self._assert_equal(parts, amount, method, 3, seed=seed,
+                                       insert_rate=0.5, graph=g, **kw)
 
     def test_least_traffic_rejects_fractional(self, fs):
         parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)
@@ -196,11 +238,33 @@ class TestMigrationScheduler:
             assert not sched.should_migrate(pg), pg  # old code: stuck True
         assert sched.should_migrate(0.18 * 1.25 + 0.01)  # real degradation
 
-    def test_degradation_baseline_tracks_improvements(self):
+    def test_lucky_slice_does_not_poison_baseline(self):
+        """ISSUE 5 bugfix: ``should_migrate`` min-ratcheted the baseline on
+        every call, so one lucky low slice dragged it below the
+        post-maintenance reset and every later slice of a multi-slice run
+        demanded migration — permanently, for callers that migrate outside
+        the maintenance cycle."""
         sched = MigrationScheduler(degradation_factor=1.25)
-        sched.record_maintenance(0.30)
-        assert not sched.should_migrate(0.10)      # better: becomes baseline
-        assert sched.should_migrate(0.20)          # 2× the improved baseline
+        sched.record_maintenance(0.18)             # sustainable quality
+        assert not sched.should_migrate(0.10)      # one lucky/noisy slice
+        # The run settles back to its sustainable band. Under the old
+        # ratchet the 0.10 outlier became the floor (0.10·1.25 = 0.125)
+        # and every one of these slices re-triggered migration.
+        for pg in (0.17, 0.18, 0.19, 0.20, 0.22):
+            assert not sched.should_migrate(pg), pg
+        assert sched.should_migrate(0.18 * 1.25 + 0.01)  # real degradation
+
+    def test_baseline_moves_only_via_record_maintenance(self):
+        """Improvements worth keeping as the reference are recorded
+        explicitly (the runtime calls ``record_maintenance`` with every
+        post-maintenance measurement); observation alone never moves it."""
+        sched = MigrationScheduler(degradation_factor=1.25)
+        assert not sched.should_migrate(0.10)      # first call establishes
+        assert sched.baseline_percent_global == 0.10
+        assert sched.should_migrate(0.20)          # degraded vs 0.10
+        assert sched.baseline_percent_global == 0.10  # unchanged by reads
+        sched.record_maintenance(0.08)             # explicit improvement
+        assert sched.should_migrate(0.101)         # judged vs 0.08 now
 
 
 _DYNAMIC_PARITY = textwrap.dedent("""

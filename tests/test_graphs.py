@@ -96,6 +96,47 @@ class TestStructure:
         np.add.at(ref, s, w)
         np.testing.assert_allclose(d, ref, rtol=1e-5)
 
+    def test_with_vertices_appends(self, gis):
+        """ISSUE 5 tentpole: vertex growth appends ids/attrs/edges and
+        leaves the original graph (and its caches) untouched."""
+        n0, e0 = gis.n_nodes, gis.n_edges
+        deg0 = gis.in_degree.copy()  # warm a structure cache
+        lon_rows = np.array([21.5, 22.5])
+        lat_rows = np.array([45.0, 46.0])
+        g2 = gis.with_vertices(
+            2,
+            attrs={"lon": lon_rows, "lat": lat_rows},
+            senders=np.array([n0, n0 + 1, 0]),
+            receivers=np.array([0, n0, n0 + 1]),
+            weights=np.array([1.0, 2.0, 3.0], np.float32),
+        )
+        assert g2.n_nodes == n0 + 2 and g2.n_edges == e0 + 3
+        assert g2.node_attrs["lon"].shape[0] == n0 + 2
+        np.testing.assert_allclose(g2.node_attrs["lon"][n0:], lon_rows.astype(
+            gis.node_attrs["lon"].dtype))
+        # unspecified per-node attrs get zero rows of the right dtype
+        assert g2.node_attrs["is_city"].shape[0] == n0 + 2
+        assert not g2.node_attrs["is_city"][n0:].any()
+        # original untouched, caches rebuilt lazily on the new object
+        assert gis.n_nodes == n0 and gis.n_edges == e0
+        np.testing.assert_array_equal(gis.in_degree, deg0)
+        assert g2.in_degree.shape[0] == n0 + 2
+        assert g2.in_degree[n0] == 1              # edge n0+1 -> n0
+        assert g2.in_degree[0] == deg0[0] + 1     # edge n0 -> 0
+
+    def test_with_vertices_validates(self, gis):
+        n0 = gis.n_nodes
+        with pytest.raises(ValueError, match="existing or appended"):
+            gis.with_vertices(1, senders=np.array([n0 + 1]),
+                              receivers=np.array([0]))
+        with pytest.raises(ValueError, match="matching shapes"):
+            gis.with_vertices(1, senders=np.array([n0]),
+                              receivers=np.array([0, 1]))
+        with pytest.raises(ValueError, match="not in node_attrs"):
+            gis.with_vertices(1, attrs={"bogus": np.zeros(1)})
+        with pytest.raises(ValueError, match="shape"):
+            gis.with_vertices(2, attrs={"lon": np.zeros(1)})
+
 
 class TestSampler:
     def test_shapes_static(self, tw):

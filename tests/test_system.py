@@ -100,6 +100,121 @@ class TestFrameworkComponents:
             assert log.units == int(round(0.02 * g.n_nodes))
 
 
+class TestServiceStateBugfixes:
+    """ISSUE 5 satellite regressions: service/runtime state correctness."""
+
+    def test_observe_traffic_attributes_local_vs_global(self):
+        """`RuntimeLogger.observe_traffic` dropped the global attribution
+        entirely (the computed total was dead) and filed every served
+        unit as 'local'. After the fix: per-partition local + global ==
+        served exactly, the global attribution follows the measured
+        global total, and the balance CV reflects served traffic."""
+        g = datasets.load("filesystem", scale=CFG.scale)
+        ops = generate_ops(g, n_ops=300, seed=0)
+        parts = partitioners.random_partition(g.n_nodes, 4, seed=0)
+        svc = PartitionedGraphService(g, 4)
+        svc.partition_with(parts)
+        res = svc.run_ops(ops)
+        assert res.percent_global > 0  # random parts: plenty of global
+        infos = svc.logger.infos
+        for i in range(4):
+            assert infos[i].local_traffic + infos[i].global_traffic == int(
+                res.per_partition[i]
+            )
+            assert infos[i].global_traffic > 0  # pre-fix: always 0
+        total_g = sum(i.global_traffic for i in infos)
+        assert 0 <= res.global_ - total_g < 4  # exact up to floor rounding
+        cv = svc.logger.load_balance_cv()["traffic"]
+        assert cv == pytest.approx(
+            metrics.coefficient_of_variation(res.per_partition)
+        )
+
+    def test_rejected_insert_leaves_service_untouched(self):
+        """`apply_dynamism` mutated `parts` (and could swap the graph)
+        before `_check_insert_admissible` raised, leaving the service
+        half-applied. After the fix the application is atomic: a rejected
+        log leaves parts, graph, and logger state exactly as they were."""
+        from repro.core.dynamism import DynamismLog
+
+        g = datasets.load("gis", scale=CFG.scale)
+        svc = PartitionedGraphService(g, 4)
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        parts_before = svc.parts.copy()
+        infos_before = [
+            (i.n_vertices, i.n_edges, i.local_traffic, i.global_traffic)
+            for i in svc.logger.infos
+        ]
+        lon, lat = g.node_attrs["lon"], g.node_attrs["lat"]
+        far = int(np.argmax(np.hypot(lon - lon[0], lat - lat[0])))
+        moved_to = (parts_before[[1, 2]] + 1) % 4  # guaranteed real moves
+        bad = DynamismLog(
+            vertices=np.array([1, 2]), targets=moved_to.astype(np.int32),
+            method="random", k=4,
+            insert_senders=np.array([0]), insert_receivers=np.array([far]),
+            insert_weights=np.array([1e-6], np.float32),  # << straight line
+        )
+        with pytest.raises(ValueError, match="straight-line"):
+            svc.apply_dynamism(bad)
+        assert svc.graph is g                                  # not swapped
+        np.testing.assert_array_equal(svc.parts, parts_before)  # pre-fix: moved
+        assert infos_before == [
+            (i.n_vertices, i.n_edges, i.local_traffic, i.global_traffic)
+            for i in svc.logger.infos
+        ]
+
+    def test_replayed_logs_dedupe_and_eviction(self):
+        """`_replayed_logs` deduped by object identity and grew without
+        bound: a regenerated-but-equal OpLog got a second device-resident
+        solve state, and a long-running service leaked device memory.
+        After the fix the registry is content-fingerprint keyed and LRU
+        bounded, with evicted logs' resident states dropped."""
+        from repro.launch.mesh import make_replay_mesh
+
+        g = datasets.load("gis", scale=CFG.scale)
+        mesh = make_replay_mesh()  # 1-shard on the tier-1 single-device CPU
+        svc = PartitionedGraphService(g, 4, mesh=mesh)
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        ops_a = generate_ops(g, n_ops=25, seed=0)
+        ops_b = generate_ops(g, n_ops=25, seed=0)  # equal content, new object
+        assert ops_a is not ops_b and ops_a.fingerprint() == ops_b.fingerprint()
+        ra = svc.run_ops(ops_a)
+        rb = svc.run_ops(ops_b)
+        np.testing.assert_array_equal(ra.per_vertex, rb.per_vertex)
+        assert len(svc._replayed_logs) == 1        # pre-fix: 2 entries
+        assert "_resident_replay" in ops_a.__dict__
+        assert "_resident_replay" not in ops_b.__dict__  # pre-fix: 2nd state
+        # LRU bound: pushing distinct logs past the cap evicts the oldest
+        # and frees its resident state.
+        svc.max_resident_logs = 2
+        svc.run_ops(generate_ops(g, n_ops=25, seed=1))
+        svc.run_ops(generate_ops(g, n_ops=25, seed=2))
+        assert len(svc._replayed_logs) == 2
+        assert ops_a.fingerprint() not in svc._replayed_logs
+        assert "_resident_replay" not in ops_a.__dict__  # state evicted
+
+    def test_growth_log_through_host_service(self):
+        """Vertex growth end-to-end on the host engine path: the service
+        grows graph + parts together and keeps serving the original ops."""
+        from repro.core.framework import InsertPartitioner
+
+        g = datasets.load("gis", scale=CFG.scale)
+        ops = generate_ops(g, n_ops=CFG.n_ops_gis, seed=0)
+        svc = PartitionedGraphService(g, 4)
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        res0 = svc.run_ops(ops)
+        ip = InsertPartitioner("fewest_vertices", k=4, seed=0)
+        log = ip.allocate(svc.parts, 0.05, insert_rate=0.5, graph=svc.graph)
+        assert log.n_new_vertices > 0
+        svc.apply_dynamism(log)
+        assert svc.graph.n_nodes == g.n_nodes + log.n_new_vertices
+        assert svc.parts.shape[0] == svc.graph.n_nodes
+        assert svc.runtime.state is None  # diffusion state reset on growth
+        res1 = svc.run_ops(ops)           # original log still serves
+        assert res1.total >= res0.total   # extra edges only add traffic
+        svc.maintain()                    # maintenance re-seeds on the grown graph
+        assert svc.parts.shape[0] == svc.graph.n_nodes
+
+
 class TestDynamicExperiment:
     def test_maintenance_under_ongoing_dynamism(self, setup):
         """§7.6: intermittent DiDiC keeps quality bounded over 5×5% rounds."""
