@@ -5,7 +5,8 @@
 # single-device engine / host experiment loop is asserted inside the
 # benches, so perf *and* correctness regressions are caught before CI).
 #
-#   make test                tier-1 pytest suite
+#   make test                tier-1 pytest suite (PYTEST_ARGS passes
+#                            extra flags, e.g. --junitxml=... in CI)
 #   make traffic-smoke       batched engine smoke (exactness + rate)
 #   make traffic-smoke-dist  sharded replay smoke, 2-shard CPU mesh
 #   make dynamic-smoke-dist  dynamic-experiment smoke, 8-shard CPU mesh
@@ -18,6 +19,12 @@
 #                            inserts: resident vs cold bit-equality under
 #                            both insert policies + structural
 #                            DynamismLog.slice round-trip)
+#   make fault-smoke         fault-tolerance smoke, 8-shard CPU mesh:
+#                            degraded replay under a failed shard
+#                            (bit-equal fallback + accounting) and a
+#                            crashed dynamic run recovered from snapshot
+#                            + write-ahead journal, bit-exact vs the
+#                            uninterrupted baseline on all four counters
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
@@ -25,17 +32,18 @@
 #                            to refresh benchmarks/BENCH_traffic.json)
 #   make check               test + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
-#                            + insert-smoke-dist
+#                            + insert-smoke-dist + fault-smoke
 
 PY := PYTHONPATH=src python
 WRITE :=
+PYTEST_ARGS :=
 
 .PHONY: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke insert-smoke-dist traffic-bench \
+	dynamic-resident-smoke insert-smoke-dist fault-smoke traffic-bench \
 	traffic-bench-dist dynamic-bench-dist check
 
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
 traffic-smoke:
 	$(PY) -m benchmarks.kernel_bench --traffic-smoke
@@ -56,6 +64,10 @@ insert-smoke-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --insert-smoke
 
+fault-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --fault-smoke
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -68,4 +80,4 @@ dynamic-bench-dist:
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
 check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke insert-smoke-dist
+	dynamic-resident-smoke insert-smoke-dist fault-smoke

@@ -604,6 +604,125 @@ def insert_smoke(scale: Optional[float] = None) -> List[str]:
     return rows
 
 
+def fault_smoke(scale: Optional[float] = None) -> List[str]:
+    """Fault-tolerance smoke on a mesh over every visible device (the
+    Makefile target forces 8 CPU devices) — the ISSUE 6 acceptance gate.
+
+    Leg 1 (degraded mode): with one mesh shard marked failed, sharded
+    replay falls back to the shared single-device engine; the fallback
+    must be **bit-equal on all four counters** and the degraded-op count
+    must equal the failed shard's contiguous slice of the log.
+
+    Leg 2 (crash recovery): a 12×5 % dynamic schedule with vertex growth
+    runs under an injected fault plan — a shard failure spanning two
+    slices, a crash between validate and commit of ``apply_dynamism``, a
+    crash after commit, and a maintenance timeout retried under backoff.
+    Each crash kills the runtime; recovery restores the latest
+    snapshot (round-tripped through its durable ``npz`` bytes) and
+    replays the write-ahead journal. Every slice of the recovered run —
+    all four traffic counters — must match the uninterrupted baseline
+    bit-for-bit, as must the final partition map and per-slice records.
+    Raises on any mismatch; returns summary rows.
+    """
+    from repro.core.didic import DidicConfig, didic_partition
+    from repro.core.dynamic_runtime import DynamicExperimentRuntime
+    from repro.core.fault import FaultPlan, RetryPolicy
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.recovery import DynamismJournal, run_with_recovery
+    from repro.core.traffic import generate_ops
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    scale = 0.002 if scale is None else scale
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+    rows = []
+
+    g0 = datasets.load("gis", scale=scale)
+    ops = generate_ops(g0, n_ops=150, seed=0, pattern="gis_short")
+    cfg = DidicConfig(k=4, iterations=8, primary_steps=3, secondary_steps=3,
+                      smooth_cap=16)
+    parts0, _ = didic_partition(g0, cfg, seed=0)
+
+    # -- leg 1: degraded replay under a failed shard ------------------------
+    svc = PartitionedGraphService(g0, 4, didic=cfg, mesh=mesh,
+                                  maintenance="shared")
+    svc.partition_with(parts0.copy())
+    healthy = svc.run_ops(ops)
+    failed_shard = shards - 1
+    svc.mark_shard_failed(failed_shard)
+    degraded = svc.run_ops(ops)
+    svc.mark_shard_recovered(failed_shard)
+    for f in fields:
+        if not np.array_equal(getattr(healthy, f), getattr(degraded, f)):
+            raise AssertionError(f"degraded replay != healthy on {f} — smoke void")
+    b = -(-ops.n_ops // shards)
+    want_ops = max(0, min(ops.n_ops, (failed_shard + 1) * b)
+                   - min(ops.n_ops, failed_shard * b))
+    if svc.logger.degraded_replays != 1 or svc.logger.degraded_ops != want_ops:
+        raise AssertionError(
+            f"degraded accounting off: {svc.logger.degraded_replays} replays, "
+            f"{svc.logger.degraded_ops} ops (want 1 / {want_ops})"
+        )
+    rows.append(
+        f"fault/degraded/ops,{svc.logger.degraded_ops},"
+        f"shard {failed_shard}/{shards} down -> shared-engine fallback "
+        "(bit-equal all four counters)"
+    )
+
+    # -- leg 2: crash recovery bit-exact vs uninterrupted -------------------
+    def make_runtime():
+        s = PartitionedGraphService(g0, 4, didic=cfg, mesh=mesh,
+                                    maintenance="shared")
+        s.partition_with(parts0.copy())
+        return DynamicExperimentRuntime(s, insert_method="least_traffic", seed=0)
+
+    n_slices = 12
+    kw = dict(maintain_every=3, insert_rate=0.2)
+    base = {}
+    res0 = make_runtime().run(ops, n_slices, 0.05,
+                              on_slice=lambda i, r: base.__setitem__(i, r), **kw)
+
+    plan = (FaultPlan()
+            .fail_shard(2, shard=1, slices=2)
+            .crash(4, site="apply:pre_commit")
+            .crash(7, site="apply:post_commit")
+            .timeout_maintenance(5, times=2))
+    got = {}
+    t0 = time.perf_counter()
+    res1, stats = run_with_recovery(
+        make_runtime, g0, ops, n_slices, 0.05,
+        fault_plan=plan, journal=DynamismJournal(),
+        retry_policy=RetryPolicy(max_retries=5), snapshot_every=3,
+        on_slice=lambda i, r: got.__setitem__(i, r), **kw,
+    )
+    wall = time.perf_counter() - t0
+    if stats.recoveries != 2:
+        raise AssertionError(f"expected 2 recoveries, got {stats.recoveries}")
+    if stats.journal_rolled_back < 1 or stats.journal_replayed < 1:
+        raise AssertionError(f"journal never exercised: {stats}")
+    for i in range(n_slices):
+        for f in fields:
+            if not np.array_equal(getattr(base[i], f), getattr(got[i], f)):
+                raise AssertionError(
+                    f"recovered run != uninterrupted at slice {i} on {f} — "
+                    "smoke void"
+                )
+    if not np.array_equal(res0.parts, res1.parts):
+        raise AssertionError("final partition maps differ — smoke void")
+    if res0.records != res1.records:
+        raise AssertionError("per-slice records differ — smoke void")
+    rows.append(
+        f"fault/recovery/slices,{n_slices},"
+        f"{stats.recoveries} crashes recovered (snapshots={stats.snapshots_taken}, "
+        f"journal replays={stats.journal_replayed}, "
+        f"rollbacks={stats.journal_rolled_back}) shards={shards} in {wall:.1f}s "
+        "(bit-exact vs uninterrupted on all four counters)"
+    )
+    return rows
+
+
 def main() -> None:
     import argparse
 
@@ -626,6 +745,10 @@ def main() -> None:
                     help="vertex-growth Insert-workload smoke (20x5% "
                          "schedule, resident vs cold bit-equality under "
                          "both policies + structural slice round-trip)")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="fault-tolerance smoke: degraded-shard replay "
+                         "bit-equality + crash recovery (snapshot + "
+                         "journal) bit-exact vs an uninterrupted run")
     # None = per-mode default (0.004 everywhere except the insert smoke,
     # which pins 0.002 — see insert_smoke); an explicit value wins always.
     ap.add_argument("--scale", type=float, default=None)
@@ -670,6 +793,9 @@ def main() -> None:
             write_baseline({"sharded": results})
     elif args.insert_smoke:
         for row in insert_smoke(scale=args.scale):
+            print(row)
+    elif args.fault_smoke:
+        for row in fault_smoke(scale=args.scale):
             print(row)
     elif args.dynamic_resident_smoke:
         for row in dynamic_resident_smoke(scale=scale):

@@ -1,13 +1,16 @@
-from repro.core import didic, didic_distributed, dynamism, framework, metrics, partitioners, traffic
-from repro.core import dynamic_runtime, traffic_sharded
+from repro.core import didic, didic_distributed, dynamism, fault, framework, metrics, partitioners, traffic
+from repro.core import dynamic_runtime, recovery, traffic_sharded
 from repro.core.didic import DidicConfig, DidicState, didic_partition, didic_refine
 from repro.core.dynamic_runtime import DynamicExperimentRuntime
+from repro.core.fault import FaultPlan, RetryPolicy
 from repro.core.framework import PartitionedGraphService
+from repro.core.recovery import DynamismJournal, ServiceSnapshot, run_with_recovery
 from repro.core.traffic_sharded import replay_sharded
 
 __all__ = [
-    "didic", "didic_distributed", "dynamism", "framework", "metrics", "partitioners", "traffic",
-    "dynamic_runtime", "traffic_sharded",
+    "didic", "didic_distributed", "dynamism", "fault", "framework", "metrics", "partitioners", "traffic",
+    "dynamic_runtime", "recovery", "traffic_sharded",
     "DidicConfig", "DidicState", "didic_partition", "didic_refine",
     "DynamicExperimentRuntime", "PartitionedGraphService", "replay_sharded",
+    "FaultPlan", "RetryPolicy", "DynamismJournal", "ServiceSnapshot", "run_with_recovery",
 ]

@@ -384,6 +384,98 @@ class DynamicExperimentRuntime:
         # The paper's Dynamic experiment migrates on a fixed interval, so
         # the default scheduler applies every planned move.
         self.scheduler = scheduler or MigrationScheduler(min_move_fraction=0.0)
+        # Per-run loop state, exposed so the recovery driver
+        # (repro.core.recovery) can snapshot mid-run and resume a fresh
+        # runtime at an arbitrary slice boundary.
+        self._baseline: Optional[TrafficResult] = None
+        self._result: Optional[TrafficResult] = None
+        self._records: List[SliceRecord] = []
+
+    # -- incremental interface (one slice at a time) -------------------------
+    @property
+    def last_result(self) -> Optional[TrafficResult]:
+        """The latest traffic measurement (feeds the next slice's
+        ``least_traffic`` policy); set by :meth:`begin` / :meth:`run_slice`
+        and restored from snapshot on recovery."""
+        return self._result
+
+    def begin(self, ops: OpLog) -> TrafficResult:
+        """Measure the baseline and arm the per-slice loop."""
+        svc = self.service
+        if svc.fault_plan is not None:
+            svc.fault_plan.begin_slice(svc.fault_plan.BASELINE)
+        self._baseline = self._result = svc.run_ops(ops)
+        self._records = []
+        return self._baseline
+
+    def run_slice(
+        self,
+        i: int,
+        ops: OpLog,
+        amount: float,
+        maintain_every: int = 1,
+        iterations: int = 1,
+        measure_damaged: bool = False,
+        insert_rate: float = 0.0,
+        log=None,
+    ) -> Tuple[SliceRecord, TrafficResult]:
+        """Run one slice of the cycle: dynamism → maintenance → replay.
+
+        ``log`` replaces the insert partitioner's draw for this slice (the
+        recovery driver passes a journal-committed log here when resuming
+        past a post-commit crash); the partitioner still advances one
+        spawn so later slices draw the same streams as an uninterrupted
+        run. A crash mid-slice leaves the loop state untouched up to the
+        faulted call — re-running the same ``i`` after restore reproduces
+        the slice exactly (the fault plan never re-fires a crash).
+        """
+        svc = self.service
+        if svc.fault_plan is not None:
+            svc.fault_plan.begin_slice(i)
+        if log is None:
+            log = self.insert.allocate(
+                svc.parts, amount, vertex_traffic=self._result.per_vertex,
+                insert_rate=insert_rate, graph=svc.graph,
+            )
+        else:
+            self.insert.advance(1)
+        svc.apply_dynamism(log)
+        damaged_pg = (
+            svc.run_ops(ops).percent_global if measure_damaged else None
+        )
+        maintained = (i + 1) % maintain_every == 0
+        migrated = 0
+        if maintained:
+            migrated = svc.maintain_migrate(
+                self.scheduler, step=i, iterations=iterations
+            )
+        result = svc.run_ops(ops)
+        if maintained:
+            # The degradation check must be judged against what the
+            # current graph can achieve, not the first-ever quality
+            # (which a long run can never get back to).
+            self.scheduler.record_maintenance(result.percent_global)
+        self._result = result
+        record = SliceRecord(
+            index=i,
+            units=log.units,
+            percent_global=result.percent_global,
+            maintained=maintained,
+            migrated=migrated,
+            damaged_percent_global=damaged_pg,
+            inserted=log.n_new_vertices,
+        )
+        self._records.append(record)
+        return record, result
+
+    def result(self) -> DynamicRunResult:
+        """Package the loop state accumulated so far."""
+        return DynamicRunResult(
+            baseline=self._baseline,
+            records=list(self._records),
+            final=self._result,
+            parts=self.service.parts.copy(),
+        )
 
     def run(
         self,
@@ -411,46 +503,18 @@ class DynamicExperimentRuntime:
         across slices. ``on_slice`` sees every post-maintenance
         :class:`TrafficResult` — the parity test uses it to compare all
         four counters per slice without bloating the records.
+
+        This is :meth:`begin` + ``n_slices`` × :meth:`run_slice` — the
+        incremental interface the recovery driver uses; the composition is
+        bit-identical to the former monolithic loop.
         """
-        svc = self.service
-        baseline = svc.run_ops(ops)
-        result = baseline
-        records: List[SliceRecord] = []
+        self.begin(ops)
         for i in range(n_slices):
-            log = self.insert.allocate(
-                svc.parts, amount, vertex_traffic=result.per_vertex,
-                insert_rate=insert_rate, graph=svc.graph,
+            _, result = self.run_slice(
+                i, ops, amount,
+                maintain_every=maintain_every, iterations=iterations,
+                measure_damaged=measure_damaged, insert_rate=insert_rate,
             )
-            svc.apply_dynamism(log)
-            damaged_pg = (
-                svc.run_ops(ops).percent_global if measure_damaged else None
-            )
-            maintained = (i + 1) % maintain_every == 0
-            migrated = 0
-            if maintained:
-                migrated = svc.maintain_migrate(
-                    self.scheduler, step=i, iterations=iterations
-                )
-            result = svc.run_ops(ops)
-            if maintained:
-                # The degradation check must be judged against what the
-                # current graph can achieve, not the first-ever quality
-                # (which a long run can never get back to).
-                self.scheduler.record_maintenance(result.percent_global)
             if on_slice is not None:
                 on_slice(i, result)
-            records.append(SliceRecord(
-                index=i,
-                units=log.units,
-                percent_global=result.percent_global,
-                maintained=maintained,
-                migrated=migrated,
-                damaged_percent_global=damaged_pg,
-                inserted=log.n_new_vertices,
-            ))
-        return DynamicRunResult(
-            baseline=baseline,
-            records=records,
-            final=result,
-            parts=svc.parts.copy(),
-        )
+        return self.result()

@@ -38,6 +38,7 @@ source partition.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Optional
 
 import numpy as np
@@ -100,6 +101,36 @@ class DynamismLog:
             and self.unit_is_insert is not None
             and self.insert_unit is not None
         )
+
+    def fingerprint(self) -> str:
+        """Content hash, stable across regenerated-but-equal logs.
+
+        The write-ahead dynamism journal (:mod:`repro.core.recovery`) keys
+        idempotent re-application by this — a log replayed from the journal
+        after a crash and the same log regenerated from a restored RNG
+        stream must resolve to one identity. Every semantic field is
+        hashed, presence-tagged so ``None`` vs empty never collide.
+        Cached: logs are immutable by contract once generated.
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(f"{self.method}|{self.k}|{self.base_nodes}".encode())
+            for name in ("vertices", "targets", "insert_senders",
+                         "insert_receivers", "insert_weights", "unit_is_insert",
+                         "insert_unit"):
+                arr = getattr(self, name)
+                h.update(b"\x00" if arr is None else b"\x01")
+                if arr is not None:
+                    a = np.ascontiguousarray(arr)
+                    h.update(str(a.dtype).encode())
+                    h.update(a.tobytes())
+            for key in sorted(self.insert_attrs):
+                a = np.ascontiguousarray(self.insert_attrs[key])
+                h.update(key.encode() + str(a.dtype).encode())
+                h.update(a.tobytes())
+            fp = self.__dict__["_fingerprint"] = h.hexdigest()
+        return fp
 
     def new_vertices(self) -> np.ndarray:
         """Ids of the vertices this log allocates, in allocation order."""

@@ -1,0 +1,260 @@
+"""Deterministic fault injection for the partitioned-service runtime.
+
+Real multi-machine graph stores lose shards, blow maintenance deadlines,
+and die mid-write; the paper's simulation environment (§5.3) sidesteps
+that, which is exactly why a reproduction that wants to be a serving
+system must put it back *deterministically* — a fault you cannot replay
+is a fault you cannot regression-test. This module generalizes the
+training loop's fault tooling (previously ``repro.train.fault``) into a
+shared layer used by both the trainer and
+:class:`repro.core.framework.PartitionedGraphService`:
+
+* :class:`FaultInjector` / :class:`StragglerMitigator` — the train-loop
+  primitives, unchanged API (``repro.train.fault`` re-exports them).
+* :class:`FaultPlan` — a slice-indexed schedule of service faults:
+  **shard failures** (a mesh shard is down for a range of slices — replay
+  degrades to the shared single-device engine, bit-equal by the sharded
+  engine's exactness contract), **maintenance timeouts** (the first *n*
+  attempts of a slice's DiDiC maintenance raise
+  :class:`MaintenanceTimeout`; the service retries under a
+  :class:`RetryPolicy`), and **crashes** (:class:`SimulatedCrash` raised
+  at a named site inside the cycle — e.g. between validate and commit of
+  ``apply_dynamism`` — which the recovery driver in
+  :mod:`repro.core.recovery` survives via snapshot + journal).
+* :class:`RetryPolicy` — bounded exponential backoff under a deadline;
+  exceeding either raises :class:`RecoveryDeadlineExceeded`.
+
+Every fault is keyed by (slice index, site) and fires exactly as
+scheduled, so a faulted run is as replayable as a clean one — the
+fault-smoke gate (``make fault-smoke``) relies on this to assert that a
+crashed-and-recovered dynamic run is **bit-exact** vs the uninterrupted
+baseline on all four traffic counters.
+
+Crash sites fired by the service (see
+:meth:`~repro.core.framework.PartitionedGraphService.apply_dynamism`):
+
+====================== ====================================================
+``apply:pre_validate`` after the journal intent is written, before any
+                       validation ran (journal entry stays pending →
+                       rolled back at recovery)
+``apply:pre_commit``   after validation, before any state mutates (entry
+                       pending → rolled back; service state unchanged)
+``apply:post_commit``  after every mutation and the journal commit mark
+                       (entry committed → recovery re-applies it from the
+                       journal)
+``maintain``           start of a maintenance attempt (timeout events
+                       fire here; crashes are also honoured)
+``replay``             start of an evaluation-log replay
+====================== ====================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set
+
+__all__ = [
+    "SimulatedFault",
+    "SimulatedCrash",
+    "ShardFailure",
+    "MaintenanceTimeout",
+    "RecoveryDeadlineExceeded",
+    "FaultInjector",
+    "StragglerMitigator",
+    "FaultEvent",
+    "FaultPlan",
+    "RetryPolicy",
+]
+
+
+class SimulatedFault(RuntimeError):
+    """Base class for every injected fault."""
+
+
+class SimulatedCrash(SimulatedFault):
+    """The process 'dies' at an injection site.
+
+    Nothing in the service catches this — it unwinds to the recovery
+    driver, which stands in for a supervisor restarting the process and
+    restoring from snapshot + journal.
+    """
+
+
+class ShardFailure(SimulatedFault):
+    """A mesh shard is unavailable (raised on direct access attempts)."""
+
+
+class MaintenanceTimeout(SimulatedFault):
+    """One maintenance attempt blew its deadline; retryable."""
+
+
+class RecoveryDeadlineExceeded(RuntimeError):
+    """Retries exhausted their budget (count or wall-clock deadline)."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Step-keyed crash injection for the training loop (legacy API)."""
+
+    fail_at_steps: Sequence[int] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFault(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    """Deadline-based re-dispatch: EWMA step durations; a step exceeding
+    ``deadline_factor × ewma`` counts as a straggler and is re-dispatched
+    once (steps must be pure functions of their inputs)."""
+
+    deadline_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    min_samples: int = 5
+    _ewma: float = 0.0
+    _n: int = 0
+    stragglers_detected: int = 0
+    redispatches: int = 0
+
+    def observe(self, duration: float) -> bool:
+        """Record a step duration; returns True if it was a straggler."""
+        self._n += 1
+        if self._n <= self.min_samples:
+            self._ewma = duration if self._n == 1 else (
+                self.ewma_alpha * duration + (1 - self.ewma_alpha) * self._ewma
+            )
+            return False
+        is_straggler = duration > self.deadline_factor * self._ewma
+        if is_straggler:
+            self.stragglers_detected += 1
+        else:
+            self._ewma = self.ewma_alpha * duration + (1 - self.ewma_alpha) * self._ewma
+        return is_straggler
+
+    def run_with_mitigation(self, fn: Callable, *args, **kwargs):
+        """Run a pure step; re-dispatch once if it blows the deadline."""
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        if self.observe(time.perf_counter() - t0):
+            self.redispatches += 1
+            out = fn(*args, **kwargs)  # idempotent pure step
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault. ``kind`` ∈ {crash, shard, timeout}."""
+
+    kind: str
+    slice_index: int
+    site: str = ""       # crash: the injection site it fires at
+    shard: int = 0       # shard: which shard fails
+    duration: int = 1    # shard: failed for this many slices
+    times: int = 1       # timeout: consecutive attempts that fail
+
+
+class FaultPlan:
+    """A deterministic, slice-indexed fault schedule.
+
+    The driver calls :meth:`begin_slice` at the top of each slice; the
+    service fires named sites (:meth:`fire`) and consults
+    :meth:`failed_shards` before a sharded replay. Crashes and timeouts
+    are once-only per event (a recovered re-run of the same slice does
+    not crash again — the whole point of recovery); shard failures are a
+    pure predicate of the slice index, so re-runs see the same degraded
+    mesh and stay bit-exact.
+    """
+
+    BASELINE = -1  # begin_slice value for pre-schedule measurements
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self.events: List[FaultEvent] = list(events)
+        self._slice: int = self.BASELINE
+        self._crashes_fired: Set[int] = set()
+        self._timeouts_fired: Dict[int, int] = {}
+
+    # -- schedule builders (chainable) --------------------------------------
+    def crash(self, at_slice: int, site: str = "apply:pre_commit") -> "FaultPlan":
+        self.events.append(FaultEvent("crash", int(at_slice), site=site))
+        return self
+
+    def fail_shard(self, at_slice: int, shard: int, slices: int = 1) -> "FaultPlan":
+        self.events.append(FaultEvent(
+            "shard", int(at_slice), shard=int(shard), duration=int(slices)
+        ))
+        return self
+
+    def timeout_maintenance(self, at_slice: int, times: int = 1) -> "FaultPlan":
+        self.events.append(FaultEvent("timeout", int(at_slice), site="maintain",
+                                      times=int(times)))
+        return self
+
+    # -- runtime interface ---------------------------------------------------
+    @property
+    def current_slice(self) -> int:
+        return self._slice
+
+    def begin_slice(self, index: int) -> None:
+        self._slice = int(index)
+
+    def failed_shards(self, slice_index: Optional[int] = None) -> FrozenSet[int]:
+        """Shards down during ``slice_index`` (default: the current one)."""
+        s = self._slice if slice_index is None else int(slice_index)
+        return frozenset(
+            ev.shard for ev in self.events
+            if ev.kind == "shard" and ev.slice_index <= s < ev.slice_index + ev.duration
+        )
+
+    def fire(self, site: str) -> None:
+        """Raise whatever the plan schedules for (current slice, site)."""
+        s = self._slice
+        for i, ev in enumerate(self.events):
+            if ev.slice_index != s:
+                continue
+            if ev.kind == "crash" and ev.site == site and i not in self._crashes_fired:
+                self._crashes_fired.add(i)
+                raise SimulatedCrash(
+                    f"injected crash at slice {s} site {site!r}"
+                )
+            if ev.kind == "timeout" and site == "maintain":
+                fired = self._timeouts_fired.get(i, 0)
+                if fired < ev.times:
+                    self._timeouts_fired[i] = fired + 1
+                    raise MaintenanceTimeout(
+                        f"injected maintenance timeout at slice {s} "
+                        f"(attempt {fired + 1}/{ev.times})"
+                    )
+
+    def describe(self) -> List[str]:
+        return [str(ev) for ev in self.events]
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded exponential backoff under a wall-clock deadline.
+
+    :meth:`wait` is called after the ``attempt``-th failure (1-based) with
+    the elapsed time since the first attempt; it sleeps the backoff or
+    raises :class:`RecoveryDeadlineExceeded` once either budget is spent.
+    ``sleep`` is injectable so tests run with a virtual clock.
+    """
+
+    max_retries: int = 8
+    backoff_base_s: float = 0.005
+    backoff_factor: float = 2.0
+    deadline_s: float = 5.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def wait(self, attempt: int, elapsed_s: float) -> None:
+        if attempt > self.max_retries or elapsed_s >= self.deadline_s:
+            raise RecoveryDeadlineExceeded(
+                f"maintenance retry budget exhausted after {attempt - 1} "
+                f"retries / {elapsed_s:.3f}s (max_retries={self.max_retries}, "
+                f"deadline={self.deadline_s}s)"
+            )
+        delay = self.backoff_base_s * self.backoff_factor ** (attempt - 1)
+        self.sleep(min(delay, max(self.deadline_s - elapsed_s, 0.0)))

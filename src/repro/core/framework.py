@@ -31,6 +31,7 @@ same cycle, same seeds, same results where bit-parity is contracted.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -102,9 +103,33 @@ class InsertPartitioner:
             insert_rate=insert_rate, graph=graph,
         )
 
+    # -- RNG state (snapshot/restore) ----------------------------------------
+    def rng_state(self) -> Tuple:
+        """Serializable SeedSequence position: ``(entropy, spawn_key,
+        n_children_spawned)``. Restoring it reproduces the remaining
+        ``allocate`` stream exactly — the property crash recovery needs to
+        regenerate post-snapshot slices bit-identically."""
+        ss = self._seeds
+        return (ss.entropy, tuple(int(x) for x in ss.spawn_key),
+                int(ss.n_children_spawned))
+
+    def set_rng_state(self, state: Tuple) -> None:
+        entropy, spawn_key, n_spawned = state
+        self._seeds = np.random.SeedSequence(
+            entropy, spawn_key=tuple(int(x) for x in spawn_key),
+            n_children_spawned=int(n_spawned),
+        )
+
+    def advance(self, n: int = 1) -> None:
+        """Discard ``n`` allocation draws (used when a journaled log stands
+        in for this partitioner's draw, keeping later draws aligned)."""
+        self._seeds.spawn(int(n))
+
 
 class RuntimeLogger:
-    """Runtime-Logging component: accumulates InstanceInfo per partition."""
+    """Runtime-Logging component: accumulates InstanceInfo per partition,
+    plus the service-health counters of the fault-tolerance layer
+    (degraded replays, maintenance retries, recovery time)."""
 
     def __init__(self, k: int):
         self.k = k
@@ -112,6 +137,17 @@ class RuntimeLogger:
 
     def reset(self) -> None:
         self.infos: List[InstanceInfo] = [InstanceInfo() for _ in range(self.k)]
+        # A reset must also clear the degradation aggregate: the scheduler
+        # judges should_migrate against percent_global(), and a stale
+        # pre-reset value would let a freshly reset service trip migration
+        # on degradation it never served.
+        self._last_percent_global = 0.0
+        self.degraded_replays = 0
+        self.degraded_ops = 0
+        self.maintenance_retries = 0
+        self.maintenance_retry_time_s = 0.0
+        self.recoveries = 0
+        self.recovery_time_s = 0.0
 
     def observe_structure(self, graph: Graph, parts: np.ndarray) -> None:
         counts = metrics.partition_counts(graph, parts, self.k)
@@ -123,21 +159,58 @@ class RuntimeLogger:
         """Attribute served traffic per partition, split local vs global
         (§5.2). Global actions are attributed proportionally to each
         partition's served share (the emulator counts a cross-partition
-        action on both ends); the split is exact integer arithmetic, so
-        ``local + global == served`` holds per partition and the summed
-        global attribution never exceeds the measured global total."""
+        action on both ends) by largest-remainder apportionment: exact
+        integer quotas rounded so that ``local + global == served`` holds
+        per partition AND the summed global attribution equals the
+        measured global total exactly (plain floor division dropped up to
+        k−1 global units per observation)."""
         total = int(result.per_op_total.sum())
         global_total = int(result.per_op_global.sum())
+        served = np.asarray(result.per_partition, dtype=np.int64)[: self.k]
+        if total > 0 and global_total > 0:
+            quota_num = global_total * served
+            g = quota_num // total
+            rem = quota_num - g * total
+            short = global_total - int(g.sum())
+            if short > 0:
+                # Largest fractional remainder first; ties break on the
+                # lowest partition index (stable sort of -rem).
+                order = np.argsort(-rem, kind="stable")
+                g[order[:short]] += 1
+        else:
+            g = np.zeros(self.k, dtype=np.int64)
         for i in range(self.k):
-            served = int(result.per_partition[i])
-            g = (global_total * served) // total if total > 0 else 0
-            self.infos[i].global_traffic += g
-            self.infos[i].local_traffic += served - g
+            self.infos[i].global_traffic += int(g[i])
+            self.infos[i].local_traffic += int(served[i]) - int(g[i])
         # store aggregate for degradation detection
         self._last_percent_global = result.percent_global
 
     def percent_global(self) -> float:
         return getattr(self, "_last_percent_global", 0.0)
+
+    # -- fault-tolerance health metrics -------------------------------------
+    def record_degraded(self, n_ops: int) -> None:
+        """One replay served through the degraded (shared-engine) path."""
+        self.degraded_replays += 1
+        self.degraded_ops += int(n_ops)
+
+    def record_maintenance_retries(self, retries: int, elapsed_s: float) -> None:
+        self.maintenance_retries += int(retries)
+        self.maintenance_retry_time_s += float(elapsed_s)
+
+    def record_recovery(self, elapsed_s: float) -> None:
+        self.recoveries += 1
+        self.recovery_time_s += float(elapsed_s)
+
+    def health_report(self) -> Dict[str, float]:
+        return {
+            "degraded_replays": self.degraded_replays,
+            "degraded_ops": self.degraded_ops,
+            "maintenance_retries": self.maintenance_retries,
+            "maintenance_retry_time_s": self.maintenance_retry_time_s,
+            "recoveries": self.recoveries,
+            "recovery_time_s": self.recovery_time_s,
+        }
 
     def load_balance_cv(self) -> Dict[str, float]:
         return {
@@ -328,6 +401,22 @@ class PartitionedGraphService:
         # bounded by the working set, not its history.
         self._replayed_logs: "OrderedDict[str, OpLog]" = OrderedDict()
         self.max_resident_logs = 8
+        # Fault-tolerance layer (repro.core.fault / repro.core.recovery):
+        # an attached FaultPlan injects deterministic shard failures,
+        # maintenance timeouts, and crashes; failed_shards (explicit marks
+        # union the plan's schedule) degrade sharded replay to the shared
+        # engine; a DynamismJournal makes apply_dynamism a write-ahead,
+        # exactly-once (fingerprint-keyed) operation; retry_policy bounds
+        # maintenance retries. All optional — a bare service runs exactly
+        # as before.
+        self.fault_plan = None
+        self.journal = None
+        self.retry_policy = None
+        self.failed_shards: set = set()
+        # Fingerprints of journal-managed logs already applied, LRU-bounded
+        # (idempotency window for journal replay after recovery).
+        self._applied_dynamism: "OrderedDict[str, None]" = OrderedDict()
+        self.max_applied_fingerprints = 256
         self.logger = RuntimeLogger(k)
         maint_mesh = mesh if maintenance in ("auto", "sharded") else None
         self.runtime = RuntimePartitioner(
@@ -350,8 +439,43 @@ class PartitionedGraphService:
     def partition_didic(self, seed: int = 0) -> "PartitionedGraphService":
         return self.partition_with(self.runtime.initial(self.graph, seed=seed))
 
+    def _maintain_attempt(self, fn):
+        """Run one maintenance computation under the fault plan.
+
+        An injected :class:`~repro.core.fault.MaintenanceTimeout` fires
+        *before* the deterministic DiDiC computation, so a retried attempt
+        reproduces the uninterrupted result bit-for-bit; retries back off
+        under the service's :class:`~repro.core.fault.RetryPolicy` and a
+        spent budget raises
+        :class:`~repro.core.fault.RecoveryDeadlineExceeded`. Retry counts
+        and elapsed retry time land in the logger's health metrics.
+        """
+        if self.fault_plan is None:
+            return fn()
+        from repro.core.fault import MaintenanceTimeout, RetryPolicy
+
+        policy = self.retry_policy or RetryPolicy()
+        t0 = _time.perf_counter()
+        attempt = 0
+        while True:
+            try:
+                self.fault_plan.fire("maintain")
+                out = fn()
+            except MaintenanceTimeout:
+                attempt += 1
+                policy.wait(attempt, _time.perf_counter() - t0)
+                continue
+            if attempt:
+                self.logger.record_maintenance_retries(
+                    attempt, _time.perf_counter() - t0
+                )
+            return out
+
     def maintain(self, iterations: int = 1) -> None:
-        self.parts = self.runtime.maintain(self.graph, self.parts, iterations=iterations)
+        self.parts = self._maintain_attempt(
+            lambda: self.runtime.maintain(self.graph, self.parts,
+                                          iterations=iterations)
+        )
         self.logger.observe_structure(self.graph, self.parts)
 
     def maintain_migrate(self, scheduler: MigrationScheduler, step: int,
@@ -370,7 +494,10 @@ class PartitionedGraphService:
         later maintenance diffuse from a map the service never served.
         """
         prev_state = self.runtime.state
-        new_parts = self.runtime.maintain(self.graph, self.parts, iterations=iterations)
+        new_parts = self._maintain_attempt(
+            lambda: self.runtime.maintain(self.graph, self.parts,
+                                          iterations=iterations)
+        )
         cmds = scheduler.plan(self.parts, new_parts.astype(np.int32), step=step)
         if not cmds and (self.parts != new_parts).any():
             self.runtime.state = prev_state
@@ -396,21 +523,65 @@ class PartitionedGraphService:
         partition-dependent counter fold. ``resident=False`` forces a full
         cold solve (the bit-equality comparator). Equal-content logs share
         one resident state (:meth:`_register_log`).
+
+        **Degraded mode.** When any mesh shard is marked failed —
+        explicitly (:meth:`mark_shard_failed`) or by the attached fault
+        plan's schedule — the sharded replay falls back to the shared
+        single-device batched engine for the whole log. The fallback is
+        bit-equal on all four counters (the sharded engine's exactness
+        contract), so a degraded measurement is still a valid one; the
+        ops whose home shard failed are counted in the logger's
+        ``degraded_ops`` and each fallback replay in ``degraded_replays``.
         """
+        if self.fault_plan is not None:
+            self.fault_plan.fire("replay")
         if engine == "sharded" and self.mesh is None:
             raise ValueError("engine='sharded' requires a service mesh")
         if engine == "sharded" or (engine == "auto" and self.mesh is not None):
-            from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
+            failed = self._currently_failed_shards()
+            if failed:
+                result = execute_ops(self.graph, ops, self.parts, self.k,
+                                     engine="batched")
+                self.logger.record_degraded(self._degraded_op_count(ops, failed))
+            else:
+                from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
 
-            ops = self._register_log(ops)
-            result = replay_sharded(
-                self.graph, ops, self.mesh, self.parts, self.k,
-                data_axes=self.data_axes, resident=resident,
-            )
+                ops = self._register_log(ops)
+                result = replay_sharded(
+                    self.graph, ops, self.mesh, self.parts, self.k,
+                    data_axes=self.data_axes, resident=resident,
+                )
         else:
             result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
         self.logger.observe_traffic(result)
         return result
+
+    # -- shard health --------------------------------------------------------
+    def mark_shard_failed(self, shard: int) -> None:
+        """Mark a mesh data shard unavailable; sharded replay degrades to
+        the shared engine until :meth:`mark_shard_recovered`."""
+        self.failed_shards.add(int(shard))
+
+    def mark_shard_recovered(self, shard: int) -> None:
+        self.failed_shards.discard(int(shard))
+
+    def _currently_failed_shards(self) -> set:
+        failed = set(self.failed_shards)
+        if self.fault_plan is not None:
+            failed |= set(self.fault_plan.failed_shards())
+        return failed
+
+    def _degraded_op_count(self, ops: OpLog, failed: set) -> int:
+        """Ops whose home shard (contiguous split, the sharded replay's
+        layout) is down — the measurement the degraded path re-serves."""
+        from repro.distributed.counters import data_shard_count  # lazy: jax
+
+        shards = data_shard_count(self.mesh, self.data_axes)
+        b = -(-max(ops.n_ops, 1) // shards)
+        return sum(
+            max(0, min(ops.n_ops, (s + 1) * b) - min(ops.n_ops, s * b))
+            for s in failed if 0 <= s < shards
+        )
 
     def _register_log(self, ops: OpLog) -> OpLog:
         """Register an evaluation log in the resident-replay working set.
@@ -454,9 +625,56 @@ class PartitionedGraphService:
         in the graph rebuild, the admissibility check — runs *before* any
         service state mutates, so a rejected log leaves ``parts``,
         ``graph``, and the logger exactly as they were.
+
+        **Write-ahead journal.** With a
+        :class:`~repro.core.recovery.DynamismJournal` attached, application
+        is journaled and *exactly-once per log fingerprint*: the intent
+        (full log payload) is written before any validation, the commit
+        mark after every mutation succeeded, and a log whose fingerprint
+        was already applied on this service is a no-op — which is what
+        lets crash recovery replay the journal (or regenerate the same
+        slice) without double-applying. A validation failure marks the
+        entry aborted; an injected crash leaves it pending for the
+        recovery driver to replay or roll back
+        (:func:`repro.core.recovery.replay_journal`).
         """
+        journal, plan = self.journal, self.fault_plan
+        fp = None
+        if journal is not None:
+            fp = log.fingerprint()
+            if fp in self._applied_dynamism:
+                self._applied_dynamism.move_to_end(fp)
+                return
+            journal.begin(log, fp)
+        try:
+            if plan is not None:
+                plan.fire("apply:pre_validate")
+            self._apply_dynamism_checked(log)
+        except BaseException as e:
+            from repro.core.fault import SimulatedCrash
+
+            # A crash "kills the process" mid-apply: the entry stays
+            # pending in the (durable) journal for recovery to resolve.
+            # Any real validation error is a clean rejection: aborted.
+            if journal is not None and not isinstance(e, SimulatedCrash):
+                journal.abort(fp)
+            raise
+        if journal is not None:
+            journal.commit(fp)
+            self._applied_dynamism[fp] = None
+            while len(self._applied_dynamism) > self.max_applied_fingerprints:
+                self._applied_dynamism.popitem(last=False)
+        if plan is not None:
+            plan.fire("apply:post_commit")
+
+    def _apply_dynamism_checked(self, log: DynamismLog) -> None:
+        """Validate-then-commit application body (journal-agnostic)."""
+        plan = self.fault_plan
         if not log.structural:
-            self.parts = apply_dynamism(self.parts, log)
+            new_parts = apply_dynamism(self.parts, log)
+            if plan is not None:
+                plan.fire("apply:pre_commit")
+            self.parts = new_parts
             self.logger.observe_structure(self.graph, self.parts)
             return
         old_graph = self.graph
@@ -477,6 +695,8 @@ class PartitionedGraphService:
             )
         self._check_insert_admissible(log)
         new_parts = apply_dynamism(self.parts, log)
+        if plan is not None:
+            plan.fire("apply:pre_commit")
         # -- commit (nothing below may raise) ------------------------------
         self.parts = new_parts
         self.graph = new_graph

@@ -1,0 +1,672 @@
+"""Durability + crash recovery for the partitioned graph service.
+
+The paper's emulator (§5.3.2) measures a service that never fails; a
+serving deployment of the same design must survive losing the process
+mid-cycle without losing the *measurement contract* — the whole value of
+the reproduction is that every number is replayable bit-for-bit, and a
+recovery path that only "approximately" restores state silently destroys
+that. This module makes the dynamic-experiment cycle
+(:class:`repro.core.dynamic_runtime.DynamicExperimentRuntime` over
+:class:`repro.core.framework.PartitionedGraphService`) crash-consistent:
+
+**Snapshot format** (:class:`ServiceSnapshot`) — a versioned, checksummed
+capture of *all* host-side service state:
+
+* the partition map and the **graph delta** over a pinned base graph
+  (appended node-attr rows + appended edge triples; growth via
+  ``Graph.with_vertices``/``with_edges`` is pure concatenation, so the
+  delta rebuilds the grown graph bit-exactly in one call),
+* DiDiC diffusion state (``w``/``l``/``parts``/``beta``), the
+  :class:`~repro.core.framework.RuntimeLogger` infos + health counters,
+  the :class:`~repro.core.framework.MigrationScheduler` baseline and
+  history, the insert partitioner's ``SeedSequence`` position
+  (entropy/spawn_key/children-spawned — restoring it regenerates the
+  remaining dynamism stream exactly),
+* the loop state of the runtime: baseline + latest
+  :class:`~repro.core.traffic.TrafficResult` (the per-vertex counters
+  feed the next slice's ``least_traffic`` policy), per-slice records, and
+  the index of the next slice to run.
+
+Device-resident replay state (``ResidentReplayState``) is deliberately
+**not** captured: it is a pure function of (graph, log) plus the
+partition map, so a restored service rebuilds it lazily on the first
+replay — bit-equal by the resident path's fold-vs-cold-solve contract.
+Serialization is ``npz`` (:meth:`ServiceSnapshot.to_bytes`); a sha1 over
+the canonical payload is embedded and re-verified on load and before
+every restore, so a corrupt snapshot fails loudly
+(:class:`SnapshotIntegrityError`), never quietly.
+
+**Journal idempotency** (:class:`DynamismJournal`) — a write-ahead log
+for ``apply_dynamism``: the full :class:`~repro.core.dynamism.DynamismLog`
+payload is journaled *before* validation (status ``pending``) and marked
+``committed`` only after every service mutation succeeded. Entries are
+keyed by the log's content fingerprint, and the service skips a
+fingerprint it has already applied — so re-applying a committed entry
+after a crash (or regenerating the same slice from a restored RNG
+stream) is exactly-once by construction. A crash between validate and
+commit leaves the entry ``pending``: recovery rolls it back
+(:meth:`DynamismJournal.rollback_pending`) and the slice is regenerated;
+a crash after commit leaves it ``committed``: recovery re-applies it
+from the journal (:func:`replay_journal`, or per-slice through
+:func:`run_with_recovery`). Entries older than the latest snapshot are
+compacted away — the snapshot subsumes them.
+
+**Degraded-mode guarantees** (implemented in
+:class:`~repro.core.framework.PartitionedGraphService`) — a failed mesh
+shard degrades sharded replay to the shared single-device engine, which
+is *bit-equal on all four traffic counters* by the sharded engine's
+exactness contract: a degraded measurement is a slower measurement, not
+a different one. Maintenance under an injected timeout retries with
+bounded exponential backoff (:class:`~repro.core.fault.RetryPolicy`),
+and the retried DiDiC pass is bit-identical because the timeout fires
+before the deterministic computation. Degraded replays/ops, retry
+counts, and recovery time are reported via
+:meth:`~repro.core.framework.RuntimeLogger.health_report`.
+
+**Recovery driver** (:func:`run_with_recovery`) — runs a dynamic
+experiment under a :class:`~repro.core.fault.FaultPlan`, snapshotting
+every ``snapshot_every`` slices; on a :class:`SimulatedCrash` it builds
+a *fresh* runtime (nothing survives the "process" but the snapshot and
+the journal), restores, and resumes at the snapshot's next slice,
+feeding journal-committed logs back into the slices that had already
+applied them. Because every leg is deterministic given the restored
+state — and crashes/timeouts fire once while shard failures are a pure
+predicate of the slice index — the recovered run's four traffic counters
+are **bit-exact** against an uninterrupted baseline (enforced at scale
+by ``make fault-smoke`` and ``tests/test_recovery.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dynamism import DynamismLog
+from repro.core.fault import FaultPlan, RetryPolicy, SimulatedCrash
+from repro.core.traffic import TrafficResult
+from repro.graphs.structure import Graph
+
+__all__ = [
+    "SnapshotIntegrityError",
+    "ServiceSnapshot",
+    "JournalEntry",
+    "DynamismJournal",
+    "replay_journal",
+    "RecoveryStats",
+    "run_with_recovery",
+]
+
+SNAPSHOT_VERSION = 1
+
+_RESULT_FIELDS = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+_LOG_ARRAYS = ("vertices", "targets", "insert_senders", "insert_receivers",
+               "insert_weights", "unit_is_insert", "insert_unit")
+
+
+class SnapshotIntegrityError(ValueError):
+    """Snapshot checksum/version mismatch — refuse to restore from it."""
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content hash of a graph (structure + node metadata)."""
+    h = hashlib.sha1()
+    h.update(str(graph.n_nodes).encode())
+    for arr in (graph.senders, graph.receivers, graph.edge_weight):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode() + a.tobytes())
+    for key in sorted(graph.node_attrs):
+        a = np.ascontiguousarray(graph.node_attrs[key])
+        h.update(key.encode() + str(a.dtype).encode() + a.tobytes())
+    return h.hexdigest()
+
+
+def _payload_checksum(meta: Dict, arrays: Dict[str, np.ndarray]) -> str:
+    """sha1 over the canonical (meta, arrays) payload, checksum excluded."""
+    clean = {k: v for k, v in meta.items() if k != "checksum"}
+    h = hashlib.sha1()
+    h.update(json.dumps(clean, sort_keys=True).encode())
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        h.update(name.encode())
+        h.update(str(a.dtype).encode() + str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _result_to_arrays(result: TrafficResult, prefix: str,
+                      arrays: Dict[str, np.ndarray]) -> None:
+    for f in _RESULT_FIELDS:
+        arrays[f"{prefix}__{f}"] = np.ascontiguousarray(getattr(result, f))
+
+
+def _result_from_arrays(prefix: str, arrays: Dict[str, np.ndarray]) -> TrafficResult:
+    return TrafficResult(**{f: arrays[f"{prefix}__{f}"].copy()
+                            for f in _RESULT_FIELDS})
+
+
+def _pack_log(log: DynamismLog, prefix: str, meta: Dict,
+              arrays: Dict[str, np.ndarray]) -> None:
+    meta[prefix] = {
+        "method": log.method,
+        "k": log.k,
+        "base_nodes": log.base_nodes,
+        "attr_keys": sorted(log.insert_attrs),
+        "present": [n for n in _LOG_ARRAYS if getattr(log, n) is not None],
+    }
+    for name in _LOG_ARRAYS:
+        arr = getattr(log, name)
+        if arr is not None:
+            arrays[f"{prefix}__{name}"] = np.ascontiguousarray(arr)
+    for key in sorted(log.insert_attrs):
+        arrays[f"{prefix}__attr__{key}"] = np.ascontiguousarray(log.insert_attrs[key])
+
+
+def _unpack_log(prefix: str, meta: Dict, arrays: Dict[str, np.ndarray]) -> DynamismLog:
+    m = meta[prefix]
+    kw = {name: arrays[f"{prefix}__{name}"].copy()
+          for name in m["present"]}
+    for name in _LOG_ARRAYS:
+        kw.setdefault(name, None)
+    return DynamismLog(
+        method=m["method"], k=int(m["k"]),
+        base_nodes=None if m["base_nodes"] is None else int(m["base_nodes"]),
+        insert_attrs={key: arrays[f"{prefix}__attr__{key}"].copy()
+                      for key in m["attr_keys"]},
+        **kw,
+    )
+
+
+@dataclasses.dataclass
+class ServiceSnapshot:
+    """One versioned, checksummed capture of the dynamic-run state.
+
+    Built by :meth:`capture`, applied by :meth:`restore_into`;
+    :meth:`to_bytes`/:meth:`from_bytes` round-trip the whole snapshot
+    through compressed ``npz`` (the durable form). ``verify`` recomputes
+    the embedded checksum and raises :class:`SnapshotIntegrityError` on
+    any mismatch — restore always verifies first.
+    """
+
+    meta: Dict
+    arrays: Dict[str, np.ndarray]
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def capture(cls, runtime, base_graph: Graph, next_slice: int) -> "ServiceSnapshot":
+        """Snapshot ``runtime`` (a DynamicExperimentRuntime mid-run) at a
+        slice boundary: slices ``< next_slice`` are inside the snapshot,
+        ``next_slice`` is where a restored run resumes."""
+        svc = runtime.service
+        graph = svc.graph
+        if graph.n_nodes < base_graph.n_nodes or graph.n_edges < base_graph.n_edges:
+            raise ValueError("service graph is not a growth of the base graph")
+        meta: Dict = {
+            "version": SNAPSHOT_VERSION,
+            "next_slice": int(next_slice),
+            "k": int(svc.k),
+            "n_nodes": int(graph.n_nodes),
+            "n_edges": int(graph.n_edges),
+            "base_nodes": int(base_graph.n_nodes),
+            "base_edges": int(base_graph.n_edges),
+            "base_fingerprint": graph_fingerprint(base_graph),
+            "has_didic": svc.runtime.state is not None,
+            "has_baseline": runtime._baseline is not None,
+            "has_result": runtime._result is not None,
+            "insert_entropy": str(runtime.insert.rng_state()[0]),
+            "insert_spawn_key": list(runtime.insert.rng_state()[1]),
+            "insert_n_spawned": runtime.insert.rng_state()[2],
+            "applied_fingerprints": list(svc._applied_dynamism),
+            "last_percent_global": float(svc.logger._last_percent_global),
+            "health": svc.logger.health_report(),
+            "scheduler_history": [
+                [int(hh["step"]), int(hh["n_moved"])]
+                for hh in runtime.scheduler.history
+            ],
+            "records": [dataclasses.asdict(r) for r in runtime._records],
+        }
+        arrays: Dict[str, np.ndarray] = {
+            "parts": np.ascontiguousarray(svc.parts),
+            "delta_senders": np.ascontiguousarray(
+                graph.senders[base_graph.n_edges:]),
+            "delta_receivers": np.ascontiguousarray(
+                graph.receivers[base_graph.n_edges:]),
+            "delta_weights": np.ascontiguousarray(
+                graph.edge_weight[base_graph.n_edges:]),
+            # np.inf round-trips through arrays, not through json
+            "scheduler_baseline": np.float64(
+                runtime.scheduler.baseline_percent_global),
+            "logger_infos": np.array(
+                [[i.n_vertices, i.n_edges, i.local_traffic, i.global_traffic]
+                 for i in svc.logger.infos], dtype=np.int64),
+        }
+        attr_delta_keys = []
+        for key, old in base_graph.node_attrs.items():
+            if old.shape[0] != base_graph.n_nodes:
+                continue  # not per-node metadata; carried as-is by growth
+            attr_delta_keys.append(key)
+            arrays[f"attr_delta__{key}"] = np.ascontiguousarray(
+                graph.node_attrs[key][base_graph.n_nodes:])
+        meta["attr_delta_keys"] = sorted(attr_delta_keys)
+        if svc.runtime.state is not None:
+            st = svc.runtime.state
+            for f in ("w", "l", "parts", "beta"):
+                arrays[f"didic__{f}"] = np.asarray(getattr(st, f))
+        if runtime._baseline is not None:
+            _result_to_arrays(runtime._baseline, "baseline", arrays)
+        if runtime._result is not None:
+            _result_to_arrays(runtime._result, "result", arrays)
+        meta["checksum"] = _payload_checksum(meta, arrays)
+        return cls(meta=meta, arrays=arrays)
+
+    # -- integrity -----------------------------------------------------------
+    def verify(self) -> None:
+        if self.meta.get("version") != SNAPSHOT_VERSION:
+            raise SnapshotIntegrityError(
+                f"snapshot version {self.meta.get('version')!r}, "
+                f"reader supports {SNAPSHOT_VERSION}"
+            )
+        want = self.meta.get("checksum")
+        got = _payload_checksum(self.meta, self.arrays)
+        if want != got:
+            raise SnapshotIntegrityError(
+                f"snapshot checksum mismatch: stored {want!r}, computed {got!r}"
+            )
+
+    # -- serialization -------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        payload = dict(self.arrays)
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(self.meta).encode(), dtype=np.uint8
+        )
+        np.savez_compressed(buf, **payload)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "ServiceSnapshot":
+        with np.load(io.BytesIO(blob), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+            meta = json.loads(bytes(z["__meta__"]).decode())
+        snap = cls(meta=meta, arrays=arrays)
+        snap.verify()
+        return snap
+
+    # -- restore -------------------------------------------------------------
+    @property
+    def next_slice(self) -> int:
+        return int(self.meta["next_slice"])
+
+    def rebuild_graph(self, base_graph: Graph) -> Graph:
+        """Re-grow the snapshot graph from the pinned base (bit-exact:
+        growth is pure concatenation of the recorded deltas)."""
+        if graph_fingerprint(base_graph) != self.meta["base_fingerprint"]:
+            raise SnapshotIntegrityError(
+                "snapshot was taken against a different base graph"
+            )
+        n_new = int(self.meta["n_nodes"]) - base_graph.n_nodes
+        s = self.arrays["delta_senders"]
+        if n_new == 0 and s.shape[0] == 0:
+            return base_graph
+        attrs = {key: self.arrays[f"attr_delta__{key}"]
+                 for key in self.meta["attr_delta_keys"]}
+        if n_new == 0:
+            return base_graph.with_edges(
+                s, self.arrays["delta_receivers"], self.arrays["delta_weights"]
+            )
+        return base_graph.with_vertices(
+            n_new, attrs, s, self.arrays["delta_receivers"],
+            self.arrays["delta_weights"],
+        )
+
+    def restore_into(self, runtime, base_graph: Graph) -> None:
+        """Load this snapshot into a (typically fresh) runtime + service.
+
+        Everything host-side is restored bit-exactly; device-resident
+        replay state is *not* — the service rebuilds it lazily on the
+        next replay, which the resident path's cold-solve equality makes
+        invisible to every counter.
+        """
+        self.verify()
+        import jax.numpy as jnp
+
+        from repro.core.didic import DidicState
+        from repro.core.dynamic_runtime import SliceRecord
+        from repro.core.framework import InstanceInfo
+
+        svc = runtime.service
+        if svc.k != int(self.meta["k"]):
+            raise SnapshotIntegrityError(
+                f"snapshot k={self.meta['k']} vs service k={svc.k}"
+            )
+        svc.graph = self.rebuild_graph(base_graph)
+        svc.parts = self.arrays["parts"].copy()
+        # Drop any resident replay state: it belongs to the pre-crash
+        # graph objects. Lazy rebuild restores it on first replay.
+        for ops in svc._replayed_logs.values():
+            ops.__dict__.pop("_resident_replay", None)
+        svc._replayed_logs.clear()
+        if self.meta["has_didic"]:
+            svc.runtime.state = DidicState(
+                w=jnp.asarray(self.arrays["didic__w"]),
+                l=jnp.asarray(self.arrays["didic__l"]),
+                parts=jnp.asarray(self.arrays["didic__parts"]),
+                beta=jnp.asarray(self.arrays["didic__beta"]),
+            )
+        else:
+            svc.runtime.state = None
+        infos = self.arrays["logger_infos"]
+        svc.logger.infos = [
+            InstanceInfo(n_vertices=int(r[0]), n_edges=int(r[1]),
+                         local_traffic=int(r[2]), global_traffic=int(r[3]))
+            for r in infos
+        ]
+        svc.logger._last_percent_global = float(self.meta["last_percent_global"])
+        for key, val in self.meta["health"].items():
+            setattr(svc.logger, key, type(getattr(svc.logger, key))(val))
+        svc._applied_dynamism = OrderedDict(
+            (fp, None) for fp in self.meta["applied_fingerprints"]
+        )
+        runtime.scheduler.baseline_percent_global = float(
+            self.arrays["scheduler_baseline"])
+        runtime.scheduler.history = [
+            {"step": int(s), "n_moved": int(n)}
+            for s, n in self.meta["scheduler_history"]
+        ]
+        runtime.insert.set_rng_state((
+            int(self.meta["insert_entropy"]),
+            tuple(self.meta["insert_spawn_key"]),
+            int(self.meta["insert_n_spawned"]),
+        ))
+        runtime._baseline = (
+            _result_from_arrays("baseline", self.arrays)
+            if self.meta["has_baseline"] else None
+        )
+        runtime._result = (
+            _result_from_arrays("result", self.arrays)
+            if self.meta["has_result"] else None
+        )
+        runtime._records = [SliceRecord(**r) for r in self.meta["records"]]
+
+
+# ===========================================================================
+# Write-ahead dynamism journal
+# ===========================================================================
+@dataclasses.dataclass
+class JournalEntry:
+    seq: int
+    fingerprint: str
+    status: str                    # "pending" | "committed" | "aborted"
+    log: DynamismLog
+    slice_index: int = -1
+
+
+class DynamismJournal:
+    """Write-ahead log of dynamism applications, keyed by log fingerprint.
+
+    The service writes the intent (:meth:`begin`, full log payload)
+    before validating, and the commit mark (:meth:`commit`) after every
+    mutation succeeded; :meth:`abort` records a clean validation
+    rejection. A re-begun fingerprint reuses its entry (an aborted entry
+    is revived to pending), so retrying a rolled-back slice keeps one
+    entry per logical application. Compaction (:meth:`compact`) drops
+    entries subsumed by a snapshot, bounding journal memory for long
+    runs; :meth:`to_bytes`/:meth:`from_bytes` give the journal the same
+    durable ``npz`` form as the snapshot.
+    """
+
+    def __init__(self):
+        self.entries: "OrderedDict[str, JournalEntry]" = OrderedDict()
+        self._next_seq = 0
+        self._current_slice = -1
+
+    # -- driver interface ----------------------------------------------------
+    def mark_slice(self, index: int) -> None:
+        """Stamp subsequent :meth:`begin` calls with this slice index."""
+        self._current_slice = int(index)
+
+    def entry_for_slice(self, index: int) -> Optional[JournalEntry]:
+        for e in self.entries.values():
+            if e.slice_index == int(index):
+                return e
+        return None
+
+    # -- service (WAL) interface ---------------------------------------------
+    def begin(self, log: DynamismLog, fingerprint: Optional[str] = None) -> JournalEntry:
+        fp = fingerprint or log.fingerprint()
+        entry = self.entries.get(fp)
+        if entry is not None:
+            if entry.status == "aborted":
+                entry.status = "pending"
+            entry.slice_index = self._current_slice
+            return entry
+        entry = JournalEntry(
+            seq=self._next_seq, fingerprint=fp, status="pending", log=log,
+            slice_index=self._current_slice,
+        )
+        self._next_seq += 1
+        self.entries[fp] = entry
+        return entry
+
+    def commit(self, fingerprint: str) -> None:
+        self.entries[fingerprint].status = "committed"
+
+    def abort(self, fingerprint: str) -> None:
+        self.entries[fingerprint].status = "aborted"
+
+    # -- recovery interface --------------------------------------------------
+    def pending(self) -> List[JournalEntry]:
+        return [e for e in self.entries.values() if e.status == "pending"]
+
+    def committed(self) -> List[JournalEntry]:
+        return sorted(
+            (e for e in self.entries.values() if e.status == "committed"),
+            key=lambda e: e.seq,
+        )
+
+    def rollback_pending(self) -> int:
+        """Abort every pending entry (crash before commit ⇒ the mutation
+        never happened — apply is atomic). Returns how many."""
+        n = 0
+        for e in self.pending():
+            e.status = "aborted"
+            n += 1
+        return n
+
+    def compact(self, before_slice: int) -> int:
+        """Drop non-pending entries for slices ``< before_slice`` (they
+        are inside the latest snapshot). Returns how many were dropped."""
+        drop = [fp for fp, e in self.entries.items()
+                if e.status != "pending" and 0 <= e.slice_index < int(before_slice)]
+        for fp in drop:
+            del self.entries[fp]
+        return len(drop)
+
+    # -- serialization -------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        meta: Dict = {
+            "next_seq": self._next_seq,
+            "current_slice": self._current_slice,
+            "order": list(self.entries),
+        }
+        arrays: Dict[str, np.ndarray] = {}
+        for i, (fp, e) in enumerate(self.entries.items()):
+            meta[f"entry{i}"] = {
+                "seq": e.seq, "fingerprint": fp, "status": e.status,
+                "slice_index": e.slice_index,
+            }
+            _pack_log(e.log, f"log{i}", meta, arrays)
+        meta["checksum"] = _payload_checksum(meta, arrays)
+        buf = io.BytesIO()
+        payload = dict(arrays)
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8
+        )
+        np.savez_compressed(buf, **payload)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "DynamismJournal":
+        with np.load(io.BytesIO(blob), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+            meta = json.loads(bytes(z["__meta__"]).decode())
+        if meta.get("checksum") != _payload_checksum(meta, arrays):
+            raise SnapshotIntegrityError("journal checksum mismatch")
+        j = cls()
+        j._next_seq = int(meta["next_seq"])
+        j._current_slice = int(meta["current_slice"])
+        for i, fp in enumerate(meta["order"]):
+            em = meta[f"entry{i}"]
+            j.entries[fp] = JournalEntry(
+                seq=int(em["seq"]), fingerprint=fp, status=em["status"],
+                log=_unpack_log(f"log{i}", meta, arrays),
+                slice_index=int(em["slice_index"]),
+            )
+        return j
+
+
+def replay_journal(service, journal: DynamismJournal, after_seq: int = -1) -> int:
+    """Re-apply committed journal entries (seq order) to a service.
+
+    Idempotent: the service skips fingerprints it already applied, so
+    replaying over a partially-recovered service is safe. Returns the
+    number of entries whose application actually ran.
+    """
+    applied = 0
+    for e in journal.committed():
+        if e.seq <= after_seq:
+            continue
+        if e.fingerprint in service._applied_dynamism:
+            service._applied_dynamism.move_to_end(e.fingerprint)
+            continue
+        service.apply_dynamism(e.log)
+        applied += 1
+    return applied
+
+
+# ===========================================================================
+# Recovery driver
+# ===========================================================================
+@dataclasses.dataclass
+class RecoveryStats:
+    """What the supervisor did across one faulted run."""
+
+    recoveries: int = 0
+    recovery_time_s: float = 0.0
+    snapshots_taken: int = 0
+    journal_rolled_back: int = 0
+    journal_replayed: int = 0
+    journal_compacted: int = 0
+    resumed_from: List[int] = dataclasses.field(default_factory=list)
+
+
+def run_with_recovery(
+    make_runtime: Callable[[], "DynamicExperimentRuntime"],
+    base_graph: Graph,
+    ops,
+    n_slices: int,
+    amount: float,
+    *,
+    maintain_every: int = 1,
+    iterations: int = 1,
+    measure_damaged: bool = False,
+    insert_rate=0.0,
+    fault_plan: Optional[FaultPlan] = None,
+    journal: Optional[DynamismJournal] = None,
+    retry_policy: Optional[RetryPolicy] = None,
+    snapshot_every: int = 4,
+    snapshot_roundtrip: bool = True,
+    max_recoveries: int = 8,
+    on_slice: Optional[Callable[[int, TrafficResult], None]] = None,
+) -> Tuple["DynamicRunResult", RecoveryStats]:
+    """Supervise a dynamic run under fault injection.
+
+    ``make_runtime`` builds a fresh runtime over a fresh service on
+    ``base_graph`` — called once at start and once per recovery, so
+    nothing survives a crash except the snapshot and the journal (the
+    durable state; with ``snapshot_roundtrip`` the snapshot additionally
+    passes through its ``npz`` byte form on every capture and restore,
+    so what recovery consumes is exactly what durable storage would
+    hold). The run resumes at the latest snapshot's slice boundary;
+    slices whose dynamism already committed re-apply the journaled log
+    (the insert RNG advances past its unused draw to stay aligned), and
+    a pending entry from a mid-apply crash is rolled back and the slice
+    regenerated from the restored RNG stream. The recovered run is
+    bit-exact vs an uninterrupted one on every traffic counter.
+
+    ``insert_rate`` may be a float or a per-slice callable ``i -> rate``
+    (deterministic in ``i``, so re-run slices regenerate identically) —
+    the chaos soak mixes pure-move and vertex-growth slices this way.
+    """
+    journal = journal if journal is not None else DynamismJournal()
+    stats = RecoveryStats()
+
+    def fresh_runtime():
+        rt = make_runtime()
+        svc = rt.service
+        svc.fault_plan = fault_plan
+        svc.journal = journal
+        svc.retry_policy = retry_policy
+        return rt
+
+    def take_snapshot(rt, next_slice: int) -> ServiceSnapshot:
+        snap = ServiceSnapshot.capture(rt, base_graph, next_slice=next_slice)
+        if snapshot_roundtrip:
+            snap = ServiceSnapshot.from_bytes(snap.to_bytes())
+        stats.snapshots_taken += 1
+        stats.journal_compacted += journal.compact(before_slice=next_slice)
+        return snap
+
+    runtime = fresh_runtime()
+    runtime.begin(ops)
+    snapshot = take_snapshot(runtime, next_slice=0)
+
+    i = 0
+    while i < n_slices:
+        journal.mark_slice(i)
+        entry = journal.entry_for_slice(i)
+        log = entry.log if entry is not None and entry.status == "committed" else None
+        try:
+            _, result = runtime.run_slice(
+                i, ops, amount,
+                maintain_every=maintain_every, iterations=iterations,
+                measure_damaged=measure_damaged,
+                insert_rate=insert_rate(i) if callable(insert_rate) else insert_rate,
+                log=log,
+            )
+        except SimulatedCrash:
+            if stats.recoveries >= max_recoveries:
+                raise
+            t0 = time.perf_counter()
+            stats.journal_rolled_back += journal.rollback_pending()
+            # The crashed "process" takes its device memory with it: drop
+            # the resident replay state of every log it served so the
+            # restored service re-solves lazily instead of accumulating
+            # one dead state per crash.
+            for served in runtime.service._replayed_logs.values():
+                served.__dict__.pop("_resident_replay", None)
+            runtime = fresh_runtime()
+            if snapshot_roundtrip:
+                snapshot = ServiceSnapshot.from_bytes(snapshot.to_bytes())
+            snapshot.restore_into(runtime, base_graph)
+            i = snapshot.next_slice
+            elapsed = time.perf_counter() - t0
+            stats.recoveries += 1
+            stats.recovery_time_s += elapsed
+            stats.resumed_from.append(i)
+            runtime.service.logger.record_recovery(elapsed)
+            continue
+        if log is not None:
+            stats.journal_replayed += 1
+        if on_slice is not None:
+            on_slice(i, result)
+        i += 1
+        if snapshot_every and i % snapshot_every == 0 and i < n_slices:
+            snapshot = take_snapshot(runtime, next_slice=i)
+    return runtime.result(), stats

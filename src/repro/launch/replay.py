@@ -7,12 +7,20 @@ throughput. On a CPU-only host, ``--force-host-devices N`` fakes an
 N-device platform (the flag must reach XLA before jax initializes, which
 is why all heavy imports live inside :func:`main`).
 
+``--degraded-check`` additionally runs the log through a
+:class:`~repro.core.framework.PartitionedGraphService` with one shard
+marked failed, verifying the degraded fallback (shared batched engine)
+stays bit-equal to the healthy sharded replay and reporting the
+degraded-operation accounting from the service's health report.
+
 Examples::
 
   python -m repro.launch.replay --dataset gis --pattern gis_short \
       --n-ops 2000 --force-host-devices 8
   python -m repro.launch.replay --dataset twitter --n-ops 100000 \
       --partitioner didic --no-verify
+  python -m repro.launch.replay --dataset gis --force-host-devices 4 \
+      --degraded-check
 """
 
 from __future__ import annotations
@@ -41,6 +49,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-exactness check vs the batched engine")
+    ap.add_argument("--degraded-check", action="store_true",
+                    help="also replay through a service with one failed "
+                         "shard and verify the degraded fallback is bit-equal")
     args = ap.parse_args()
 
     if args.force_host_devices:
@@ -80,7 +91,20 @@ def main() -> None:
             if not np.array_equal(getattr(res, field), getattr(ref, field)):
                 raise SystemExit(f"sharded replay diverged from batched on {field}")
 
-    print(json.dumps({
+    degraded = None
+    if args.degraded_check:
+        from repro.core.framework import PartitionedGraphService
+
+        svc = PartitionedGraphService(graph, args.k, mesh=mesh)
+        svc.partition_with(parts)
+        svc.mark_shard_failed(len(mesh.devices.flat) - 1)
+        deg = svc.run_ops(ops)
+        for field in ("per_op_total", "per_op_global", "per_partition", "per_vertex"):
+            if not np.array_equal(getattr(deg, field), getattr(res, field)):
+                raise SystemExit(f"degraded fallback diverged on {field}")
+        degraded = svc.logger.health_report()
+
+    out = {
         "dataset": args.dataset,
         "pattern": ops.pattern,
         "n_ops": ops.n_ops,
@@ -89,7 +113,10 @@ def main() -> None:
         "total_traffic": res.total,
         "percent_global": round(res.percent_global, 6),
         "verified": not args.no_verify,
-    }))
+    }
+    if degraded is not None:
+        out["degraded"] = degraded
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

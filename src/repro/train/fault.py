@@ -1,7 +1,11 @@
 """Fault injection + straggler mitigation for the training loop.
 
-On real pods, failures arrive as ICI timeouts / preemptions; here they are
-*simulated* deterministically so the recovery path is testable:
+The implementation moved to :mod:`repro.core.fault`, where the same
+primitives also serve :class:`repro.core.framework.PartitionedGraphService`
+(shard failures, maintenance timeouts, mid-apply crashes — see
+:mod:`repro.core.recovery` for the snapshot/journal recovery path). This
+module re-exports the training-loop names so existing callers keep
+working:
 
 * :class:`FaultInjector` raises ``SimulatedFault`` on configured steps —
   the trainer must recover by restoring the latest checkpoint (test
@@ -9,63 +13,12 @@ On real pods, failures arrive as ICI timeouts / preemptions; here they are
 * :class:`StragglerMitigator` implements deadline-based re-dispatch: step
   durations are tracked in an EWMA; a step exceeding
   ``deadline_factor × ewma`` is counted as a straggler and the configured
-  mitigation fires (backup-step re-dispatch — on a real pod this re-runs
-  the microbatch on the spare slice; here it re-invokes the step function,
-  which is idempotent because steps are pure functions of (state, batch)).
+  mitigation fires (backup-step re-dispatch — idempotent because steps
+  are pure functions of (state, batch)).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Optional, Sequence
+from repro.core.fault import FaultInjector, SimulatedFault, StragglerMitigator
 
-
-class SimulatedFault(RuntimeError):
-    pass
-
-
-@dataclasses.dataclass
-class FaultInjector:
-    fail_at_steps: Sequence[int] = ()
-    _fired: set = dataclasses.field(default_factory=set)
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise SimulatedFault(f"injected node failure at step {step}")
-
-
-@dataclasses.dataclass
-class StragglerMitigator:
-    deadline_factor: float = 3.0
-    ewma_alpha: float = 0.2
-    min_samples: int = 5
-    _ewma: float = 0.0
-    _n: int = 0
-    stragglers_detected: int = 0
-    redispatches: int = 0
-
-    def observe(self, duration: float) -> bool:
-        """Record a step duration; returns True if it was a straggler."""
-        self._n += 1
-        if self._n <= self.min_samples:
-            self._ewma = duration if self._n == 1 else (
-                self.ewma_alpha * duration + (1 - self.ewma_alpha) * self._ewma
-            )
-            return False
-        is_straggler = duration > self.deadline_factor * self._ewma
-        if is_straggler:
-            self.stragglers_detected += 1
-        else:
-            self._ewma = self.ewma_alpha * duration + (1 - self.ewma_alpha) * self._ewma
-        return is_straggler
-
-    def run_with_mitigation(self, fn: Callable, *args, **kwargs):
-        """Run a pure step; re-dispatch once if it blows the deadline."""
-        t0 = time.perf_counter()
-        out = fn(*args, **kwargs)
-        if self.observe(time.perf_counter() - t0):
-            self.redispatches += 1
-            out = fn(*args, **kwargs)  # idempotent pure step
-        return out
+__all__ = ["FaultInjector", "SimulatedFault", "StragglerMitigator"]

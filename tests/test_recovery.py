@@ -1,0 +1,521 @@
+"""Fault-tolerance layer tests (ISSUE 6).
+
+Covers the RuntimeLogger satellite fixes (largest-remainder global
+attribution, reset clearing the degradation aggregate), the fault plan +
+retry policy, degraded-mode replay, snapshot capture/restore/verify, the
+write-ahead dynamism journal, crash recovery bit-exactness, and the
+chaos soak (≥50 slices of mixed move/insert dynamism under shard
+failures and mid-apply crashes, bit-exact vs uninterrupted with bounded
+device memory). Mesh tests run on the tier-1 single-device CPU (a
+1-shard replay mesh); the 8-device fault schedule runs in
+``make fault-smoke`` (benchmarks/kernel_bench.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import partitioners
+from repro.core.didic import DidicConfig
+from repro.core.dynamic_runtime import DynamicExperimentRuntime
+from repro.core.fault import (
+    FaultPlan,
+    MaintenanceTimeout,
+    RecoveryDeadlineExceeded,
+    RetryPolicy,
+    SimulatedCrash,
+)
+from repro.core.framework import (
+    InsertPartitioner,
+    MigrationScheduler,
+    PartitionedGraphService,
+    RuntimeLogger,
+)
+from repro.core.recovery import (
+    DynamismJournal,
+    ServiceSnapshot,
+    SnapshotIntegrityError,
+    replay_journal,
+    run_with_recovery,
+)
+from repro.core.traffic import TrafficResult, generate_ops
+from repro.graphs import datasets
+
+COUNTERS = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+FAST_DIDIC = DidicConfig(k=4, iterations=6)
+
+
+def _traffic(per_partition, per_op_total, per_op_global, n_vertex=8):
+    return TrafficResult(
+        per_op_total=np.asarray(per_op_total, dtype=np.int64),
+        per_op_global=np.asarray(per_op_global, dtype=np.int64),
+        per_partition=np.asarray(per_partition, dtype=np.int64),
+        per_vertex=np.zeros(n_vertex, dtype=np.int64),
+    )
+
+
+def _assert_results_equal(a: TrafficResult, b: TrafficResult, ctx=""):
+    for f in COUNTERS:
+        np.testing.assert_array_equal(
+            getattr(a, f), getattr(b, f), err_msg=f"{ctx}: {f} diverged"
+        )
+
+
+def _runtime_factory(graph, *, mesh=None, seed=7, method="least_traffic"):
+    def make():
+        svc = PartitionedGraphService(
+            graph, 4, didic=FAST_DIDIC, mesh=mesh,
+            maintenance="shared" if mesh is not None else "auto",
+        )
+        svc.partition_didic(seed=0)
+        return DynamicExperimentRuntime(svc, insert_method=method, seed=seed)
+
+    return make
+
+
+# ===========================================================================
+# RuntimeLogger satellites
+# ===========================================================================
+class TestRuntimeLoggerFixes:
+    def test_global_attribution_largest_remainder_exact(self):
+        """ISSUE 6 satellite: floor division dropped up to k−1 global
+        units per observation. [1,1,1] served with 2 global units floors
+        every quota (2·1//3) to zero — pre-fix the summed global
+        attribution was 0, not 2."""
+        lg = RuntimeLogger(3)
+        lg.observe_traffic(_traffic([1, 1, 1], [1, 1, 1], [1, 1, 0]))
+        assert sum(i.global_traffic for i in lg.infos) == 2
+        for info, served in zip(lg.infos, (1, 1, 1)):
+            assert info.local_traffic + info.global_traffic == served
+            assert info.local_traffic >= 0 and info.global_traffic >= 0
+
+    def test_global_attribution_invariants_randomized(self):
+        """Exactness + per-partition conservation over random loads."""
+        rng = np.random.default_rng(0)
+        for trial in range(40):
+            k = int(rng.integers(2, 7))
+            per_op_total = rng.integers(0, 6, size=17)
+            per_op_global = np.minimum(per_op_total, rng.integers(0, 6, size=17))
+            total = int(per_op_total.sum())
+            per_partition = rng.multinomial(total, np.ones(k) / k)
+            lg = RuntimeLogger(k)
+            lg.observe_traffic(_traffic(per_partition, per_op_total, per_op_global))
+            assert sum(i.global_traffic for i in lg.infos) == int(per_op_global.sum())
+            for info, served in zip(lg.infos, per_partition):
+                assert info.local_traffic + info.global_traffic == int(served)
+                assert info.local_traffic >= 0 and info.global_traffic >= 0
+
+    def test_reset_clears_stale_degradation_aggregate(self):
+        """ISSUE 6 satellite: reset() left _last_percent_global stale, so
+        a freshly reset service could trip MigrationScheduler.should_migrate
+        on degradation it never served."""
+        lg = RuntimeLogger(2)
+        lg.observe_traffic(_traffic([2, 2], [2, 2], [2, 2]))
+        assert lg.percent_global() == 1.0
+        lg.reset()
+        assert lg.percent_global() == 0.0  # pre-fix: stayed 1.0
+        sched = MigrationScheduler(degradation_factor=1.25)
+        sched.record_maintenance(0.1)
+        assert not sched.should_migrate(lg.percent_global())
+
+    def test_reset_clears_health_counters(self):
+        lg = RuntimeLogger(2)
+        lg.record_degraded(10)
+        lg.record_maintenance_retries(2, 0.5)
+        lg.record_recovery(1.0)
+        lg.reset()
+        assert all(v == 0 for v in lg.health_report().values())
+
+
+# ===========================================================================
+# Fault plan + retry policy
+# ===========================================================================
+class TestFaultPrimitives:
+    def test_fault_plan_schedule(self):
+        plan = (FaultPlan()
+                .crash(2, site="apply:pre_commit")
+                .fail_shard(3, shard=1, slices=2)
+                .timeout_maintenance(1, times=2))
+        plan.begin_slice(0)
+        plan.fire("apply:pre_commit")  # nothing scheduled here
+        assert plan.failed_shards() == frozenset()
+        plan.begin_slice(1)
+        for _ in range(2):
+            with pytest.raises(MaintenanceTimeout):
+                plan.fire("maintain")
+        plan.fire("maintain")  # times exhausted
+        plan.begin_slice(2)
+        with pytest.raises(SimulatedCrash):
+            plan.fire("apply:pre_commit")
+        plan.fire("apply:pre_commit")  # crashes fire once (recovery re-runs)
+        assert plan.failed_shards(3) == frozenset({1})
+        assert plan.failed_shards(4) == frozenset({1})
+        assert plan.failed_shards(5) == frozenset()
+
+    def test_retry_policy_backoff_then_deadline(self):
+        sleeps = []
+        p = RetryPolicy(max_retries=3, backoff_base_s=1.0, backoff_factor=2.0,
+                        deadline_s=100.0, sleep=sleeps.append)
+        for attempt in (1, 2, 3):
+            p.wait(attempt, elapsed_s=0.0)
+        assert sleeps == [1.0, 2.0, 4.0]
+        with pytest.raises(RecoveryDeadlineExceeded):
+            p.wait(4, elapsed_s=0.0)        # retry budget spent
+        with pytest.raises(RecoveryDeadlineExceeded):
+            p.wait(1, elapsed_s=100.0)      # wall-clock budget spent
+
+    def test_maintenance_timeout_retries_bit_identical(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        ref = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        ref.partition_didic(seed=0)
+        ref.maintain()
+
+        svc = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        svc.partition_didic(seed=0)
+        svc.fault_plan = FaultPlan().timeout_maintenance(0, times=2)
+        svc.fault_plan.begin_slice(0)
+        sleeps = []
+        svc.retry_policy = RetryPolicy(max_retries=5, sleep=sleeps.append)
+        svc.maintain()
+        np.testing.assert_array_equal(svc.parts, ref.parts)
+        assert svc.logger.maintenance_retries == 2
+        assert len(sleeps) == 2
+
+    def test_maintenance_retry_budget_exhaustion_raises(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        svc.partition_didic(seed=0)
+        svc.fault_plan = FaultPlan().timeout_maintenance(0, times=10)
+        svc.fault_plan.begin_slice(0)
+        svc.retry_policy = RetryPolicy(max_retries=2, sleep=lambda s: None)
+        before = svc.parts.copy()
+        with pytest.raises(RecoveryDeadlineExceeded):
+            svc.maintain()
+        np.testing.assert_array_equal(svc.parts, before)  # nothing applied
+
+
+# ===========================================================================
+# Degraded mode (1-shard mesh on the tier-1 CPU)
+# ===========================================================================
+class TestDegradedMode:
+    def test_degraded_replay_bit_equal_and_counted(self):
+        from repro.launch.mesh import make_replay_mesh
+
+        g = datasets.load("filesystem", scale=0.002, seed=0)
+        svc = PartitionedGraphService(g, 4, mesh=make_replay_mesh())
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        ops = generate_ops(g, n_ops=80, seed=0)
+        healthy = svc.run_ops(ops)
+        svc.mark_shard_failed(0)
+        degraded = svc.run_ops(ops)
+        _assert_results_equal(healthy, degraded, "degraded fallback")
+        assert svc.logger.degraded_replays == 1
+        assert svc.logger.degraded_ops == ops.n_ops  # the only shard failed
+        svc.mark_shard_recovered(0)
+        recovered = svc.run_ops(ops)
+        _assert_results_equal(healthy, recovered, "post-recovery")
+        assert svc.logger.degraded_replays == 1  # no new degraded serves
+        health = svc.logger.health_report()
+        assert health["degraded_replays"] == 1 and health["degraded_ops"] == ops.n_ops
+
+    def test_fault_plan_shard_schedule_degrades_replay(self):
+        from repro.launch.mesh import make_replay_mesh
+
+        g = datasets.load("filesystem", scale=0.002, seed=0)
+        svc = PartitionedGraphService(g, 4, mesh=make_replay_mesh())
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        ops = generate_ops(g, n_ops=80, seed=0)
+        plan = FaultPlan().fail_shard(1, shard=0, slices=1)
+        svc.fault_plan = plan
+        plan.begin_slice(0)
+        svc.run_ops(ops)
+        assert svc.logger.degraded_replays == 0
+        plan.begin_slice(1)
+        svc.run_ops(ops)
+        assert svc.logger.degraded_replays == 1
+        plan.begin_slice(2)
+        svc.run_ops(ops)
+        assert svc.logger.degraded_replays == 1
+
+
+# ===========================================================================
+# Snapshot/restore
+# ===========================================================================
+class TestSnapshot:
+    def test_capture_restore_resume_bit_exact(self):
+        """Snapshot at a slice boundary, restore into a *fresh* runtime,
+        finish the run: every slice matches the uninterrupted baseline."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        make = _runtime_factory(g)
+        ops = generate_ops(g, n_ops=120, seed=3)
+        kw = dict(maintain_every=2, insert_rate=0.4)
+
+        base = {}
+        ref = make()
+        ref_result = ref.run(ops, 6, 0.05, on_slice=lambda i, r: base.__setitem__(i, r), **kw)
+
+        rt = make()
+        rt.begin(ops)
+        for i in range(3):
+            rt.run_slice(i, ops, 0.05, **kw)
+        snap = ServiceSnapshot.from_bytes(
+            ServiceSnapshot.capture(rt, g, next_slice=3).to_bytes()
+        )
+        rt2 = make()
+        snap.restore_into(rt2, g)
+        for i in range(3, 6):
+            _, res = rt2.run_slice(i, ops, 0.05, **kw)
+            _assert_results_equal(base[i], res, f"slice {i}")
+        out = rt2.result()
+        np.testing.assert_array_equal(ref_result.parts, out.parts)
+        assert ref_result.records == out.records
+
+    def test_checksum_and_version_guard(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        rt = _runtime_factory(g)()
+        ops = generate_ops(g, n_ops=60, seed=3)
+        rt.begin(ops)
+        rt.run_slice(0, ops, 0.05, insert_rate=0.5)
+        snap = ServiceSnapshot.capture(rt, g, next_slice=1)
+        snap.verify()
+        blob = snap.to_bytes()
+        loaded = ServiceSnapshot.from_bytes(blob)
+        assert loaded.meta["checksum"] == snap.meta["checksum"]
+
+        loaded.arrays["parts"] = loaded.arrays["parts"].copy()
+        loaded.arrays["parts"][0] += 1  # bit-rot
+        with pytest.raises(SnapshotIntegrityError, match="checksum"):
+            loaded.verify()
+
+        stale = ServiceSnapshot.from_bytes(blob)
+        stale.meta["version"] = 99
+        with pytest.raises(SnapshotIntegrityError, match="version"):
+            stale.verify()
+        with pytest.raises(SnapshotIntegrityError, match="base graph"):
+            other = datasets.load("filesystem", scale=0.001, seed=2)
+            ServiceSnapshot.from_bytes(blob).rebuild_graph(other)
+
+    def test_rebuild_graph_is_bit_exact_growth(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        rt = _runtime_factory(g)()
+        ops = generate_ops(g, n_ops=60, seed=3)
+        rt.begin(ops)
+        for i in range(2):
+            rt.run_slice(i, ops, 0.05, insert_rate=0.5)
+        grown = rt.service.graph
+        assert grown.n_nodes > g.n_nodes
+        snap = ServiceSnapshot.from_bytes(
+            ServiceSnapshot.capture(rt, g, next_slice=2).to_bytes()
+        )
+        rebuilt = snap.rebuild_graph(g)
+        assert rebuilt.n_nodes == grown.n_nodes
+        np.testing.assert_array_equal(rebuilt.senders, grown.senders)
+        np.testing.assert_array_equal(rebuilt.receivers, grown.receivers)
+        np.testing.assert_array_equal(rebuilt.edge_weight, grown.edge_weight)
+        for key in grown.node_attrs:
+            np.testing.assert_array_equal(
+                rebuilt.node_attrs[key], grown.node_attrs[key], err_msg=key
+            )
+
+
+# ===========================================================================
+# Write-ahead dynamism journal
+# ===========================================================================
+class TestDynamismJournal:
+    def _service(self, g):
+        svc = PartitionedGraphService(g, 4)
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        return svc
+
+    def test_wal_crash_rollback_then_exactly_once(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = self._service(g)
+        journal = DynamismJournal()
+        svc.journal = journal
+        log = InsertPartitioner("random", 4, seed=0).allocate(
+            svc.parts, 0.05, insert_rate=0.5, graph=svc.graph
+        )
+        plan = FaultPlan().crash(0, site="apply:pre_commit")
+        svc.fault_plan = plan
+        plan.begin_slice(0)
+        parts_before, nodes_before = svc.parts.copy(), svc.graph.n_nodes
+        with pytest.raises(SimulatedCrash):
+            svc.apply_dynamism(log)
+        entry = journal.entries[log.fingerprint()]
+        assert entry.status == "pending"  # intent written ahead of validate
+        assert svc.graph.n_nodes == nodes_before  # atomic: nothing mutated
+        np.testing.assert_array_equal(svc.parts, parts_before)
+
+        assert journal.rollback_pending() == 1
+        assert entry.status == "aborted"
+        svc.apply_dynamism(log)  # retry revives the entry, same seq
+        assert entry.status == "committed" and entry.seq == 0
+        grown = svc.graph.n_nodes
+        assert grown == nodes_before + log.n_new_vertices
+        svc.apply_dynamism(log)  # exactly-once: committed fp is a no-op
+        assert svc.graph.n_nodes == grown
+
+    def test_validation_failure_marks_aborted(self):
+        from repro.core.dynamism import DynamismLog
+
+        g = datasets.load("gis", scale=0.001, seed=0)
+        svc = self._service(g)
+        journal = DynamismJournal()
+        svc.journal = journal
+        bad = DynamismLog(
+            vertices=np.array([1]), targets=np.array([1], np.int32),
+            method="random", k=4,
+            insert_senders=np.array([0]),
+            insert_receivers=np.array([g.n_nodes - 1]),
+            insert_weights=np.array([1e-8], np.float32),  # < straight line
+        )
+        with pytest.raises(ValueError, match="straight-line"):
+            svc.apply_dynamism(bad)
+        assert journal.entries[bad.fingerprint()].status == "aborted"
+
+    def test_replay_journal_idempotent(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = self._service(g)
+        svc.journal = journal = DynamismJournal()
+        ip = InsertPartitioner("random", 4, seed=0)
+        for i in range(3):
+            journal.mark_slice(i)
+            svc.apply_dynamism(ip.allocate(
+                svc.parts, 0.03, insert_rate=0.5, graph=svc.graph
+            ))
+        final_nodes, final_parts = svc.graph.n_nodes, svc.parts.copy()
+
+        fresh = self._service(g)
+        fresh.journal = journal
+        assert replay_journal(fresh, journal) == 3
+        assert fresh.graph.n_nodes == final_nodes
+        np.testing.assert_array_equal(fresh.parts, final_parts)
+        assert replay_journal(fresh, journal) == 0  # idempotent
+
+    def test_journal_serialization_and_compaction(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = self._service(g)
+        svc.journal = journal = DynamismJournal()
+        ip = InsertPartitioner("random", 4, seed=0)
+        for i in range(4):
+            journal.mark_slice(i)
+            svc.apply_dynamism(ip.allocate(
+                svc.parts, 0.03, insert_rate=0.5 if i % 2 else 0.0,
+                graph=svc.graph,
+            ))
+        restored = DynamismJournal.from_bytes(journal.to_bytes())
+        assert [e.seq for e in restored.entries.values()] == [0, 1, 2, 3]
+        for fp, e in journal.entries.items():
+            r = restored.entries[fp]
+            assert (r.status, r.slice_index) == (e.status, e.slice_index)
+            assert r.log.fingerprint() == fp  # payload round-trips bit-exact
+        assert restored.compact(before_slice=2) == 2
+        assert [e.slice_index for e in restored.entries.values()] == [2, 3]
+
+
+# ===========================================================================
+# Crash recovery (host path)
+# ===========================================================================
+class TestCrashRecovery:
+    def test_recovered_run_bit_exact_vs_uninterrupted(self):
+        """Acceptance criterion at test scale: pre-commit crash, post-commit
+        crash, and a maintenance timeout; after snapshot/restore + journal
+        replay, all four traffic counters match the uninterrupted baseline
+        on every slice."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        make = _runtime_factory(g)
+        ops = generate_ops(g, n_ops=120, seed=3)
+        kw = dict(maintain_every=2, insert_rate=0.3)
+
+        base = {}
+        ref = make().run(ops, 6, 0.05, on_slice=lambda i, r: base.__setitem__(i, r), **kw)
+
+        plan = (FaultPlan()
+                .crash(1, site="apply:pre_commit")
+                .crash(4, site="apply:post_commit")
+                .timeout_maintenance(3, times=1))
+        got = {}
+        out, stats = run_with_recovery(
+            make, g, ops, 6, 0.05,
+            fault_plan=plan, journal=DynamismJournal(),
+            retry_policy=RetryPolicy(sleep=lambda s: None),
+            snapshot_every=2,
+            on_slice=lambda i, r: got.__setitem__(i, r),
+            **kw,
+        )
+        assert stats.recoveries == 2
+        assert stats.journal_rolled_back >= 1   # the pre-commit crash
+        assert stats.journal_replayed >= 1      # the post-commit crash
+        for i in range(6):
+            _assert_results_equal(base[i], got[i], f"slice {i}")
+        np.testing.assert_array_equal(ref.parts, out.parts)
+        assert ref.records == out.records
+        _assert_results_equal(ref.final, out.final, "final")
+
+    def test_recovery_budget_exhaustion_reraises(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        make = _runtime_factory(g)
+        ops = generate_ops(g, n_ops=60, seed=3)
+        plan = FaultPlan().crash(0).crash(1)
+        with pytest.raises(SimulatedCrash):
+            run_with_recovery(
+                make, g, ops, 3, 0.05, fault_plan=plan, max_recoveries=1,
+            )
+
+
+# ===========================================================================
+# Chaos soak (ISSUE 6 satellite): ≥50 slices, mixed move/insert, faults
+# ===========================================================================
+class TestChaosSoak:
+    def test_soak_bit_exact_and_memory_bounded(self):
+        from repro.launch.mesh import make_replay_mesh
+
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        mesh = make_replay_mesh()  # 1-shard on the tier-1 single-device CPU
+        make = _runtime_factory(g, mesh=mesh)
+        ops = generate_ops(g, n_ops=80, seed=5)
+        n_slices = 50
+        # Mixed dynamism: every 10th-ish slice grows vertices, the rest
+        # are pure moves (deterministic in i, so re-runs regenerate it).
+        rate = lambda i: 0.5 if i % 10 == 3 else 0.0
+        kw = dict(maintain_every=5, amount=0.02)
+
+        base = {}
+        ref = make()
+        ref.begin(ops)
+        for i in range(n_slices):
+            _, r = ref.run_slice(i, ops, kw["amount"],
+                                 maintain_every=kw["maintain_every"],
+                                 insert_rate=rate(i))
+            base[i] = r
+        ref_result = ref.result()
+
+        plan = (FaultPlan()
+                .crash(13, site="apply:pre_commit")     # structural slice
+                .crash(23, site="apply:post_commit")    # structural slice
+                .crash(37, site="replay")
+                .fail_shard(17, shard=0, slices=3)
+                .fail_shard(41, shard=0)
+                .timeout_maintenance(29, times=2))
+        journal = DynamismJournal()
+        got = {}
+        out, stats = run_with_recovery(
+            make, g, ops, n_slices, kw["amount"],
+            maintain_every=kw["maintain_every"], insert_rate=rate,
+            fault_plan=plan, journal=journal,
+            retry_policy=RetryPolicy(sleep=lambda s: None),
+            snapshot_every=8,
+            on_slice=lambda i, r: got.__setitem__(i, r),
+        )
+        assert stats.recoveries == 3
+        assert stats.journal_rolled_back >= 1
+        assert stats.journal_replayed >= 5
+        for i in range(n_slices):
+            _assert_results_equal(base[i], got[i], f"slice {i}")
+        np.testing.assert_array_equal(ref_result.parts, out.parts)
+        assert ref_result.records == out.records
+        # Device memory stays bounded: the shared ops log holds resident
+        # replay state for at most the current + one migrating graph, and
+        # the journal compacts entries subsumed by snapshots.
+        assert len(ops.__dict__.get("_resident_replay", {})) <= 2
+        assert stats.journal_compacted > 0
+        assert len(journal.entries) <= 2 * 8 + 2  # ~window since last snapshot

@@ -123,7 +123,8 @@ class TestServiceStateBugfixes:
             )
             assert infos[i].global_traffic > 0  # pre-fix: always 0
         total_g = sum(i.global_traffic for i in infos)
-        assert 0 <= res.global_ - total_g < 4  # exact up to floor rounding
+        # Largest-remainder apportionment (ISSUE 6): exact, not floor-lossy.
+        assert total_g == int(res.global_)
         cv = svc.logger.load_balance_cv()["traffic"]
         assert cv == pytest.approx(
             metrics.coefficient_of_variation(res.per_partition)
