@@ -7,6 +7,13 @@
 #
 #   make test                tier-1 pytest suite (PYTEST_ARGS passes
 #                            extra flags, e.g. --junitxml=... in CI)
+#   make lint                repro-lint static invariant analysis
+#                            (src/repro/analysis): determinism, host-sync,
+#                            counter-dtype, and fault-site-coverage AST
+#                            rules plus the empirical recompile sentinel
+#                            (20x5% growth schedule). Fails only on
+#                            findings not in analysis/baseline.json;
+#                            writes lint-report.{json,txt} for CI upload.
 #   make traffic-smoke       batched engine smoke (exactness + rate)
 #   make traffic-smoke-dist  sharded replay smoke, 2-shard CPU mesh
 #   make dynamic-smoke-dist  dynamic-experiment smoke, 8-shard CPU mesh
@@ -30,7 +37,7 @@
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
 #                            (add WRITE=--write-baseline to any full bench
 #                            to refresh benchmarks/BENCH_traffic.json)
-#   make check               test + traffic-smoke + traffic-smoke-dist
+#   make check               test + lint + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
 #                            + insert-smoke-dist + fault-smoke
 
@@ -38,12 +45,15 @@ PY := PYTHONPATH=src python
 WRITE :=
 PYTEST_ARGS :=
 
-.PHONY: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
+.PHONY: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
 	dynamic-resident-smoke insert-smoke-dist fault-smoke traffic-bench \
 	traffic-bench-dist dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+lint:
+	$(PY) -m repro.analysis --json lint-report.json --report lint-report.txt
 
 traffic-smoke:
 	$(PY) -m benchmarks.kernel_bench --traffic-smoke
@@ -79,5 +89,5 @@ dynamic-bench-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
-check: test traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
+check: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
 	dynamic-resident-smoke insert-smoke-dist fault-smoke

@@ -1,0 +1,60 @@
+"""repro-lint: repo-specific static invariant analysis (ISSUE 7).
+
+The repo's headline claims — bit-exact recovery, the paper's §6.4 "1%
+maintenance cost" result, the planned zero-recompile delta overlay —
+rest on structural invariants nothing used to check mechanically. This
+package makes them machine-checked:
+
+**AST rule families** (see each module's docstring for the rationale):
+
+* ``determinism/*``  (:mod:`~repro.analysis.determinism`) — no
+  wall-clock reads, unseeded/global RNG, ``id()``-keyed caches, or
+  hash-order-dependent serialization in fingerprint/snapshot paths.
+* ``host-sync/*``    (:mod:`~repro.analysis.hostsync`) — no
+  ``.item()`` / host casts / ``np.asarray`` on traced values inside
+  regions traced by ``jax.jit`` / ``shard_map`` / ``lax`` combinators.
+* ``counter-dtype/*`` (:mod:`~repro.analysis.counterdtype`) — int32
+  device counter folds must route through the
+  ``distributed/counters.py`` int64 hand-off.
+* ``fault-sites/*``  (:mod:`~repro.analysis.faultsites`, repo scope) —
+  every site fired via ``FaultPlan.fire`` must exist in
+  ``core.fault.FAULT_SITES`` and be exercised by a recovery test.
+
+**Recompile sentinel** (:mod:`~repro.analysis.recompile`) — drives a
+real growth schedule with ``jax_log_compiles`` on and reports which
+closures retrace per slice and why (``shape-change`` /
+``identity-rehash`` / ``new-closure``) — the measurement tool for the
+ROADMAP "zero recompiles after slice 1" item.
+
+**Workflow**: ``make lint`` (→ ``python -m repro.analysis``) fails only
+on findings *not* in ``baseline.json`` (deferred findings stay listed in
+every report, so debt is visible); ``--write-baseline`` refreshes the
+baseline after a deliberate deferral. Suppress single lines with
+``# repro-lint: disable=<rule>``, whole files via ``FILE_CONFIG``.
+Adding a rule = write a generator taking a :class:`FileContext` (or
+:class:`RepoContext`), decorate with :func:`repro.analysis.framework.rule`,
+import the module here, and add violating+clean fixtures to
+``tests/test_analysis.py`` (ROADMAP "Machine-checked invariants" has the
+checklist).
+"""
+
+from repro.analysis.framework import (  # noqa: F401
+    FILE_CONFIG,
+    LINT_ROOTS,
+    RULES,
+    FileContext,
+    Finding,
+    RepoContext,
+    iter_source_files,
+    lint_file,
+    load_baseline,
+    run_lint,
+    split_by_baseline,
+    write_baseline,
+)
+
+# Importing the rule modules registers their rules.
+from repro.analysis import counterdtype  # noqa: E402,F401
+from repro.analysis import determinism  # noqa: E402,F401
+from repro.analysis import faultsites  # noqa: E402,F401
+from repro.analysis import hostsync  # noqa: E402,F401

@@ -30,8 +30,22 @@ fault-smoke gate (``make fault-smoke``) relies on this to assert that a
 crashed-and-recovered dynamic run is **bit-exact** vs the uninterrupted
 baseline on all four traffic counters.
 
-Crash sites fired by the service (see
-:meth:`~repro.core.framework.PartitionedGraphService.apply_dynamism`):
+**Fault-site registry contract.** :data:`FAULT_SITES` is the
+machine-readable registry of every injection site; the descriptions
+below double as its values. The contract, enforced by ``make lint``
+(``fault-sites/*`` rules in :mod:`repro.analysis.faultsites`):
+
+1. every site string passed to :meth:`FaultPlan.fire` in ``src/`` must
+   be registered here (``fire``/``crash``/schedule builders raise
+   ``ValueError`` on unknown sites, so a typo cannot silently no-op);
+2. every registered site must actually be fired somewhere under
+   ``src/repro`` (no dead registry entries);
+3. every fired site must be exercised by a crash/timeout schedule in
+   ``tests/test_recovery.py`` — an untested failure mode is a lint
+   error, not a TODO.
+
+Adding a site = add the registry entry, fire it, and add a recovery
+test that schedules a fault at it; remove in reverse order.
 
 ====================== ====================================================
 ``apply:pre_validate`` after the journal intent is written, before any
@@ -55,6 +69,7 @@ import time
 from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set
 
 __all__ = [
+    "FAULT_SITES",
     "SimulatedFault",
     "SimulatedCrash",
     "ShardFailure",
@@ -66,6 +81,40 @@ __all__ = [
     "FaultPlan",
     "RetryPolicy",
 ]
+
+
+#: Registry of every legal injection site (see the module docstring for
+#: the register → fire → test contract). Keys are the site strings the
+#: service passes to :meth:`FaultPlan.fire`; values document where in
+#: the cycle the site sits and what recovery must guarantee there.
+FAULT_SITES: Dict[str, str] = {
+    "apply:pre_validate": (
+        "apply_dynamism, after the journal intent is written and before "
+        "validation — entry stays pending, recovery rolls it back"
+    ),
+    "apply:pre_commit": (
+        "apply_dynamism, after validation and before any state mutates — "
+        "entry pending, rolled back; service state unchanged"
+    ),
+    "apply:post_commit": (
+        "apply_dynamism, after every mutation and the journal commit mark "
+        "— entry committed, recovery re-applies it from the journal"
+    ),
+    "maintain": (
+        "start of a maintenance attempt — timeout events fire here before "
+        "the deterministic DiDiC pass, so a retry is bit-identical"
+    ),
+    "replay": "start of an evaluation-log replay",
+}
+
+
+def _check_site(site: str) -> str:
+    if site not in FAULT_SITES:
+        raise ValueError(
+            f"unknown fault site {site!r}; registered sites: "
+            f"{sorted(FAULT_SITES)} (see core.fault.FAULT_SITES)"
+        )
+    return site
 
 
 class SimulatedFault(RuntimeError):
@@ -179,7 +228,7 @@ class FaultPlan:
 
     # -- schedule builders (chainable) --------------------------------------
     def crash(self, at_slice: int, site: str = "apply:pre_commit") -> "FaultPlan":
-        self.events.append(FaultEvent("crash", int(at_slice), site=site))
+        self.events.append(FaultEvent("crash", int(at_slice), site=_check_site(site)))
         return self
 
     def fail_shard(self, at_slice: int, shard: int, slices: int = 1) -> "FaultPlan":
@@ -212,6 +261,7 @@ class FaultPlan:
     def fire(self, site: str) -> None:
         """Raise whatever the plan schedules for (current slice, site)."""
         s = self._slice
+        _check_site(site)
         for i, ev in enumerate(self.events):
             if ev.slice_index != s:
                 continue

@@ -129,7 +129,7 @@ def graph_fingerprint(graph: Graph) -> str:
 
 def _payload_checksum(meta: Dict, arrays: Dict[str, np.ndarray]) -> str:
     """sha1 over the canonical (meta, arrays) payload, checksum excluded."""
-    clean = {k: v for k, v in meta.items() if k != "checksum"}
+    clean = {k: v for k, v in sorted(meta.items()) if k != "checksum"}
     h = hashlib.sha1()
     h.update(json.dumps(clean, sort_keys=True).encode())
     for name in sorted(arrays):
@@ -247,7 +247,9 @@ class ServiceSnapshot:
                  for i in svc.logger.infos], dtype=np.int64),
         }
         attr_delta_keys = []
-        for key, old in base_graph.node_attrs.items():
+        # sorted: the npz member order is part of the serialized bytes, so
+        # iteration must be canonical, not dict-insertion order
+        for key, old in sorted(base_graph.node_attrs.items()):
             if old.shape[0] != base_graph.n_nodes:
                 continue  # not per-node metadata; carried as-is by growth
             attr_delta_keys.append(key)
@@ -283,8 +285,10 @@ class ServiceSnapshot:
     def to_bytes(self) -> bytes:
         buf = io.BytesIO()
         payload = dict(self.arrays)
+        # sort_keys: two snapshots of identical state must serialize to
+        # identical bytes regardless of meta-dict insertion order
         payload["__meta__"] = np.frombuffer(
-            json.dumps(self.meta).encode(), dtype=np.uint8
+            json.dumps(self.meta, sort_keys=True).encode(), dtype=np.uint8
         )
         np.savez_compressed(buf, **payload)
         return buf.getvalue()
@@ -490,13 +494,17 @@ class DynamismJournal:
 
     # -- serialization -------------------------------------------------------
     def to_bytes(self) -> bytes:
+        # Serialize in seq order (the journal's semantic order), not dict
+        # insertion order, and dump meta with sort_keys — identical journal
+        # contents must produce identical bytes however they were assembled.
+        ordered = sorted(self.entries.items(), key=lambda kv: kv[1].seq)
         meta: Dict = {
             "next_seq": self._next_seq,
             "current_slice": self._current_slice,
-            "order": list(self.entries),
+            "order": [fp for fp, _ in ordered],
         }
         arrays: Dict[str, np.ndarray] = {}
-        for i, (fp, e) in enumerate(self.entries.items()):
+        for i, (fp, e) in enumerate(ordered):
             meta[f"entry{i}"] = {
                 "seq": e.seq, "fingerprint": fp, "status": e.status,
                 "slice_index": e.slice_index,
@@ -506,7 +514,7 @@ class DynamismJournal:
         buf = io.BytesIO()
         payload = dict(arrays)
         payload["__meta__"] = np.frombuffer(
-            json.dumps(meta).encode(), dtype=np.uint8
+            json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8
         )
         np.savez_compressed(buf, **payload)
         return buf.getvalue()

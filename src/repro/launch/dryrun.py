@@ -130,11 +130,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True) -> di
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = get(arch)
-    t0 = time.time()
+    t0 = time.perf_counter()
     spec = cfg.dryrun(shape, mesh)
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     mem, cost, coll = _compile_spec(spec, mesh)
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
     corrected = None
     if cfg.probe is not None:
         corrected = _probe_correct(cfg, shape, mesh, cost, coll)

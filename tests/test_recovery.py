@@ -151,6 +151,21 @@ class TestFaultPrimitives:
         assert plan.failed_shards(4) == frozenset({1})
         assert plan.failed_shards(5) == frozenset()
 
+    def test_unknown_fault_site_rejected(self):
+        """FAULT_SITES registry contract (core/fault.py): a typo'd site
+        raises at schedule-build/fire time instead of silently never
+        firing."""
+        from repro.core.fault import FAULT_SITES
+
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan().crash(0, site="apply:prevalidate")
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan().fire("bogus-site")
+        assert set(FAULT_SITES) == {
+            "apply:pre_validate", "apply:pre_commit", "apply:post_commit",
+            "maintain", "replay",
+        }
+
     def test_retry_policy_backoff_then_deadline(self):
         sleeps = []
         p = RetryPolicy(max_retries=3, backoff_base_s=1.0, backoff_factor=2.0,
@@ -450,6 +465,39 @@ class TestCrashRecovery:
         np.testing.assert_array_equal(ref.parts, out.parts)
         assert ref.records == out.records
         _assert_results_equal(ref.final, out.final, "final")
+
+    def test_pre_validate_crash_rolls_back_and_recovers(self):
+        """repro-lint ``fault-sites/untested`` regression: the service
+        fires 'apply:pre_validate' (journal intent written, nothing
+        validated or mutated yet) but no recovery test exercised it.
+        A crash there must leave the entry pending with zero mutation,
+        and the recovered run must stay bit-exact."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        make = _runtime_factory(g)
+        ops = generate_ops(g, n_ops=60, seed=3)
+        kw = dict(maintain_every=2, insert_rate=0.4)
+
+        base = {}
+        ref = make().run(ops, 4, 0.05,
+                         on_slice=lambda i, r: base.__setitem__(i, r), **kw)
+
+        plan = FaultPlan().crash(1, site="apply:pre_validate")
+        journal = DynamismJournal()
+        got = {}
+        out, stats = run_with_recovery(
+            make, g, ops, 4, 0.05,
+            fault_plan=plan, journal=journal,
+            retry_policy=RetryPolicy(sleep=lambda s: None),
+            snapshot_every=2,
+            on_slice=lambda i, r: got.__setitem__(i, r),
+            **kw,
+        )
+        assert stats.recoveries == 1
+        assert stats.journal_rolled_back >= 1  # intent was pending, not applied
+        for i in range(4):
+            _assert_results_equal(base[i], got[i], f"slice {i}")
+        np.testing.assert_array_equal(ref.parts, out.parts)
+        assert ref.records == out.records
 
     def test_recovery_budget_exhaustion_reraises(self):
         g = datasets.load("filesystem", scale=0.001, seed=1)
