@@ -32,6 +32,13 @@
 #                            crashed dynamic run recovered from snapshot
 #                            + write-ahead journal, bit-exact vs the
 #                            uninterrupted baseline on all four counters
+#   make grow-steady-smoke   zero-recompile growth gate, 8-shard CPU mesh:
+#                            the sentinel's 20x5% vertex-growth schedule
+#                            with jax_log_compiles captured — zero XLA
+#                            compiles after slice 1 (delta-overlay store)
+#                            and resident == cold bit-equality per slice,
+#                            both insert policies (WRITE=--write-baseline
+#                            records dynamic.growth_steady numbers)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
@@ -40,14 +47,15 @@
 #   make check               test + lint + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
 #                            + insert-smoke-dist + fault-smoke
+#                            + grow-steady-smoke
 
 PY := PYTHONPATH=src python
 WRITE :=
 PYTEST_ARGS :=
 
 .PHONY: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke insert-smoke-dist fault-smoke traffic-bench \
-	traffic-bench-dist dynamic-bench-dist check
+	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke \
+	traffic-bench traffic-bench-dist dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -78,6 +86,10 @@ fault-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --fault-smoke
 
+grow-steady-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --grow-steady-smoke $(WRITE)
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -90,4 +102,4 @@ dynamic-bench-dist:
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
 check: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke insert-smoke-dist fault-smoke
+	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke

@@ -20,6 +20,10 @@ Usage:
   python -m benchmarks.kernel_bench --insert-smoke  # vertex-growth Insert
       workload: 20x5% schedule with new-vertex inserts, resident vs cold
       bit-equality under both policies + structural slice round-trip
+  python -m benchmarks.kernel_bench --grow-steady-smoke  # zero-recompile
+      growth gate: the sentinel's 20x5% schedule with jax_log_compiles
+      captured — zero XLA compiles after slice 1 (delta-overlay store)
+      and resident == cold bit-equality per slice, both insert policies
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
@@ -500,9 +504,10 @@ def insert_smoke(scale: Optional[float] = None) -> List[str]:
     from repro.graphs import datasets
     from repro.launch.mesh import make_replay_mesh
 
-    # Default below the other smokes' 0.004: every growth slice rebuilds
-    # the engines/replayer on the grown graph, so compile cost scales with
-    # the slice count, and 20 slices × 2 policies is the schedule here.
+    # Default below the other smokes' 0.004: the delta-overlay store keeps
+    # compiled shapes stable across growth, but compaction overflows still
+    # retrace at the new capacity, and 20 slices × 2 policies is the
+    # schedule here.
     scale = 0.002 if scale is None else scale
     mesh = make_replay_mesh()
     shards = len(mesh.devices.flat)
@@ -602,6 +607,105 @@ def insert_smoke(scale: Optional[float] = None) -> List[str]:
         f"20x5% slices of one structural log (exact)"
     )
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Zero-recompile growth: steady-state smoke (ISSUE 8 tentpole)
+# ---------------------------------------------------------------------------
+def grow_steady_smoke(scale: Optional[float] = None, slices: int = 20):
+    """Zero-recompile growth gate on a mesh over every visible device (the
+    Makefile target forces 8 CPU devices).
+
+    Runs the recompile sentinel's 20×5 % vertex-growth schedule through
+    the service runtime with ``jax_log_compiles`` captured, under BOTH
+    sequential insert policies. Two gates, each fatal:
+
+    * **steady state** — XLA compiles *nothing* after slice 1: all
+      tracing lands in warm-up (the ``begin`` replay plus slice 0, where
+      ``prepare_growth`` attaches the delta-overlay store and traces the
+      capacity-shaped programs);
+    * **parity** — every slice's resident replay on the grown graph is
+      bit-equal on all four counters to a forced cold solve.
+
+    Returns ``(rows, update)`` where ``update`` carries the measured
+    steady-state compile cost for the ``dynamic`` section of
+    BENCH_traffic.json (``--write-baseline`` merges it).
+    """
+    from repro.analysis.recompile import capture_compiles, classify
+    from repro.core import partitioners
+    from repro.core.didic import DidicConfig
+    from repro.core.dynamic_runtime import DynamicExperimentRuntime
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.traffic import generate_ops
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    scale = 0.002 if scale is None else scale
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+    rows: List[str] = []
+    update: Dict[str, Dict] = {}
+
+    for method in ("fewest_vertices", "least_traffic"):
+        g = datasets.load("filesystem", scale=scale, seed=1)
+        svc = PartitionedGraphService(
+            g, 4, didic=DidicConfig(k=4, iterations=4), mesh=mesh,
+            maintenance="shared",
+        )
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        ops = generate_ops(g, n_ops=48, seed=3)
+        rt = DynamicExperimentRuntime(svc, insert_method=method, seed=0)
+        mismatches, per_slice = [], []
+        with capture_compiles() as cap:
+            cap.slice_label = "warmup"
+            rt.begin(ops)
+            t_all = time.perf_counter()
+            for i in range(slices):
+                cap.slice_label = f"slice{i}"
+                n0 = len(cap.events)
+                t0 = time.perf_counter()
+                _, r = rt.run_slice(i, ops, 0.05, maintain_every=6,
+                                    insert_rate=0.5)
+                cold = replay_sharded(svc.graph, ops, mesh, svc.parts, 4,
+                                      resident=False)
+                for f in fields:
+                    if not np.array_equal(getattr(r, f), getattr(cold, f)):
+                        mismatches.append((i, f))
+                per_slice.append({"compiles": len(cap.events) - n0,
+                                  "seconds": time.perf_counter() - t0})
+            wall = time.perf_counter() - t_all
+        if mismatches:
+            raise AssertionError(
+                f"{method}: resident != cold on {mismatches[:4]} — smoke void"
+            )
+        after_warmup = sum(s["compiles"] for s in per_slice[1:])
+        if after_warmup:
+            noisy = [r.to_json() for r in classify(cap.events)]
+            raise AssertionError(
+                f"{method}: {after_warmup} XLA compiles after slice 1 — "
+                f"growth must be steady-state: {noisy[:4]}"
+            )
+        steady_s = [s["seconds"] for s in per_slice[1:]]
+        update[method] = {
+            "slices": slices, "amount": 0.05, "insert_rate": 0.5,
+            "scale": scale, "shards": shards,
+            "warmup_compiles": len(cap.events) - after_warmup,
+            "compiles_after_warmup": 0,
+            "compile_s_per_slice": 0.0,
+            "growth_wall_s": round(wall, 2),
+            "steady_slice_s": round(float(np.mean(steady_s)), 3),
+        }
+        grown = svc.graph.n_nodes - g.n_nodes
+        rows.append(
+            f"grow/{method}/compiles_after_slice1,0,"
+            f"{slices}x5% insert_rate=0.5 shards={shards} grew {grown} "
+            f"vertices in {wall:.1f}s, steady slice "
+            f"{np.mean(steady_s) * 1e3:.0f}ms (resident == cold bit-exact "
+            "every slice)"
+        )
+    return rows, update
 
 
 def fault_smoke(scale: Optional[float] = None) -> List[str]:
@@ -749,6 +853,11 @@ def main() -> None:
                     help="fault-tolerance smoke: degraded-shard replay "
                          "bit-equality + crash recovery (snapshot + "
                          "journal) bit-exact vs an uninterrupted run")
+    ap.add_argument("--grow-steady-smoke", action="store_true",
+                    help="zero-recompile growth gate: 20x5% vertex-growth "
+                         "schedule, zero XLA compiles after slice 1 and "
+                         "resident == cold bit-equality per slice, both "
+                         "insert policies")
     # None = per-mode default (0.004 everywhere except the insert smoke,
     # which pins 0.002 — see insert_smoke); an explicit value wins always.
     ap.add_argument("--scale", type=float, default=None)
@@ -797,6 +906,22 @@ def main() -> None:
     elif args.fault_smoke:
         for row in fault_smoke(scale=args.scale):
             print(row)
+    elif args.grow_steady_smoke:
+        rows, update = grow_steady_smoke(scale=args.scale)
+        for row in rows:
+            print(row)
+        if args.write_baseline:
+            # Merge under the "dynamic" section next to the pre-overlay
+            # numbers so before/after stays one diff.
+            try:
+                with open(baseline_path) as f:
+                    dyn = json.load(f).get("dynamic", {})
+            except FileNotFoundError:
+                dyn = {}
+            # Merge per-policy results; keep the recorded pre-overlay
+            # numbers (and any sibling sections) intact.
+            dyn.setdefault("growth_steady", {}).update(update)
+            write_baseline({"dynamic": dyn})
     elif args.dynamic_resident_smoke:
         for row in dynamic_resident_smoke(scale=scale):
             print(row)

@@ -1,7 +1,7 @@
 """repro-lint: repo-specific static invariant analysis (ISSUE 7).
 
 The repo's headline claims — bit-exact recovery, the paper's §6.4 "1%
-maintenance cost" result, the planned zero-recompile delta overlay —
+maintenance cost" result, the delta overlay's zero-recompile growth —
 rest on structural invariants nothing used to check mechanically. This
 package makes them machine-checked:
 
@@ -23,8 +23,9 @@ package makes them machine-checked:
 **Recompile sentinel** (:mod:`~repro.analysis.recompile`) — drives a
 real growth schedule with ``jax_log_compiles`` on and reports which
 closures retrace per slice and why (``shape-change`` /
-``identity-rehash`` / ``new-closure``) — the measurement tool for the
-ROADMAP "zero recompiles after slice 1" item.
+``identity-rehash`` / ``new-closure``). Runs in steady-state mode:
+the delta overlay pads shapes to capacity, so any post-warm-up
+retrace is a lint failure (no baseline entries), not tracked debt.
 
 **Workflow**: ``make lint`` (→ ``python -m repro.analysis``) fails only
 on findings *not* in ``baseline.json`` (deferred findings stay listed in

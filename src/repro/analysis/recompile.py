@@ -1,14 +1,18 @@
-"""Recompile sentinel: measure which closures retrace across growth slices.
+"""Recompile sentinel: enforce zero closure retraces across growth slices.
 
-The ROADMAP's delta-overlay item promises "zero recompiles after
-slice 1" for a 20×5% vertex-growth schedule; today every grown graph
-rebuilds its jit closures (~3.5 s/slice at smoke scale). This sentinel
-is the measurement tool for that work: it drives a real (tiny) growth
-schedule through :class:`~repro.core.dynamic_runtime.DynamicExperimentRuntime`
+The delta-overlay store (:class:`repro.graphs.structure.GraphStore`)
+capacity-pads every growth-facing device layout, so a 20×5%
+vertex-growth schedule compiles everything once during warm-up (the
+``begin`` replay plus slice 0, where ``prepare_growth`` attaches the
+store and traces the capacity-shaped programs) and then runs
+**steady-state: zero XLA compilations from slice 1 on**. This sentinel
+is the empirical gate for that invariant: it drives a real (tiny)
+growth schedule through
+:class:`~repro.core.dynamic_runtime.DynamicExperimentRuntime`
 on a 1-shard replay mesh with ``jax_log_compiles`` enabled, records
 every XLA compilation (closure name + abstract argument shapes, as
 logged by jax's pjit path), and classifies each recompilation observed
-after the warm-up slice:
+after the warm-up slices:
 
 * ``shape-change`` — same closure name, different abstract shapes: the
   traced program legitimately depends on a dimension that grew (e.g.
@@ -26,10 +30,14 @@ after the warm-up slice:
 The sentinel is empirical, not simulated: it reports what the XLA
 dispatch layer actually compiled, so its findings (rule
 ``recompile/growth-retrace``) are exactly the retraces a production
-schedule would pay for. They are expected findings until the delta
-overlay lands and live in ``baseline.json``; the report (per-slice
-compile counts, wall time, and per-closure causes) is embedded in the
-JSON lint report so the cost stays tracked, not silent.
+schedule would pay for. Since the overlay landed these findings are
+**lint failures, not baseline notes** — ``baseline.json`` carries no
+growth-retrace entries, so any post-warm-up retrace fails ``make
+lint`` and must be fixed at the source (usually a closure keyed on
+graph identity instead of the store, or a shape that tracks the live
+extent instead of the capacity). The report (per-slice compile counts,
+wall time, and per-closure causes) stays embedded in the JSON lint
+report so steady-state is continuously re-measured, not assumed.
 """
 
 from __future__ import annotations

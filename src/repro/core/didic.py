@@ -240,6 +240,174 @@ def _make_step(spmm: Callable, degc: jax.Array, config: DidicConfig):
     return step
 
 
+# ===========================================================================
+# Capacity-overlay path (ISSUE 8): store-backed graphs run refine through a
+# module-level jitted step whose inputs — coefficient tables, diffusion
+# state, live extent — are all *arguments* padded to the store's capacity.
+# Nothing graph-owned is closed over, so one compiled program serves every
+# grown graph sharing a capacity: growth slices retrace nothing.
+# ===========================================================================
+_OVERLAY_STEP_CACHE: dict = {}
+
+
+def _overlay_tables(graph: Graph):
+    """Capacity-padded DiDiC coefficient tables for a store-backed graph.
+
+    Dead rows/edges are *inert by construction*: padded edges point at the
+    sentinel row ``n_cap`` with coefficient 0, dead rows have zero
+    coefficient degree, and the diffusion state carries exact zeros there
+    — so every SpMM fold leaves dead rows identically 0 and the live
+    prefix computes the same values at any capacity.
+    """
+    store = graph.store
+    s, r, ce, degc = _edge_coefficients(graph)
+    n_rows = store.n_cap + 1
+    e_pad = 2 * store.e_cap  # undirected symmetrization ≤ 2·e_cap edges
+    if s.shape[0] > e_pad:
+        raise ValueError(
+            f"graph has {s.shape[0]} symmetrized edges but the store caps "
+            f"the overlay at {e_pad}"
+        )
+    dead = np.int32(n_rows - 1)
+    s_p = np.full(e_pad, dead, dtype=np.int32)
+    r_p = np.full(e_pad, dead, dtype=np.int32)
+    ce_p = np.zeros(e_pad, dtype=np.float32)
+    dg_p = np.zeros(n_rows, dtype=np.float32)
+    s_p[: s.shape[0]] = s
+    r_p[: r.shape[0]] = r
+    ce_p[: ce.shape[0]] = ce
+    dg_p[: degc.shape[0]] = degc
+    return jnp.asarray(s_p), jnp.asarray(r_p), jnp.asarray(ce_p), jnp.asarray(dg_p)
+
+
+def _make_overlay_step(config: DidicConfig):
+    """Jitted overlay iteration with the graph passed as arguments.
+
+    Module-level cache keyed by config (the legacy step hangs off the
+    graph-owned spmm closure instead, which is exactly what forces a
+    retrace per grown graph). Reductions are masked to the live extent so
+    the live prefix sees the same *algorithm* as the legacy step — the
+    padded float sums reassociate, so values are close but not
+    bit-identical to the legacy path; both the host and device services
+    route store-backed maintenance through here, which keeps their
+    host-vs-device parity contract exact.
+    """
+    step = _OVERLAY_STEP_CACHE.get(config)
+    if step is not None:
+        return step
+    k = config.k
+
+    @jax.jit
+    def step(w, l, parts, beta, key, smooth_steps, s, r, ce, degc, live_n):
+        n_rows = w.shape[0]
+        live = jnp.arange(n_rows, dtype=jnp.int32) < live_n
+        livef = live.astype(w.dtype)
+
+        def spmm(x):
+            contrib = ce[:, None] * jnp.take(x, r, axis=0)
+            return jax.ops.segment_sum(contrib, s, num_segments=n_rows)
+
+        onehot = (
+            parts[:, None] == jnp.arange(k, dtype=parts.dtype)[None, :]
+        ).astype(w.dtype) * livef[:, None]
+        # Fresh per-member seed with the ε-floor (legacy fix #1), masked so
+        # dead rows carry exactly zero load through every diffusion fold.
+        l = (_INIT_LOAD * onehot + 0.01) * livef[:, None]
+        benefit = jnp.where(onehot > 0, _BENEFIT, 1.0).astype(w.dtype)
+
+        def secondary(l, _):
+            lb = l / benefit
+            return l - degc[:, None] * lb + spmm(lb), None
+
+        def primary(carry, _):
+            w, l = carry
+            l, _ = jax.lax.scan(secondary, l, None, length=config.secondary_steps)
+            w_new = w + l - degc[:, None] * w + spmm(w)
+            return (w_new, l), None
+
+        (w, l), _ = jax.lax.scan(primary, (w, l), None, length=config.primary_steps)
+        livef_n = live_n.astype(w.dtype)
+        # Column-common rescale over the *live* mean (dead rows sum 0).
+        w = w / jnp.maximum(w.sum() / (livef_n * k), 1e-6)
+
+        safe_deg = jnp.maximum(degc, 1e-6)
+
+        def smooth_body(_, x):
+            return 0.5 * x + 0.5 * spmm(x) / safe_deg[:, None]
+
+        smoothed = jax.lax.fori_loop(0, smooth_steps, smooth_body, w)
+
+        tgt = livef_n / k
+
+        def bal(_, beta):
+            p = jnp.argmax(smoothed * beta[None, :], axis=1)
+            sizes = jnp.bincount(
+                jnp.where(live, p, k), length=k + 1
+            )[:k].astype(w.dtype)
+            return jnp.clip(
+                beta * (tgt / jnp.maximum(sizes, 1.0)) ** config.balance_exp, 1e-3, 1e3
+            )
+
+        beta = jax.lax.fori_loop(0, config.balance_iters, bal, beta)
+        new_parts = jnp.argmax(smoothed * beta[None, :], axis=1).astype(jnp.int32)
+        commit = jax.random.bernoulli(key, config.commit_prob, (n_rows,))
+        parts = jnp.where(commit & live, new_parts, parts)
+        return w, l, parts, beta
+
+    _OVERLAY_STEP_CACHE[config] = step
+    return step
+
+
+def _overlay_refine(
+    graph: Graph,
+    parts: np.ndarray,
+    config: DidicConfig,
+    state: Optional[DidicState],
+    iterations: int,
+    seed: int,
+) -> Tuple[np.ndarray, DidicState]:
+    """Refine a store-backed graph through the capacity-overlay step.
+
+    Tables are cached on the store keyed by the graph's structural
+    extents, so growth re-pads host-side but never retraces; state
+    tensors are capacity-shaped (reseeded when the capacity changed,
+    e.g. across a compaction)."""
+    store = graph.store
+    extents = (graph.n_nodes, graph.n_edges)
+    ent = store.caches.get(("didic_tables",))
+    if ent is None or ent[0] != extents:
+        ent = (extents, _overlay_tables(graph))
+        store.caches[("didic_tables",)] = ent
+    s_j, r_j, ce_j, degc_j = ent[1]
+    n, n_rows = graph.n_nodes, store.n_cap + 1
+    parts_pad = np.zeros(n_rows, dtype=np.int32)
+    parts_pad[:n] = np.asarray(parts, dtype=np.int32)
+    parts_j = jnp.asarray(parts_pad)
+    if state is None or state.w.shape[0] != n_rows:
+        live = np.arange(n_rows) < n
+        onehot = (
+            parts_pad[:, None] == np.arange(config.k, dtype=np.int32)[None, :]
+        ) & live[:, None]
+        load = jnp.asarray(_INIT_LOAD * onehot.astype(np.float32))
+        state = DidicState(
+            w=load, l=load, parts=parts_j, beta=jnp.ones((config.k,), jnp.float32)
+        )
+    else:
+        state = DidicState(w=state.w, l=state.l, parts=parts_j, beta=state.beta)
+    step = _make_overlay_step(config)
+    schedule = _smooth_schedule(config, iterations, start_wide=True)
+    key = jax.random.PRNGKey(seed)
+    w, l, p, beta = state.w, state.l, state.parts, state.beta
+    live_n = jnp.int32(n)
+    for it in range(iterations):
+        key, sub = jax.random.split(key)
+        w, l, p, beta = step(
+            w, l, p, beta, sub, jnp.int32(schedule[it]),
+            s_j, r_j, ce_j, degc_j, live_n,
+        )
+    return np.asarray(p)[:n].copy(), DidicState(w=w, l=l, parts=p, beta=beta)
+
+
 def _init_state(n: int, k: int, parts0: jax.Array) -> DidicState:
     onehot = (parts0[:, None] == jnp.arange(k, dtype=parts0.dtype)[None, :]).astype(jnp.float32)
     load = _INIT_LOAD * onehot
@@ -316,8 +484,17 @@ def didic_refine(
     asynchrony exists to break synchronous oscillation across *many*
     iterations, but within the paper's one-iteration maintenance budget it
     only strands a random ~10 % of damaged vertices unrepaired.
+
+    Store-backed graphs (a :class:`~repro.graphs.structure.GraphStore`
+    attached) route through the capacity-overlay step instead: same
+    algorithm on capacity-padded state, compiled once per (config,
+    capacity) so maintenance after a growth slice retraces nothing. The
+    BSR-kernel path keeps the legacy per-graph packing (its block layout
+    is extent-shaped).
     """
     config = dataclasses.replace(config, commit_prob=1.0)
+    if graph.store is not None and not config.use_kernel:
+        return _overlay_refine(graph, parts, config, state, iterations, seed)
     parts_j = jnp.asarray(np.asarray(parts, dtype=np.int32))
     spmm, degc = make_spmm(graph, config)
     if state is None:

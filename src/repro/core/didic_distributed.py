@@ -66,7 +66,9 @@ def _distributed_coefficients(graph: Graph) -> np.ndarray:
 
 def _mesh_program(graph: Graph, mesh, data_axes: Tuple[str, ...],
                   bootstrap_parts: Optional[np.ndarray] = None):
-    """(layout, halo spmm, degc) for DiDiC on ``mesh`` — cached on the graph.
+    """(layout, halo spmm, degc) for DiDiC on ``mesh`` — cached on the
+    graph's store when it has one (keyed by mesh/axes + structural
+    extents), else on the graph object.
 
     The layout is placement, not partitioning: vertices stay on their
     bootstrap shard while their *logical* partition label diffuses, so one
@@ -80,11 +82,43 @@ def _mesh_program(graph: Graph, mesh, data_axes: Tuple[str, ...],
     for a in data_axes:
         n_shards *= mesh.shape[a]
 
+    # Store-backed graphs key the program on the store (which outlives any
+    # one grown graph object) tagged with the structural extents: a pure
+    # partition move reuses the program across graph objects, growth
+    # rebuilds it lazily. The halo layout itself is extent-shaped (block
+    # tables track n/edges), so a growth rebuild does retrace — the
+    # sharded maintenance mode trades that for mesh scalability and sits
+    # outside the steady-state sentinel bar (which runs "shared" mode).
+    store = graph.store
+    if store is not None and bootstrap_parts is None:
+        key = ("mesh_program", mesh, tuple(data_axes))
+        ent = store.caches.get(key)
+        extents = (graph.n_nodes, graph.n_edges)
+        if ent is not None and ent[0] == extents:
+            return ent[1]
+        out = _mesh_program_build(
+            graph, mesh, data_axes, n_shards, None,
+            build_halo_program, make_partitioned_spmm, build_layout,
+        )
+        store.caches[key] = (extents, out)
+        return out
+
     cache = graph.__dict__.setdefault("_didic_mesh_cache", {})
     key = (mesh, tuple(data_axes)) if bootstrap_parts is None else None
     if key is not None and key in cache:
         return cache[key]
 
+    out = _mesh_program_build(
+        graph, mesh, data_axes, n_shards, bootstrap_parts,
+        build_halo_program, make_partitioned_spmm, build_layout,
+    )
+    if key is not None:
+        cache[key] = out
+    return out
+
+
+def _mesh_program_build(graph, mesh, data_axes, n_shards, bootstrap_parts,
+                        build_halo_program, make_partitioned_spmm, build_layout):
     if bootstrap_parts is None:
         bootstrap_parts = partitioners.linear_partition(graph.n_nodes, n_shards)
     layout = build_layout(graph, bootstrap_parts, n_shards)
@@ -99,10 +133,7 @@ def _mesh_program(graph: Graph, mesh, data_axes: Tuple[str, ...],
     np.add.at(degc_host, s, ce)
     degc = jnp.asarray(layout.scatter_features(degc_host.astype(np.float32)))
 
-    out = (layout, spmm_halo, degc)
-    if key is not None:
-        cache[key] = out
-    return out
+    return (layout, spmm_halo, degc)
 
 
 def _sharded_state(layout, k: int, parts_padded: np.ndarray, mesh, data_axes):

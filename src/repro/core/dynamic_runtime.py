@@ -71,6 +71,33 @@ run. Its lifecycle splits three ways:
   (migrated onto the grown graph by
   :func:`repro.core.traffic_sharded.migrate_resident_states`).
   Pure partition moves dirty nothing.
+
+Zero-recompile growth (ISSUE 8 tentpole)
+----------------------------------------
+Vertex growth used to be the cycle's dominant cost — not compute, but
+recompilation: every ``with_vertices`` changed ``N`` and retraced the
+replay, scan, and maintenance closures (~1–3.5 s/slice). With a
+:class:`~repro.graphs.structure.GraphStore` attached (see
+:meth:`~repro.core.framework.PartitionedGraphService.prepare_growth`,
+called automatically on the first growing slice), every compiled shape is
+sized to the store's *capacity* instead of the current extents:
+
+* the dynamism scans here pad their unit buffers to the capacity-sized
+  slice (``pad_units`` in :func:`_unroll_blocks` — dead units ride the
+  existing tail mask, so targets are bit-identical at any pad);
+* the replay engines pad their gather tables to ``n_cap``/``e_cap`` with
+  an inert sentinel row and **adopt** grown graphs in place
+  (:meth:`repro.core.traffic_batched.BatchedTrafficEngine.adopt`), their
+  closures rekeyed by store rather than graph identity;
+* maintenance folds live-vertex masks into capacity-padded diffusion
+  state (:mod:`repro.core.didic`).
+
+Growth then reuses every compiled program until the delta region fills,
+at which point one amortized compaction re-sizes the capacity (an
+explicit ``compactions`` counter — the only post-warmup retrace allowed,
+and the sentinel schedule is provisioned to need none). The recompile
+sentinel (:mod:`repro.analysis.recompile`) asserts the steady state:
+zero retraces after slice 1 on the 20×5 % growth schedule.
 """
 
 from __future__ import annotations
@@ -132,7 +159,8 @@ def _split_digits(x64: np.ndarray):
 
 def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
                    extra: Tuple[np.ndarray, ...] = (),
-                   insert: Optional[np.ndarray] = None) -> np.ndarray:
+                   insert: Optional[np.ndarray] = None,
+                   pad_units: int = 0) -> np.ndarray:
     """Host-side block prep for the unrolled scans.
 
     Returns one packed int32 array ``[T/U, 5 + len(extra), U]`` — a
@@ -144,6 +172,14 @@ def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
     tail mask), ``is_insert`` (vertex-allocation units — no source to
     decrement, and their mover slot is the attachment anchor, not a moved
     vertex), then any ``extra`` per-unit rows (the least-traffic digits).
+
+    ``pad_units`` pins the padded unit count (rounded up to a whole
+    block): store-backed graphs pass the capacity-sized slice size so the
+    packed shape — and hence the scan's compiled program — is identical
+    for every slice between compactions, even as ``|V|`` (and with it the
+    live unit count) grows. Padded units ride the existing tail-mask
+    mechanism (``live=0``, ``prev_out=-1``), which leaves the carry
+    untouched, so the emitted targets are bit-identical at any pad.
     """
     u = _SCAN_UNROLL
     movers = np.asarray(movers, dtype=np.int64)
@@ -173,8 +209,8 @@ def _unroll_blocks(movers: np.ndarray, parts: np.ndarray,
         np.zeros(units, dtype=np.int64) if insert is None
         else insert.astype(np.int64),
     ) + tuple(extra)
-    pad = (-units) % u
-    packed = np.zeros((len(rows), units + pad), dtype=np.int32)
+    total = -(-max(units, int(pad_units)) // u) * u
+    packed = np.zeros((len(rows), total), dtype=np.int32)
     packed[2, units:] = -1  # padded prev_out must stay "none"
     for i, row in enumerate(rows):
         packed[i, :units] = row
@@ -279,6 +315,7 @@ def scan_dynamism_targets(
     k: int,
     vertex_traffic: Optional[np.ndarray] = None,
     insert_mask: Optional[np.ndarray] = None,
+    pad_units: int = 0,
 ) -> np.ndarray:
     """Device-scan targets for a mover sequence — bit-identical to the
     sequential host oracle in :func:`repro.core.dynamism.generate_dynamism`.
@@ -287,6 +324,10 @@ def scan_dynamism_targets(
     their slot in ``movers`` is the attachment anchor, the policy treats
     them as a pure addition to the chosen target (no source decrement, no
     traffic carried — a new vertex has none observed yet).
+
+    ``pad_units`` fixes the padded scan length (see :func:`_unroll_blocks`):
+    the generator passes the capacity-sized slice size for store-backed
+    graphs so growth never changes the compiled scan shape.
 
     ``least_traffic`` requires integer-valued, non-negative
     ``vertex_traffic`` with per-partition totals below 2⁵¹ (always true
@@ -303,7 +344,8 @@ def scan_dynamism_targets(
         counts0 = np.bincount(parts, minlength=k).astype(np.int32)
         targets = _fewest_vertices_scan(
             jnp.asarray(counts0),
-            jnp.asarray(_unroll_blocks(movers, parts, insert=insert_mask)),
+            jnp.asarray(_unroll_blocks(movers, parts, insert=insert_mask,
+                                       pad_units=pad_units)),
         )
         return np.asarray(targets, dtype=np.int32)[:units]
     if method != "least_traffic":
@@ -331,7 +373,7 @@ def scan_dynamism_targets(
     targets = _least_traffic_scan(
         jnp.asarray(tr_hi0), jnp.asarray(tr_lo0),
         jnp.asarray(_unroll_blocks(movers, parts, extra=(vt_hi, vt_lo),
-                                   insert=insert_mask)),
+                                   insert=insert_mask, pad_units=pad_units)),
     )
     return np.asarray(targets, dtype=np.int32)[:units]
 
@@ -432,6 +474,12 @@ class DynamicExperimentRuntime:
         svc = self.service
         if svc.fault_plan is not None:
             svc.fault_plan.begin_slice(i)
+        if insert_rate > 0.0 and svc.graph.store is None:
+            # First growth slice on a storeless graph: attach the
+            # capacity store and prewarm the overlay closures now, so the
+            # one-time traces land in this (warmup) slice rather than
+            # leaking into the steady state the sentinel audits.
+            svc.prepare_growth()
         if log is None:
             log = self.insert.allocate(
                 svc.parts, amount, vertex_traffic=self._result.per_vertex,

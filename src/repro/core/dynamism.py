@@ -380,9 +380,14 @@ def generate_dynamism(
     if engine == "device" and method != "random":
         from repro.core.dynamic_runtime import scan_dynamism_targets  # lazy: jax
 
+        # Store-backed graphs pin the padded scan length to the
+        # capacity-sized slice (units ≤ round(amount·n_cap) while n ≤ n_cap),
+        # so the compiled scan shape is stable across growth slices.
+        store = getattr(graph, "store", None) if graph is not None else None
+        pad_units = int(round(amount * store.n_cap)) if store is not None else 0
         targets = scan_dynamism_targets(
             parts, movers, method, k, vertex_traffic=vertex_traffic,
-            insert_mask=is_insert,
+            insert_mask=is_insert, pad_units=pad_units,
         )
         return DynamismLog(
             vertices=movers.astype(np.int64) if vertices is None else vertices,

@@ -53,6 +53,11 @@ test that schedules a fault at it; remove in reverse order.
                        rolled back at recovery)
 ``apply:pre_commit``   after validation, before any state mutates (entry
                        pending → rolled back; service state unchanged)
+``apply:compact``      a structural log is about to overflow the
+                       delta-overlay store — fired before the amortized
+                       compaction rebuild (entry pending → rolled back;
+                       recovery re-attaches an equivalent store and the
+                       re-run compacts identically)
 ``apply:post_commit``  after every mutation and the journal commit mark
                        (entry committed → recovery re-applies it from the
                        journal)
@@ -95,6 +100,12 @@ FAULT_SITES: Dict[str, str] = {
     "apply:pre_commit": (
         "apply_dynamism, after validation and before any state mutates — "
         "entry pending, rolled back; service state unchanged"
+    ),
+    "apply:compact": (
+        "apply_dynamism, when a structural log is about to overflow the "
+        "delta-overlay store — before the amortized compaction rebuild; "
+        "entry pending, rolled back, and the restored run re-compacts "
+        "identically because the snapshot carries the store geometry"
     ),
     "apply:post_commit": (
         "apply_dynamism, after every mutation and the journal commit mark "

@@ -679,6 +679,19 @@ class PartitionedGraphService:
             return
         old_graph = self.graph
         # -- validate (no mutation yet) ------------------------------------
+        # Structural growth runs on the delta-overlay store: attach one at
+        # default headroom on first growth (idempotent — attaching changes
+        # no graph content), and surface the imminent amortized rebuild as
+        # a crash site when this log overflows the delta region.
+        store = old_graph.ensure_store()
+        n_new_edges = (
+            0 if log.insert_senders is None
+            else int(np.asarray(log.insert_senders).shape[0])
+        )
+        if plan is not None and store.would_overflow(
+            old_graph, log.n_new_vertices, n_new_edges
+        ):
+            plan.fire("apply:compact")
         if log.n_new_vertices:
             if log.base_nodes is not None and log.base_nodes != old_graph.n_nodes:
                 raise ValueError(
@@ -711,6 +724,30 @@ class PartitionedGraphService:
             for ops in self._replayed_logs.values():
                 migrate_resident_states(ops, old_graph, self.graph, dirty)
         self.logger.observe_structure(self.graph, self.parts)
+
+    def prepare_growth(self) -> None:
+        """Arm the service for vertex growth (the delta-overlay layer).
+
+        Attaches a :class:`~repro.graphs.structure.GraphStore` at default
+        headroom and prewarms the capacity-shaped single-device
+        maintenance closure with a throwaway refine, so the one-time
+        traces land in the warmup slice instead of leaking into the
+        steady state the recompile sentinel audits. Idempotent, and cheap
+        after the first call. The traffic engines need no explicit
+        prewarm — their next replay replaces the extent-shaped trace with
+        the capacity-shaped one — but maintenance's first natural call
+        sits mid-schedule, which would otherwise count as a steady-state
+        retrace.
+        """
+        if self.graph.store is None:
+            self.graph.ensure_store()
+        if self.runtime.mesh is None:
+            # Discarded: only runs to trace the overlay DiDiC step and
+            # populate the store-cached coefficient tables.
+            didic_refine(
+                self.graph, self.parts, self.runtime.config,
+                state=None, iterations=1, seed=0,
+            )
 
     def _check_insert_admissible(self, log: DynamismLog) -> None:
         """Reject edge inserts lighter than the straight-line distance.

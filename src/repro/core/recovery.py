@@ -15,7 +15,10 @@ capture of *all* host-side service state:
 * the partition map and the **graph delta** over a pinned base graph
   (appended node-attr rows + appended edge triples; growth via
   ``Graph.with_vertices``/``with_edges`` is pure concatenation, so the
-  delta rebuilds the grown graph bit-exactly in one call),
+  delta rebuilds the grown graph bit-exactly in one call), plus the
+  delta-overlay store geometry (capacity, base/delta cursor, compaction
+  counter) so a restored run resumes inside the same capacity layout it
+  crashed in,
 * DiDiC diffusion state (``w``/``l``/``parts``/``beta``), the
   :class:`~repro.core.framework.RuntimeLogger` infos + health counters,
   the :class:`~repro.core.framework.MigrationScheduler` baseline and
@@ -216,6 +219,19 @@ class ServiceSnapshot:
             "base_nodes": int(base_graph.n_nodes),
             "base_edges": int(base_graph.n_edges),
             "base_fingerprint": graph_fingerprint(base_graph),
+            # Delta-overlay store geometry (ISSUE 8): capacity, the
+            # base/delta split cursor, and the compaction counter. The
+            # capacity feeds every padded shape (and through them the
+            # overlay DiDiC reductions), so a restored run must see the
+            # exact pre-crash geometry, not whatever a one-shot rebuild
+            # would re-derive.
+            "store": None if graph.store is None else {
+                "n_cap": int(graph.store.n_cap),
+                "e_cap": int(graph.store.e_cap),
+                "base_nodes": int(graph.store.base_nodes),
+                "base_edges": int(graph.store.base_edges),
+                "compactions": int(graph.store.compactions),
+            },
             "has_didic": svc.runtime.state is not None,
             "has_baseline": runtime._baseline is not None,
             "has_result": runtime._result is not None,
@@ -350,6 +366,28 @@ class ServiceSnapshot:
                 f"snapshot k={self.meta['k']} vs service k={svc.k}"
             )
         svc.graph = self.rebuild_graph(base_graph)
+        sm = self.meta.get("store")  # absent in pre-overlay snapshots
+        if sm is not None:
+            from repro.graphs.structure import GraphStore
+
+            st = svc.graph.store
+            if (st is None or st.n_cap != int(sm["n_cap"])
+                    or st.e_cap != int(sm["e_cap"])):
+                # The one-shot rebuild above can carry/compact a store at
+                # different extents than the incremental pre-crash run
+                # did; force the exact snapshot geometry so the restored
+                # trajectory's padded shapes (and the overlay DiDiC sums
+                # they shape) match the uninterrupted run bit-for-bit.
+                svc.graph.store = GraphStore(
+                    n_cap=int(sm["n_cap"]), e_cap=int(sm["e_cap"]),
+                    base_nodes=int(sm["base_nodes"]),
+                    base_edges=int(sm["base_edges"]),
+                    compactions=int(sm["compactions"]),
+                )
+            else:
+                st.base_nodes = int(sm["base_nodes"])
+                st.base_edges = int(sm["base_edges"])
+                st.compactions = int(sm["compactions"])
         svc.parts = self.arrays["parts"].copy()
         # Drop any resident replay state: it belongs to the pre-crash
         # graph objects. Lazy rebuild restores it on first replay.

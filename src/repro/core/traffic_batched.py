@@ -65,9 +65,14 @@ fusion would silently break equivalence), so the engines agree
 **bit-for-bit** on every counter.
 
 All jitted closures and packed layouts are cached on the graph object
-(lifetime-tied, as in :mod:`repro.core.didic`); per-log compilation
+(lifetime-tied, as in :mod:`repro.core.didic`) — or, for a growing graph
+backed by a delta-overlay :class:`~repro.graphs.structure.GraphStore`, on
+the store: device rows/edges are padded to the store capacity with an
+inert sentinel tail, graph tables are jit *arguments* rather than baked
+constants, and the engine adopts each grown graph by re-uploading buffers
+at the frozen shapes, so growth never retraces. Per-log compilation
 artifacts (ancestor levels, level histograms, difficulty order) are cached
-on the OpLog. Device counters are int32 (no x64 on the CPU container);
+on the OpLog, keyed by engine structure version. Device counters are int32 (no x64 on the CPU container);
 cross-chunk/host accumulation is int64 — a single op would need >2³¹
 traffic units to overflow, far beyond the paper's logs.
 
@@ -258,10 +263,8 @@ class BatchedTrafficEngine:
     ):
         from repro.core import traffic as _t  # late: traffic imports us lazily
 
-        self.graph = graph
         self.pattern = pattern
         self.max_expansions = resolve_max_expansions(max_expansions)
-        self.n_nodes = graph.n_nodes
         # Relaxation path: Pallas frontier kernel on TPU, unrolled XLA
         # gather on CPU; REPRO_FRONTIER_KERNEL=1/0 or the ctor arg
         # overrides. Both resolved once, here — never at trace time.
@@ -271,86 +274,178 @@ class BatchedTrafficEngine:
         self.use_kernel = bool(use_kernel)
         self.interpret = resolve_interpret()
 
-        if pattern == "filesystem":
-            s, r = _t._filtered_children_csr_edges(graph)
-            self.w = None
-            self.max_levels = int(graph.node_attrs["depth"].max()) + 2
-            self.kind = "bfs"
-        elif pattern == "twitter":
-            s, r = graph.senders, graph.receivers
-            self.w = None
-            self.max_levels = 2
+        if pattern in ("filesystem", "twitter"):
             self.kind = "bfs"
         elif pattern in ("gis_short", "gis_long"):
-            s, r, w = graph.undirected
-            self.w = np.asarray(w, dtype=np.float32)
             self.kind = "sssp"
         else:
             raise ValueError(f"unknown pattern {pattern!r}")
+
+        # Delta-overlay capacity: a store-backed graph gets device rows
+        # padded to ``n_cap`` plus one dead sentinel row (index ``n_cap``)
+        # and edge slots padded to ``e_cap`` with dead edges pointing at
+        # the sentinel, so every compiled shape is growth-invariant. A
+        # storeless graph keeps exact logical shapes (legacy behavior).
+        store = graph.store
+        self.store = store
+        self._n_rows = (store.n_cap + 1) if store is not None else graph.n_nodes
+        self._e_cap = store.e_cap if store is not None else None
+        self._struct_version = 0
+        self._needs_rebuild = False
+
+        if self.kind == "bfs":
+            self.chunk = chunk
+            # Frozen trace-time level count. Store engines reserve one
+            # extra level: filesystem growth attaches files under existing
+            # folders, so future depths stay <= max folder depth + 1 and
+            # the slack level (inert: zero histogram rows, saturated
+            # prefixes) keeps results bit-identical to an exact-level
+            # rebuild while the compiled sweep survives growth.
+            if pattern == "twitter":
+                self.max_levels = 2
+            else:
+                self.max_levels = int(graph.node_attrs["depth"].max()) + (
+                    3 if store is not None else 2
+                )
+            self._run_fn = jax.jit(self._bfs_linear)
+        else:
+            self.chunk = chunk or 128
+            self.delta_scale = delta_scale
+            self._full_layout = None
+            self._full_lonlat = None
+            self.nbr_cap = None  # frozen on first structure load below
+
+        self._load_structure(graph)
+        if self.kind == "sssp":
+            self._device_h_ok = self._check_device_h()
+
+    def _load_structure(self, graph: Graph) -> None:
+        """(Re)load host truth + capacity-padded device buffers from
+        ``graph``. Called at construction and by :meth:`adopt` after each
+        growth step — a pure host rebuild + H2D refresh, no retracing."""
+        from repro.core import traffic as _t
+
+        self.graph = graph
+        self.n_nodes = graph.n_nodes
+        if self.pattern == "filesystem":
+            s, r = _t._filtered_children_csr_edges(graph)
+            self.w = None
+        elif self.pattern == "twitter":
+            s, r = graph.senders, graph.receivers
+            self.w = None
+        else:
+            s, r, w = graph.undirected
+            self.w = np.asarray(w, dtype=np.float32)
 
         self.s = np.asarray(s, dtype=np.int64)
         self.r = np.asarray(r, dtype=np.int64)
         self.deg = np.bincount(self.s, minlength=self.n_nodes).astype(np.int32)
 
         if self.kind == "sssp":
-            self.chunk = chunk or 128
             self._lon = np.asarray(graph.node_attrs["lon"], dtype=np.float32)
             self._lat = np.asarray(graph.node_attrs["lat"], dtype=np.float32)
             mean_w = float(self.w.mean()) if self.w.size else 1.0
             self.mean_w = mean_w
-            self.delta_scale = delta_scale
             self.delta = (
                 np.float32(np.inf)
-                if delta_scale is None
-                else np.float32(max(mean_w * delta_scale, 1e-6))
+                if self.delta_scale is None
+                else np.float32(max(mean_w * self.delta_scale, 1e-6))
             )
-            pos_deg = self.deg[self.deg > 0]
-            self.nbr_cap = max(4, int(np.percentile(pos_deg, 90)) if pos_deg.size else 4)
+            if self.nbr_cap is None:
+                # Frozen: the cap only splits edges between the padded
+                # gather and the exact COO spill, so results never depend
+                # on it — refreshing it would only churn compiled shapes.
+                pos_deg = self.deg[self.deg > 0]
+                self.nbr_cap = max(
+                    4, int(np.percentile(pos_deg, 90)) if pos_deg.size else 4
+                )
             self._glob2loc = np.full(self.n_nodes, -1, dtype=np.int64)
             self._full_layout = None
             self._full_lonlat = None
-            self._device_h_ok = self._check_device_h()
         else:
-            self.chunk = chunk
-            self._s_j = jnp.asarray(self.s, dtype=jnp.int32)
-            self._r_j = jnp.asarray(self.r, dtype=jnp.int32)
-            self._deg_j = jnp.asarray(self.deg)
-            self._run_fn = jax.jit(self._bfs_linear)
+            if self._e_cap is not None:
+                if self.s.shape[0] > self._e_cap:
+                    raise ValueError("BFS edge set exceeds store edge capacity")
+                dead = np.int32(self._n_rows - 1)
+                s_pad = np.full(self._e_cap, dead, dtype=np.int32)
+                r_pad = np.full(self._e_cap, dead, dtype=np.int32)
+                s_pad[: self.s.shape[0]] = self.s
+                r_pad[: self.r.shape[0]] = self.r
+                self._s_j = jnp.asarray(s_pad)
+                self._r_j = jnp.asarray(r_pad)
+            else:
+                self._s_j = jnp.asarray(self.s, dtype=jnp.int32)
+                self._r_j = jnp.asarray(self.r, dtype=jnp.int32)
+            self._deg_j = jnp.asarray(self._pad_rows(self.deg))
+
+    def _pad_rows(self, vec: np.ndarray) -> np.ndarray:
+        """Zero-pad a logical per-vertex vector to the device row count."""
+        if self._n_rows == vec.shape[0]:
+            return vec
+        out = np.zeros((self._n_rows,) + vec.shape[1:], dtype=vec.dtype)
+        out[: vec.shape[0]] = vec
+        return out
+
+    def adopt(self, graph: Graph) -> None:
+        """Adopt a grown graph from the same store lineage in place.
+
+        Device buffers are re-uploaded at the frozen capacity shapes, so
+        every jitted closure compiled against this engine keeps its
+        trace. Sets ``_needs_rebuild`` (checked by :func:`get_engine`)
+        in the off-contract case where the grown graph no longer fits
+        the frozen trace parameters."""
+        if graph is self.graph:
+            return
+        if self.store is None or graph.store is not self.store:
+            raise ValueError("adopt requires a graph sharing this engine's store")
+        if self.kind == "bfs" and self.pattern == "filesystem":
+            required = int(graph.node_attrs["depth"].max()) + 2
+            if required > self.max_levels:
+                self._needs_rebuild = True
+        self._struct_version += 1
+        self._load_structure(graph)
 
     # =================================================== linear BFS patterns
-    def _spmv_down(self, x: jnp.ndarray) -> jnp.ndarray:
-        """(A x)(u) = Σ_{u→c} x(c) — pull child values up one level."""
-        return jnp.zeros(self.n_nodes, x.dtype).at[self._s_j].add(x[self._r_j])
+    def _spmv_down(self, x: jnp.ndarray, s_j, r_j) -> jnp.ndarray:
+        """(A x)(u) = Σ_{u→c} x(c) — pull child values up one level.
 
-    def _bfs_prefix_one(self, vec):
+        Dead (capacity-padding) edges have ``s = r = `` the sentinel row,
+        whose value is identically zero, so they add nothing anywhere."""
+        return jnp.zeros_like(x).at[s_j].add(x[r_j])
+
+    def _bfs_prefix_one(self, vec, s_j, r_j):
         """Level-prefix table ``[N, t+1]`` for one counter vector — the
         single-column form of :meth:`_bfs_prefix_table`. The sharded
         replayer uses it to keep the graph-pure deg column device-resident
-        and rebuild only the parts-dependent cross column per replay."""
+        and rebuild only the parts-dependent cross column per replay.
+
+        Graph tables are explicit arguments (not closed-over constants)
+        so a persistent jit of this function survives overlay growth."""
         t = self.max_levels
         prefixes = [jnp.zeros_like(vec)]
         level_vec = vec
         for _ in range(t):
             prefixes.append(prefixes[-1] + level_vec)
-            level_vec = self._spmv_down(level_vec)
+            level_vec = self._spmv_down(level_vec, s_j, r_j)
         return jnp.stack(prefixes, axis=1)
 
-    def _bfs_prefix_table(self, cross_deg):
+    def _bfs_prefix_table(self, cross_deg, s_j, r_j, deg_j):
         """Level-prefix tables ``P[u, l, :]`` for deg and cross_deg
         simultaneously — ops-independent, so the sharded replayer builds it
         once and replicates it across the mesh."""
         t = self.max_levels
-        vec = jnp.stack([self._deg_j, cross_deg], axis=1)  # [N, 2]
+        vec = jnp.stack([deg_j, cross_deg], axis=1)  # [N, 2]
         prefixes = [jnp.zeros_like(vec)]
         level_vec = vec
         for _ in range(t):
             prefixes.append(prefixes[-1] + level_vec)
             level_vec = jnp.stack(
-                [self._spmv_down(level_vec[:, 0]), self._spmv_down(level_vec[:, 1])], axis=1
+                [self._spmv_down(level_vec[:, 0], s_j, r_j),
+                 self._spmv_down(level_vec[:, 1], s_j, r_j)], axis=1
             )
         return jnp.stack(prefixes, axis=1)  # [N, t+1, 2]
 
-    def _bfs_linear(self, starts, levels, cross_deg):
+    def _bfs_linear(self, starts, levels, cross_deg, s_j, r_j, deg_j):
         """Closed-form multi-source level-synchronous sweep (module doc).
 
         Per-op values stay int32 on device (bounded by a single op's
@@ -358,15 +453,17 @@ class BatchedTrafficEngine:
         fold lives in :meth:`_run_bfs` in host int64, where a million-op
         log summed into one hub vertex cannot wrap.
         """
-        p = self._bfs_prefix_table(cross_deg)
+        p = self._bfs_prefix_table(cross_deg, s_j, r_j, deg_j)
         per_op = p[starts, levels]       # [n_ops, 2]
         return per_op[:, 0], per_op[:, 1]
 
     def _compile_bfs_log(self, ops) -> Tuple[np.ndarray, np.ndarray]:
-        """Per-op expansion levels + per-level start histograms (cached)."""
+        """Per-op expansion levels + per-level start histograms (cached
+        per engine structure version — growth invalidates the entry)."""
         cache = ops.__dict__.setdefault("_bfs_compile_cache", {})
-        if self in cache:
-            return cache[self]
+        ckey = (self, self._struct_version)
+        if ckey in cache:
+            return cache[ckey]
         t = self.max_levels
         n_ops = ops.n_ops
         starts = ops.starts.astype(np.int64)
@@ -389,7 +486,7 @@ class BatchedTrafficEngine:
         np.add.at(hist, (np.minimum(levels, t) - 1, starts), 1)
         c_stack = hist[::-1].cumsum(axis=0)[::-1].copy()[:t]
         out = (levels.astype(np.int32), c_stack)
-        cache[self] = out
+        cache[ckey] = out
         return out
 
     def _run_bfs(self, ops, cross_deg: np.ndarray):
@@ -397,7 +494,8 @@ class BatchedTrafficEngine:
         edges, cross = self._run_fn(
             jnp.asarray(ops.starts.astype(np.int32)),
             jnp.asarray(levels),
-            jnp.asarray(cross_deg),
+            jnp.asarray(self._pad_rows(cross_deg)),
+            self._s_j, self._r_j, self._deg_j,
         )
         # tm = Σ_l (Aᵀ)^l c_l, inner-to-outer fold in host int64: the whole
         # log accumulates into single vertices here, so int32 could wrap.
@@ -435,8 +533,9 @@ class BatchedTrafficEngine:
     def _compile_sssp_log(self, ops) -> np.ndarray:
         """Difficulty order: (coarse src cell, straight-line distance)."""
         cache = ops.__dict__.setdefault("_sssp_compile_cache", {})
-        if self in cache:
-            return cache[self]
+        ckey = (self, self._struct_version)
+        if ckey in cache:
+            return cache[ckey]
         hd = np.hypot(
             self._lon[ops.starts].astype(np.float64) - self._lon[ops.ends],
             self._lat[ops.starts].astype(np.float64) - self._lat[ops.ends],
@@ -446,7 +545,7 @@ class BatchedTrafficEngine:
         cx = np.clip(((self._lon[ops.starts] - self._lon.min()) / lon_span * 8), 0, 7).astype(np.int64)
         cy = np.clip(((self._lat[ops.starts] - self._lat.min()) / lat_span * 8), 0, 7).astype(np.int64)
         order = np.lexsort((hd, cx * 8 + cy))
-        cache[self] = order
+        cache[ckey] = order
         return order
 
     def _sssp_window(
@@ -782,15 +881,36 @@ def get_engine(
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
 ) -> BatchedTrafficEngine:
-    """Graph-lifetime engine cache (same idiom as didic.make_spmm).
+    """Engine cache: store-lifetime for overlay graphs, graph-lifetime
+    otherwise (same idiom as didic.make_spmm).
 
     ``max_expansions`` is normalized before keying, so ``None`` and an
     explicit default resolve to the *same* engine — the engine's value is
     authoritative for every path (batched, sharded, redo, resident).
+    For a store-backed graph the engine is keyed on the
+    :class:`~repro.graphs.structure.GraphStore` by engine parameters
+    (capacity is the store's identity) and *adopts* each grown graph in
+    place, so compiled closures survive growth.
     """
-    cache = graph.__dict__.setdefault("_traffic_engine_cache", {})
     key = (pattern, chunk, resolve_max_expansions(max_expansions),
            delta_scale, use_kernel)
+    store = graph.store
+    if store is not None:
+        skey = ("engine",) + key
+        eng = store.caches.get(skey)
+        if eng is not None:
+            eng.adopt(graph)
+            if eng._needs_rebuild:
+                eng = None
+        if eng is None:
+            eng = BatchedTrafficEngine(
+                graph, pattern, chunk=chunk,
+                max_expansions=max_expansions, delta_scale=delta_scale,
+                use_kernel=use_kernel,
+            )
+            store.caches[skey] = eng
+        return eng
+    cache = graph.__dict__.setdefault("_traffic_engine_cache", {})
     if key not in cache:
         cache[key] = BatchedTrafficEngine(
             graph, pattern, chunk=chunk,

@@ -205,9 +205,14 @@ class ResidentReplayState:
 class ShardedTrafficReplayer:
     """Replay evaluation logs sharded over a mesh's data axes.
 
-    One replayer per (graph, pattern, mesh); jitted shard_map closures are
-    built once and cached here (per-shape variants cache inside jit, as in
-    the single-device engine).
+    One replayer per (graph, pattern, mesh) — or, for a delta-overlay
+    store-backed graph, per (store, pattern, mesh): every closure is
+    sized to the store's row capacity and graph tables enter as jit
+    arguments, so :meth:`adopt_graph` moves the same replayer (and its
+    compiled programs, and its resident states) onto each grown graph
+    without retracing. Jitted shard_map closures are built once and
+    cached here (per-shape variants cache inside jit, as in the
+    single-device engine).
     """
 
     def __init__(
@@ -230,29 +235,52 @@ class ShardedTrafficReplayer:
             delta_scale=delta_scale, use_kernel=use_kernel,
         )
         self.n_nodes = graph.n_nodes
+        # Growth-invariant scatter/fold row count: the store capacity for
+        # overlay graphs (real ids always fit; the tail rows are inert and
+        # sliced off host-side), exact logical size otherwise.
+        self._row_cap = graph.store.n_cap if graph.store is not None else graph.n_nodes
         self.last_redo_ops = 0  # windowed-pass rejects of the last replay
         if self.engine.kind == "bfs":
             self._build_bfs_fns()
         else:
             self._build_sssp_fns()
-        self._scatter_psum = make_scatter_psum(mesh, self.n_nodes, self.data_axes)
+        self._scatter_psum = make_scatter_psum(mesh, self._row_cap, self.data_axes)
+
+    def adopt_graph(self, graph: Graph) -> None:
+        """Adopt a grown graph from the same store lineage in place.
+
+        Delegates structural refresh to the engine (host rebuild + H2D at
+        frozen capacity shapes), then refreshes the replayer's resident
+        graph-pure artifacts. No compiled program is invalidated."""
+        if graph is self.graph:
+            return
+        self.engine.adopt(graph)
+        self.graph = graph
+        self.n_nodes = graph.n_nodes
+        if self.engine.kind == "bfs":
+            eng = self.engine
+            self._deg_table = self._one_table_fn(eng._deg_j, eng._s_j, eng._r_j)
+        else:
+            # Whole-graph redo layout tracks logical extents; rebuilt
+            # lazily from the adopted engine on next use.
+            self._full_static_dev = None
 
     # =================================================== linear BFS patterns
     def _build_bfs_fns(self) -> None:
         from jax.experimental.shard_map import shard_map
 
         eng = self.engine
-        t, n = eng.max_levels, self.n_nodes
+        t, n = eng.max_levels, eng._n_rows
         axes = self.data_axes
         s2 = P(axes, None)
 
         # The deg-column prefix table is pure graph structure — built once
-        # and kept device-resident; only the cross column (parts-dependent)
-        # is recomputed per replay. With a resident state the per-op deg
-        # gather happens once per log too, so a slice replay is one cross
-        # table build + one cross gather.
+        # per structure revision and kept device-resident; only the cross
+        # column (parts-dependent) is recomputed per replay. With a
+        # resident state the per-op deg gather happens once per log too,
+        # so a slice replay is one cross table build + one cross gather.
         self._one_table_fn = jax.jit(eng._bfs_prefix_one)
-        self._deg_table = self._one_table_fn(eng._deg_j)
+        self._deg_table = self._one_table_fn(eng._deg_j, eng._s_j, eng._r_j)
         self._per_op_one_fn = jax.jit(lambda st, lvl, table: table[st, lvl])
 
         def tm_body(starts, levels, valid, s_e, r_e):
@@ -310,7 +338,9 @@ class ShardedTrafficReplayer:
             # (graph, ops)-pure. One cross table + one gather per slice.
             cross = np.asarray(self._per_op_one_fn(
                 state.bfs_starts, state.bfs_levels,
-                self._one_table_fn(jnp.asarray(cross_deg)),
+                self._one_table_fn(
+                    jnp.asarray(eng._pad_rows(cross_deg)), eng._s_j, eng._r_j
+                ),
             )).reshape(-1)[:n_ops].astype(np.int64)
             return state.per_op_edges, cross, state.tm
 
@@ -322,7 +352,10 @@ class ShardedTrafficReplayer:
             self._per_op_one_fn(st_dev, lvl_dev, self._deg_table)
         ).reshape(-1)[:n_ops].astype(np.int64)
         cross = np.asarray(self._per_op_one_fn(
-            st_dev, lvl_dev, self._one_table_fn(jnp.asarray(cross_deg))
+            st_dev, lvl_dev,
+            self._one_table_fn(
+                jnp.asarray(eng._pad_rows(cross_deg)), eng._s_j, eng._r_j
+            ),
         )).reshape(-1)[:n_ops].astype(np.int64)
 
         # Frontier mass is (graph, ops)-pure — independent of the partition
@@ -332,7 +365,7 @@ class ShardedTrafficReplayer:
         # traffic lives on the mesh across the cycle" leg of the device
         # runtime (only the cross/partition counters, which do depend on
         # parts, are recomputed per slice).
-        acc = CounterAccumulator(self.n_nodes)
+        acc = CounterAccumulator(eng._n_rows)
         for lo, hi in bfs_wave_ranges(edges):
             b = _ceil_div(hi - lo, self.n_shards)
             valid = np.ones(hi - lo, dtype=bool)
@@ -342,7 +375,7 @@ class ShardedTrafficReplayer:
                 self._shard_pad(valid, False, b),
                 eng._s_j, eng._r_j,
             ))
-        tm = acc.total
+        tm = acc.total[: self.n_nodes]
         if state is not None:
             state.bfs_starts, state.bfs_levels = st_dev, lvl_dev
             state.per_op_edges, state.tm = edges, tm
@@ -419,8 +452,9 @@ class ShardedTrafficReplayer:
         # resident replay stays bit-equal to the cold solve). ``ids`` may
         # be [S, W] (windowed rounds) or [1, W] (replicated redo rounds) —
         # broadcasting recovers the per-shard view. Out-of-range padding
-        # ids (_BIG_ID) index a sentinel 0/False row via the clamp.
-        n_sentinel = jnp.int32(self.n_nodes)
+        # ids (_BIG_ID) index a sentinel 0/False row via the clamp. Sizes
+        # are the growth-invariant row capacity, not the logical count.
+        n_sentinel = jnp.int32(self._row_cap)
         self._fold_cross_fn = jax.jit(
             lambda ids, member, cross_full: (
                 member.astype(jnp.int32)
@@ -433,7 +467,7 @@ class ShardedTrafficReplayer:
             ).any(axis=1)
         )
         self._drop_cols_fn = jax.jit(lambda m, keep: m & keep[:, None, :])
-        n_rows = self.n_nodes
+        n_rows = self._row_cap
         self._scatter_rows_fn = jax.jit(
             lambda ids, mass: jnp.zeros((n_rows,), jnp.int32)
             .at[jnp.broadcast_to(ids, mass.shape).reshape(-1)]
@@ -452,9 +486,10 @@ class ShardedTrafficReplayer:
                 jnp.asarray(nbr), jnp.asarray(w_inf),
                 jnp.asarray(sp_s), jnp.asarray(sp_r), jnp.asarray(sp_w),
             )
-            self._scatter_psum_shared = make_scatter_psum(
-                self.mesh, self.n_nodes, self.data_axes, shared_ids=True
-            )
+            if self._scatter_psum_shared is None:
+                self._scatter_psum_shared = make_scatter_psum(
+                    self.mesh, self._row_cap, self.data_axes, shared_ids=True
+                )
         return self._full_static_dev
 
     def _stack_problems(self, probs):
@@ -498,7 +533,7 @@ class ShardedTrafficReplayer:
         n_ops, s, chunk = ops.n_ops, self.n_shards, eng.chunk
         per_op_edges = np.zeros(n_ops, dtype=np.int64)
         per_op_cross = np.zeros(n_ops, dtype=np.int64)
-        acc = CounterAccumulator(self.n_nodes)
+        acc = CounterAccumulator(self._row_cap)
         redo: List[np.ndarray] = []
 
         def run_pass(op_idx: np.ndarray) -> None:
@@ -578,11 +613,12 @@ class ShardedTrafficReplayer:
                 ops, np.concatenate(redo), cross_deg,
                 per_op_edges, per_op_cross, acc, state=state,
             )
+        tm = acc.total[: self.n_nodes]
         if state is not None:
             state.per_op_edges = per_op_edges
-            state.tm = acc.total
+            state.tm = tm
             state.dirty_ops = np.zeros(n_ops, dtype=bool)
-        return per_op_edges, per_op_cross, acc.total
+        return per_op_edges, per_op_cross, tm
 
     def _run_full_pass(
         self,
@@ -687,7 +723,7 @@ class ShardedTrafficReplayer:
         # Prune rounds that no longer own any op (fully superseded).
         state.rounds = [r for r in state.rounds if r.ok.any()]
 
-        cross_full = np.zeros(self.n_nodes + 1, dtype=np.int32)
+        cross_full = np.zeros(self._row_cap + 1, dtype=np.int32)
         cross_full[: self.n_nodes] = cross_deg
         cross_dev = jnp.asarray(cross_full)
         per_op_cross = np.zeros(state.n_ops, dtype=np.int64)
@@ -705,7 +741,7 @@ class ShardedTrafficReplayer:
         pend, state.pending_dirty = state.pending_dirty, None
         if pend is None or pend.size == 0:
             return
-        dirty_full = np.zeros(self.n_nodes + 1, dtype=bool)
+        dirty_full = np.zeros(self._row_cap + 1, dtype=bool)
         dirty_full[pend[pend < self.n_nodes]] = True
         dirty_dev = jnp.asarray(dirty_full)
         if state.dirty_ops is None:
@@ -732,7 +768,7 @@ class ShardedTrafficReplayer:
                 mass = self._mass_fn(rnd.member, jnp.asarray(removed_ok))
                 state.tm -= np.asarray(
                     self._scatter_rows_fn(rnd.ids, mass)
-                ).astype(np.int64)
+                )[: self.n_nodes].astype(np.int64)
             keep = jnp.asarray(~cols)
             rnd.member = self._drop_cols_fn(rnd.member, keep)
             rnd.foot = self._drop_cols_fn(rnd.foot, keep)
@@ -744,7 +780,7 @@ class ShardedTrafficReplayer:
         """Re-solve the dirty ops on the whole (possibly updated) graph,
         capturing the fresh artifacts as new resident rounds."""
         idx = np.nonzero(state.dirty_ops)[0]
-        acc = CounterAccumulator(self.n_nodes)
+        acc = CounterAccumulator(self._row_cap)
         scratch_cross = np.zeros(state.n_ops, dtype=np.int64)
         n_rounds = len(state.rounds)
         try:
@@ -758,13 +794,23 @@ class ShardedTrafficReplayer:
             # retry's eviction accounting.
             del state.rounds[n_rounds:]
             raise
-        state.tm += acc.total
+        state.tm += acc.total[: self.n_nodes]
         state.dirty_ops[:] = False
         self.last_redo_ops = int(idx.shape[0])
 
     def _resident_state(self, ops) -> ResidentReplayState:
         states: Dict = ops.__dict__.setdefault("_resident_replay", {})
         st = states.get(self)
+        if st is not None and st.graph is not self.graph:
+            # A store-cached replayer outlives graph revisions, so a log
+            # replayed against one revision can meet the same replayer
+            # adopted to another (e.g. a fresh run restarting from the
+            # base graph after an earlier run grew it). Migration keeps
+            # legitimately-grown states in sync (adopt_resident sets
+            # state.graph to the adopted graph); anything else is stale
+            # — its artifacts belong to a different structure, so start
+            # cold rather than fold them.
+            st = None
         if st is None:
             st = ResidentReplayState(
                 graph=self.graph, pattern=self.engine.pattern, n_ops=ops.n_ops
@@ -841,15 +887,36 @@ def get_replayer(
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
 ) -> ShardedTrafficReplayer:
-    """Graph-lifetime replayer cache (same idiom as ``get_engine``).
+    """Replayer cache: store-lifetime for overlay graphs, graph-lifetime
+    otherwise (same idiom as ``get_engine``).
 
     ``max_expansions`` is normalized before keying — ``None`` defers to
     the engine's authoritative default, so a replay without an override
-    always lands on the same engine/replayer as the batched path.
+    always lands on the same engine/replayer as the batched path. A
+    store-backed graph keys on the store by (pattern, mesh, axes, engine
+    params) — capacity is the store's identity — and the cached replayer
+    adopts each grown graph in place, so a growth step is a cache *hit*
+    and reuses every compiled closure.
     """
-    cache = graph.__dict__.setdefault("_traffic_replayer_cache", {})
     key = (pattern, mesh, tuple(data_axes), chunk,
            resolve_max_expansions(max_expansions), delta_scale, use_kernel)
+    store = graph.store
+    if store is not None:
+        skey = ("replayer",) + key
+        rep = store.caches.get(skey)
+        if rep is not None:
+            rep.adopt_graph(graph)
+            if rep.engine._needs_rebuild:
+                rep = None
+        if rep is None:
+            rep = ShardedTrafficReplayer(
+                graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
+                max_expansions=max_expansions, delta_scale=delta_scale,
+                use_kernel=use_kernel,
+            )
+            store.caches[skey] = rep
+        return rep
+    cache = graph.__dict__.setdefault("_traffic_replayer_cache", {})
     if key not in cache:
         cache[key] = ShardedTrafficReplayer(
             graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
@@ -873,23 +940,37 @@ def migrate_resident_states(
     with ``dirty_vertices`` queued for invalidation: GIS states re-solve
     only footprint-touched ops; BFS states re-solve cold on their next
     replay (global tree properties) but stay resident for the slices after
-    that. Returns the number of states migrated.
+    that. Replayers live in three places — the old graph's own cache
+    (storeless growth, and the warmup replay before a store existed), a
+    store shared by both graphs (the overlay fast path: the replayer *is*
+    the new graph's replayer, it just adopts in place), or an old store a
+    compaction retired (the state re-solves on the compacted lineage's
+    fresh replayer). Returns the number of states migrated.
     """
     states = ops.__dict__.get("_resident_replay")
     if not states:
         return 0
     moved = 0
-    old_cache = old_graph.__dict__.get("_traffic_replayer_cache", {})
-    for key, old_rep in list(old_cache.items()):
+    candidates = list(old_graph.__dict__.get("_traffic_replayer_cache", {}).items())
+    if old_graph.store is not None:
+        for skey, rep in old_graph.store.caches.items():
+            if isinstance(skey, tuple) and skey and skey[0] == "replayer":
+                candidates.append((skey[1:], rep))
+    new_store = new_graph.store
+    for key, old_rep in candidates:
         state = states.pop(old_rep, None)
         if state is None:
             continue
-        pattern, mesh, data_axes, chunk, max_exp, delta_scale, use_kernel = key
-        new_rep = get_replayer(
-            new_graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
-            max_expansions=max_exp, delta_scale=delta_scale,
-            use_kernel=use_kernel,
-        )
+        if new_store is not None and old_rep.engine.store is new_store:
+            new_rep = old_rep
+            new_rep.adopt_graph(new_graph)
+        else:
+            pattern, mesh, data_axes, chunk, max_exp, delta_scale, use_kernel = key
+            new_rep = get_replayer(
+                new_graph, pattern, mesh, data_axes=data_axes, chunk=chunk,
+                max_expansions=max_exp, delta_scale=delta_scale,
+                use_kernel=use_kernel,
+            )
         new_rep.adopt_resident(ops, state, dirty_vertices)
         moved += 1
     return moved

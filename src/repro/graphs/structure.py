@@ -1,4 +1,4 @@
-"""Graph containers and format conversions.
+"""Graph containers, format conversions, and delta-overlay storage.
 
 The framework stores graphs in COO form (host-side ``numpy``), and derives:
 
@@ -10,6 +10,24 @@ The framework stores graphs in COO form (host-side ``numpy``), and derives:
 
 Device arrays are produced on demand; the canonical representation stays on
 host so multi-million-edge graphs never pay device transfer until needed.
+
+Growing graphs use a **base + delta overlay** (:class:`GraphStore`), the
+classic dynamic-graph-storage layout (Besta et al., *Demystifying Graph
+Databases*). A store fixes a vertex capacity ``n_cap >= n_nodes`` and an
+edge capacity ``e_cap >= n_edges`` when growth begins; every device layout
+derived from a store-backed graph (BFS prefix tables, gather/scatter edge
+lists, DiDiC diffusion state) is padded to capacity with an inert tail —
+dead rows receive zero mass, dead edges point at a sentinel row — so vertex
+and edge inserts only advance an append cursor and refresh device buffers
+*without changing any compiled shape*. Compiled programs therefore survive
+growth: jitted closures are cached on the store (keyed by capacity, mesh,
+and engine parameters, not by graph object identity) and adopt each grown
+graph in place. When an insert would overflow the delta, the lineage
+**compacts**: a fresh base is cut at the grown extents, a new store with
+fresh headroom is allocated, and ``compactions`` is incremented — the one
+amortized rebuild (and retrace) the overlay design allows. The host COO
+arrays remain the logical truth at every step; capacities only govern
+device-side padding, so host-path results are unchanged bit-for-bit.
 """
 
 from __future__ import annotations
@@ -22,12 +40,98 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "GraphStore",
+    "GROWTH_HEADROOM",
     "BlockEll",
     "PaddedNeighbors",
     "coalesce_edges",
     "symmetrize",
     "padded_neighbors",
 ]
+
+# Capacity multiplier applied when a store is allocated (at growth onset and
+# at every compaction): a delta sized to ``headroom - 1`` times the current
+# extents absorbs that much relative growth before the next compaction.
+GROWTH_HEADROOM = 2.0
+
+
+class GraphStore:
+    """Delta-overlay control block shared along one growing graph lineage.
+
+    The store pins the padded device capacity (``n_cap`` rows / ``e_cap``
+    edge slots) that every overlay layout is built to, records the base
+    extents the current delta accumulates on top of (``base_nodes`` /
+    ``base_edges``; the delta cursors are ``graph.n_nodes - base_nodes``
+    and ``graph.n_edges - base_edges``), and counts ``compactions``. It
+    also owns ``caches`` — jitted engines/replayers/programs keyed by
+    (capacity, mesh, axes, engine params) live here instead of on the
+    graph object, so a grown graph (a *new* ``Graph``) reuses the same
+    compiled closures by adopting them in place.
+
+    The store never holds graph data itself: host COO arrays on the
+    ``Graph`` are the logical truth, and overlay consumers re-upload the
+    capacity-padded device buffers from them on adoption.
+    """
+
+    def __init__(
+        self,
+        n_cap: int,
+        e_cap: int,
+        base_nodes: int,
+        base_edges: int,
+        compactions: int = 0,
+    ) -> None:
+        self.n_cap = int(n_cap)
+        self.e_cap = int(e_cap)
+        self.base_nodes = int(base_nodes)
+        self.base_edges = int(base_edges)
+        self.compactions = int(compactions)
+        self.caches: Dict = {}
+
+    def would_overflow(self, graph: "Graph", n_new_vertices: int, n_new_edges: int) -> bool:
+        """True if appending the given counts to ``graph`` exceeds capacity."""
+        return (
+            graph.n_nodes + int(n_new_vertices) > self.n_cap
+            or graph.n_edges + int(n_new_edges) > self.e_cap
+        )
+
+    def delta_nodes(self, graph: "Graph") -> int:
+        """Vertex append cursor: rows of ``graph`` living in the delta."""
+        return graph.n_nodes - self.base_nodes
+
+    def delta_edges(self, graph: "Graph") -> int:
+        """Edge append cursor: edge slots of ``graph`` living in the delta."""
+        return graph.n_edges - self.base_edges
+
+    def _carry_to(self, old_graph: "Graph", new_graph: "Graph") -> None:
+        """Attach this store to a grown graph, compacting on overflow.
+
+        On overflow the old base + old delta (``old_graph``'s extents)
+        are folded into the fresh base, and the overflowing insert lands
+        in the fresh delta — capacities are re-derived with headroom
+        from the *grown* extents so the new delta starts with room.
+        """
+        if new_graph.n_nodes <= self.n_cap and new_graph.n_edges <= self.e_cap:
+            new_graph.store = self
+        else:
+            new_graph.store = GraphStore(
+                n_cap=_with_headroom(new_graph.n_nodes),
+                e_cap=_with_headroom(new_graph.n_edges),
+                base_nodes=old_graph.n_nodes,
+                base_edges=old_graph.n_edges,
+                compactions=self.compactions + 1,
+            )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"GraphStore(n_cap={self.n_cap}, e_cap={self.e_cap}, "
+            f"base={self.base_nodes}/{self.base_edges}, "
+            f"compactions={self.compactions})"
+        )
+
+
+def _with_headroom(extent: int) -> int:
+    return int(np.ceil(GROWTH_HEADROOM * max(int(extent), 1)))
 
 
 def coalesce_edges(
@@ -204,6 +308,7 @@ class Graph:
     edge_weight: np.ndarray        # [E] float32
     node_attrs: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     name: str = "graph"
+    store: Optional[GraphStore] = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         self.senders = np.asarray(self.senders, dtype=np.int32)
@@ -249,6 +354,31 @@ class Graph:
         np.add.at(d, s, w)
         return d.astype(np.float32)
 
+    # ----------------------------------------------------- delta overlay
+    def ensure_store(
+        self, n_cap: Optional[int] = None, e_cap: Optional[int] = None
+    ) -> GraphStore:
+        """Attach (or return) the delta-overlay store for this lineage.
+
+        Called once when growth begins; the default capacities reserve
+        :data:`GROWTH_HEADROOM` times the current extents. Explicit caps
+        (used by compaction-boundary tests) must cover the current graph.
+        """
+        if self.store is not None:
+            return self.store
+        n_cap = _with_headroom(self.n_nodes) if n_cap is None else int(n_cap)
+        e_cap = _with_headroom(self.n_edges) if e_cap is None else int(e_cap)
+        if n_cap < self.n_nodes or e_cap < self.n_edges:
+            raise ValueError(
+                f"store capacity ({n_cap}, {e_cap}) below current extents "
+                f"({self.n_nodes}, {self.n_edges})"
+            )
+        self.store = GraphStore(
+            n_cap=n_cap, e_cap=e_cap,
+            base_nodes=self.n_nodes, base_edges=self.n_edges,
+        )
+        return self.store
+
     # -------------------------------------------------------------- updates
     def with_edges(
         self,
@@ -262,7 +392,11 @@ class Graph:
         unchanged, so partition maps, evaluation logs, and per-vertex
         state remain valid on the result; every structure-derived cache
         (CSR views, padded layouts, engines) rebuilds lazily on the new
-        object. This is the structural-dynamism primitive: a
+        object. A delta-overlay :class:`GraphStore` is carried forward
+        when the result still fits its capacity (store-cached engines
+        then adopt the new graph without retracing), and replaced by a
+        compacted store otherwise. This is the structural-dynamism
+        primitive: a
         :class:`repro.core.dynamism.DynamismLog` carrying edge inserts is
         applied by the graph service through this method.
         """
@@ -276,7 +410,7 @@ class Graph:
         for ends in (senders, receivers):
             if ends.size and (ends.min() < 0 or ends.max() >= self.n_nodes):
                 raise ValueError("with_edges endpoints must be existing vertices")
-        return Graph(
+        out = Graph(
             n_nodes=self.n_nodes,
             senders=np.concatenate([self.senders, senders]),
             receivers=np.concatenate([self.receivers, receivers]),
@@ -286,6 +420,9 @@ class Graph:
             node_attrs=self.node_attrs,
             name=self.name,
         )
+        if self.store is not None:
+            self.store._carry_to(self, out)
+        return out
 
     def with_vertices(
         self,
@@ -306,7 +443,10 @@ class Graph:
         explicitly). Attr arrays are reallocated — the old graph and
         everything derived from it stay valid — and every structure cache
         (CSR views, padded layouts, engines) rebuilds lazily on the new
-        object. This is the vertex-growth primitive behind the Insert
+        object. A delta-overlay :class:`GraphStore` is carried forward
+        while the result fits its capacity and compacted otherwise, as
+        in :meth:`with_edges`. This is the vertex-growth primitive behind
+        the Insert
         experiment: a :class:`repro.core.dynamism.DynamismLog` that
         allocates new vertices is applied by the graph service through
         this method.
@@ -351,7 +491,7 @@ class Graph:
                 raise ValueError(
                     "with_vertices endpoints must be existing or appended vertices"
                 )
-        return Graph(
+        out = Graph(
             n_nodes=n_total,
             senders=np.concatenate([self.senders, senders]),
             receivers=np.concatenate([self.receivers, receivers]),
@@ -359,6 +499,9 @@ class Graph:
             node_attrs=new_attrs,
             name=self.name,
         )
+        if self.store is not None:
+            self.store._carry_to(self, out)
+        return out
 
     # ------------------------------------------------------------- CSR views
     @cached_property

@@ -162,8 +162,8 @@ class TestFaultPrimitives:
         with pytest.raises(ValueError, match="unknown fault site"):
             FaultPlan().fire("bogus-site")
         assert set(FAULT_SITES) == {
-            "apply:pre_validate", "apply:pre_commit", "apply:post_commit",
-            "maintain", "replay",
+            "apply:pre_validate", "apply:pre_commit", "apply:compact",
+            "apply:post_commit", "maintain", "replay",
         }
 
     def test_retry_policy_backoff_then_deadline(self):
@@ -511,6 +511,104 @@ class TestCrashRecovery:
 
 
 # ===========================================================================
+# Delta-overlay compaction boundaries (ISSUE 8 satellite)
+# ===========================================================================
+class TestCompactionBoundaries:
+    def _service(self, g):
+        svc = PartitionedGraphService(g, 4)
+        svc.partition_with(partitioners.random_partition(g.n_nodes, 4, seed=0))
+        return svc
+
+    def test_delta_fills_exactly_at_capacity_without_compaction(self):
+        """A log that lands the delta cursor exactly on the capacity is
+        carried in place — compaction only fires on *overflow*."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = self._service(g)
+        log = InsertPartitioner("random", 4, seed=0).allocate(
+            svc.parts, 0.05, insert_rate=0.5, graph=g
+        )
+        nv, ne = log.n_new_vertices, int(log.insert_senders.shape[0])
+        assert nv > 0
+        store = g.ensure_store(n_cap=g.n_nodes + nv, e_cap=g.n_edges + ne)
+        svc.apply_dynamism(log)
+        assert svc.graph.store is store          # same store, carried
+        assert store.compactions == 0
+        assert store.delta_nodes(svc.graph) == nv  # delta exactly full
+        assert store.delta_edges(svc.graph) == ne
+        assert not store.would_overflow(svc.graph, 0, 0)
+        assert store.would_overflow(svc.graph, 1, 0)
+
+    def test_overflow_compacts_then_lands_in_fresh_delta(self):
+        """One vertex past capacity: the grown graph gets a *fresh* store
+        (compactions+1, headroom re-derived) whose delta holds exactly
+        the overflowing log."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        svc = self._service(g)
+        ip = InsertPartitioner("random", 4, seed=0)
+        log = ip.allocate(svc.parts, 0.05, insert_rate=0.5, graph=g)
+        old = g.ensure_store(
+            n_cap=g.n_nodes + log.n_new_vertices,
+            e_cap=g.n_edges + int(log.insert_senders.shape[0]),
+        )
+        svc.apply_dynamism(log)   # fills the delta exactly
+        log2 = ip.allocate(svc.parts, 0.05, insert_rate=0.5,
+                           graph=svc.graph)
+        assert log2.n_new_vertices > 0
+        svc.apply_dynamism(log2)  # overflows → amortized compaction
+        new = svc.graph.store
+        assert new is not old
+        assert new.compactions == old.compactions + 1
+        assert new.n_cap >= svc.graph.n_nodes
+        assert new.e_cap >= svc.graph.n_edges
+        # The compacted base absorbed everything before the overflowing
+        # log; the fresh delta holds exactly that log.
+        assert new.delta_nodes(svc.graph) == log2.n_new_vertices
+        assert new.delta_edges(svc.graph) == int(log2.insert_senders.shape[0])
+        # The old store is untouched (its graphs remain consistent).
+        assert old.compactions == 0
+
+    def test_mid_compaction_crash_recovers_bit_exact(self):
+        """Crash at 'apply:compact' — between the delta-filling writes and
+        the compaction rebuild. The journal entry is pending (nothing
+        mutated), recovery restores the pre-crash store geometry from the
+        snapshot, and the re-run compacts identically: every counter
+        bit-exact vs the uninterrupted run."""
+        g = datasets.load("filesystem", scale=0.001, seed=1)
+        make0 = _runtime_factory(g)
+
+        def make():
+            # Tiny headroom: the first growth slice overflows immediately.
+            g.ensure_store(n_cap=g.n_nodes + 4, e_cap=g.n_edges + 16)
+            return make0()
+
+        ops = generate_ops(g, n_ops=60, seed=3)
+        kw = dict(maintain_every=2, insert_rate=0.5)
+
+        base = {}
+        ref = make()
+        ref_result = ref.run(ops, 3, 0.05,
+                             on_slice=lambda i, r: base.__setitem__(i, r), **kw)
+        assert ref.service.graph.store.compactions >= 1
+
+        plan = FaultPlan().crash(0, site="apply:compact")
+        got = {}
+        out, stats = run_with_recovery(
+            make, g, ops, 3, 0.05,
+            fault_plan=plan, journal=DynamismJournal(),
+            retry_policy=RetryPolicy(sleep=lambda s: None),
+            snapshot_every=2,
+            on_slice=lambda i, r: got.__setitem__(i, r),
+            **kw,
+        )
+        assert stats.recoveries == 1
+        assert stats.journal_rolled_back >= 1  # pending intent rolled back
+        for i in range(3):
+            _assert_results_equal(base[i], got[i], f"slice {i}")
+        np.testing.assert_array_equal(ref_result.parts, out.parts)
+        assert ref_result.records == out.records
+
+
+# ===========================================================================
 # Chaos soak (ISSUE 6 satellite): ≥50 slices, mixed move/insert, faults
 # ===========================================================================
 class TestChaosSoak:
@@ -519,6 +617,10 @@ class TestChaosSoak:
 
         g = datasets.load("filesystem", scale=0.001, seed=1)
         mesh = make_replay_mesh()  # 1-shard on the tier-1 single-device CPU
+        # Tiny delta headroom: the first growth slice (i=3) overflows the
+        # store, so the soak also crosses an amortized compaction — the
+        # 'apply:compact' crash below fires right before it.
+        g.ensure_store(n_cap=g.n_nodes + 6, e_cap=g.n_edges + 24)
         make = _runtime_factory(g, mesh=mesh)
         ops = generate_ops(g, n_ops=80, seed=5)
         n_slices = 50
@@ -538,6 +640,7 @@ class TestChaosSoak:
         ref_result = ref.result()
 
         plan = (FaultPlan()
+                .crash(3, site="apply:compact")         # mid-compaction
                 .crash(13, site="apply:pre_commit")     # structural slice
                 .crash(23, site="apply:post_commit")    # structural slice
                 .crash(37, site="replay")
@@ -554,9 +657,10 @@ class TestChaosSoak:
             snapshot_every=8,
             on_slice=lambda i, r: got.__setitem__(i, r),
         )
-        assert stats.recoveries == 3
+        assert stats.recoveries == 4
         assert stats.journal_rolled_back >= 1
         assert stats.journal_replayed >= 5
+        assert ref.service.graph.store.compactions >= 1  # soak compacted
         for i in range(n_slices):
             _assert_results_equal(base[i], got[i], f"slice {i}")
         np.testing.assert_array_equal(ref_result.parts, out.parts)

@@ -221,6 +221,38 @@ _SHARDED_EQUIVALENCE = textwrap.dedent("""
         svc.run_ops(ops), cold_new
     )
 
+    # --- store cache keys: compiled artifacts survive growth (ISSUE 8) ----
+    # With a delta-overlay store, get_replayer / get_engine key their
+    # caches on (capacity, mesh, axes, engine params) — NOT graph object
+    # identity — so an in-capacity growth step is a cache *hit*: the same
+    # replayer/engine object adopts the grown graph in place, and its
+    # counters stay bit-exact vs a cold batched solve of the new graph.
+    from repro.core.framework import InsertPartitioner
+    from repro.core.traffic_batched import get_engine
+    g = datasets.load("filesystem", scale=0.004)
+    store = g.ensure_store()
+    svc = PartitionedGraphService(g, 4, mesh=mesh)
+    svc.partition_with(
+        partitioners.random_partition(g.n_nodes, 4, seed=0).astype(np.int32))
+    ops = generate_ops(g, n_ops=101, seed=1, pattern="filesystem")
+    svc.run_ops(ops)                       # builds + caches on the store
+    rep0 = get_replayer(g, "filesystem", mesh)
+    eng0 = get_engine(g, "filesystem")
+    log = InsertPartitioner("random", 4, seed=0).allocate(
+        svc.parts, 0.05, insert_rate=0.5, graph=svc.graph)
+    svc.apply_dynamism(log)                # grows within capacity
+    g2 = svc.graph
+    out["store_cache_graph_grew"] = g2 is not g and g2.n_nodes > g.n_nodes
+    out["store_cache_carried"] = g2.store is store and store.compactions == 0
+    out["store_cache_replayer_hit"] = get_replayer(g2, "filesystem", mesh) is rep0
+    out["store_cache_engine_hit"] = get_engine(g2, "filesystem") is eng0
+    # distinct engine params -> distinct cache entry, never a collision
+    out["store_cache_param_keyed"] = (
+        get_replayer(g2, "filesystem", mesh, chunk=7) is not rep0)
+    got = svc.run_ops(ops)                 # adopted replayer, grown graph
+    out["store_cache_grown_bit_equal"] = equal(
+        got, execute_ops(g2, ops, svc.parts, 4, engine="batched"))
+
     print(json.dumps(out))
 """)
 
@@ -292,6 +324,18 @@ class TestShardedReplay:
         assert results["structural_route_shortened"]
         assert results["structural_redo_partial"]
         assert results["structural_next_slice_bit_equal"]
+
+    def test_store_cache_hits_across_growth(self, results):
+        """ISSUE 8 satellite: replayer/engine caches key on (capacity,
+        mesh, axes, engine params), so an in-capacity growth step reuses
+        the identical compiled objects — and still matches a batched
+        solve of the grown graph bit-exactly."""
+        assert results["store_cache_graph_grew"]
+        assert results["store_cache_carried"]
+        assert results["store_cache_replayer_hit"]
+        assert results["store_cache_engine_hit"]
+        assert results["store_cache_param_keyed"]
+        assert results["store_cache_grown_bit_equal"]
 
 
 class TestWaveBoundary:
