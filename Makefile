@@ -39,6 +39,16 @@
 #                            and resident == cold bit-equality per slice,
 #                            both insert policies (WRITE=--write-baseline
 #                            records dynamic.growth_steady numbers)
+#   make serve-smoke         online-serving gate, 8-shard CPU mesh: the
+#                            continuous-batching front-end serves seeded
+#                            client streams (uniform / bursty / skewed-hot
+#                            arrivals) with background DiDiC maintenance —
+#                            online counters == offline replay bit-exact
+#                            (crash legs included, 2 recoveries + a failed
+#                            shard window), zero XLA compiles on every
+#                            admission tick, and serve-latency.json with
+#                            p50/p99 per op class (WRITE=--write-baseline
+#                            records the BENCH_traffic.json serving section)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
@@ -47,7 +57,7 @@
 #   make check               test + lint + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
 #                            + insert-smoke-dist + fault-smoke
-#                            + grow-steady-smoke
+#                            + grow-steady-smoke + serve-smoke
 
 PY := PYTHONPATH=src python
 WRITE :=
@@ -55,7 +65,7 @@ PYTEST_ARGS :=
 
 .PHONY: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
 	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke \
-	traffic-bench traffic-bench-dist dynamic-bench-dist check
+	serve-smoke traffic-bench traffic-bench-dist dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -90,6 +100,10 @@ grow-steady-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --grow-steady-smoke $(WRITE)
 
+serve-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --serve-smoke $(WRITE)
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -102,4 +116,5 @@ dynamic-bench-dist:
 	$(PY) -m benchmarks.kernel_bench --dynamic $(WRITE)
 
 check: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
-	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke
+	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke \
+	serve-smoke

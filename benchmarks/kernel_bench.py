@@ -24,6 +24,11 @@ Usage:
       growth gate: the sentinel's 20x5% schedule with jax_log_compiles
       captured — zero XLA compiles after slice 1 (delta-overlay store)
       and resident == cold bit-equality per slice, both insert policies
+  python -m benchmarks.kernel_bench --serve-smoke   # online-serving gate:
+      continuous-batching front-end over the partitioned service, all
+      three arrival processes — online == offline bit-exactness (crash
+      legs included), zero XLA compiles on every admission tick, and a
+      serve-latency.json report (p50/p99 per op class)
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
@@ -708,6 +713,200 @@ def grow_steady_smoke(scale: Optional[float] = None, slices: int = 20):
     return rows, update
 
 
+def serve_smoke(scale: Optional[float] = None, n_ops: int = 96):
+    """Online-serving smoke on a mesh over every visible device (the
+    Makefile target forces 8 CPU devices) — the ISSUE 9 acceptance gate.
+
+    For each arrival process (uniform, bursty, skewed-hot) the online
+    front-end serves a seeded client stream in fixed-slot admission
+    batches with background DiDiC maintenance interleaved, twice: once
+    uninterrupted and once under an injected fault plan (admission-loop
+    crashes at both ``serve:*`` sites plus a failed shard window). Gates,
+    each fatal:
+
+    * **bit-exactness** — online-served counters (per-op per class,
+      per-partition, per-vertex) equal :func:`offline_replay` of the
+      server's materialized epoch record, AND the crash leg equals the
+      uninterrupted leg on all four counters and every latency sample;
+    * **zero recompiles** — with every jitted program prewarmed before
+      the capture (the explicit warm-up), *no* XLA compile may fire on
+      any admission tick of any leg. Op classes are ``filesystem`` and
+      ``twitter``: their batched/sharded replays are fixed-shape in op
+      *count* only, so distinct batch contents cannot retrace (the GIS
+      window solver pads to content-dependent size buckets and would).
+
+    Returns ``(rows, update)``; ``update`` is the ``serving`` section for
+    BENCH_traffic.json (throughput + p50/p99 per op class per process).
+    The caller always writes the latency report artifact.
+    """
+    from repro.analysis.recompile import capture_compiles, classify
+    from repro.core.didic import DidicConfig, didic_partition, didic_refine
+    from repro.core.fault import FaultPlan, SimulatedCrash
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.online import (
+        BackgroundMaintenance,
+        OnlineServer,
+        inert_pad_op,
+        make_arrival_stream,
+        offline_replay,
+    )
+    from repro.core.traffic import OpLog, execute_ops
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    scale = 0.002 if scale is None else scale
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    k, slots = 4, 8
+    classes = ("filesystem", "twitter")
+    # The filesystem graph links files back to their parents, so it has
+    # no out-degree-0 vertex for the twitter inert pad — append one
+    # isolated parking vertex (typed FS_ORG, degree 0: never a generator
+    # start, never sampled, zero on every counter) before partitioning.
+    graph = datasets.load("filesystem", scale=scale, seed=1).with_vertices(1)
+    cfg = DidicConfig(k=k, iterations=8, primary_steps=3, secondary_steps=3,
+                      smooth_cap=16)
+    parts0, _ = didic_partition(graph, cfg, seed=0)
+
+    streams = {
+        p: make_arrival_stream(graph, classes, n_ops, seed=0, process=p)
+        for p in ("uniform", "bursty", "skewed_hot")
+    }
+    t_counts = streams["uniform"][1]
+
+    # Explicit warm-up: trace every jitted program the serving loop can
+    # reach (sharded replay + degraded batched fallback per class at the
+    # fixed batch shape, and the maintenance refine) on the shared graph,
+    # so the capture below demands strict zero compiles.
+    for cls in classes:
+        ps, pe = inert_pad_op(graph, cls)
+        t_l, t_pg = t_counts[cls]
+        warm = OpLog(cls, np.full(slots, ps, np.int64),
+                     np.full(slots, pe, np.int64), t_l=t_l, t_pg=t_pg)
+        replay_sharded(graph, warm, mesh, parts0, k, resident=False)
+        execute_ops(graph, warm, parts0, k, engine="batched")
+    didic_refine(graph, parts0, cfg, state=None, iterations=1, seed=0)
+
+    def run_leg(process: str, plan=None):
+        svc = PartitionedGraphService(graph, k, didic=cfg, mesh=mesh,
+                                      maintenance="shared")
+        svc.partition_with(parts0.copy())
+        svc.fault_plan = plan
+        server = OnlineServer(
+            svc, batch_slots=slots, queue_limit=32,
+            maintenance=BackgroundMaintenance(svc, every=4,
+                                              budget_iterations=1,
+                                              round_iterations=2),
+            slo={cls: 6 for cls in classes},
+        )
+        arrivals, tc = streams[process]
+        server.submit_stream(arrivals, tc)
+        t_all = time.perf_counter()
+        with capture_compiles() as cap:
+            while not server.drained:
+                if server.clock >= 10_000:
+                    raise AssertionError(f"{process}: stream never drained")
+                cap.slice_label = f"tick{server.clock}"
+                t0 = time.perf_counter()
+                try:
+                    server.tick()
+                except SimulatedCrash:
+                    svc.logger.record_recovery(time.perf_counter() - t0)
+        if cap.events:
+            noisy = [r.to_json() for r in classify(cap.events, warmup_labels=())]
+            raise AssertionError(
+                f"{process}{'+faults' if plan else ''}: {len(cap.events)} XLA "
+                f"compiles during admission ticks — serving must be "
+                f"steady-state after warm-up: {noisy[:4]}"
+            )
+        return server.result(), time.perf_counter() - t_all, svc
+
+    rows: List[str] = []
+    update: Dict[str, Dict] = {}
+    for process in ("uniform", "bursty", "skewed_hot"):
+        clean, wall, _ = run_leg(process)
+        plan = (FaultPlan()
+                .crash(3, site="serve:admit")
+                .crash(5, site="serve:commit")
+                .fail_shard(1, shard=shards - 1, slices=4))
+        crashed, _, csvc = run_leg(process, plan=plan)
+
+        # -- gate: crash leg == clean leg on everything served ---------------
+        if crashed.health["recoveries"] != 2:
+            raise AssertionError(
+                f"{process}: expected 2 crash recoveries, got "
+                f"{crashed.health['recoveries']}"
+            )
+        for cls in classes:
+            if not np.array_equal(clean.per_op[cls], crashed.per_op[cls]):
+                raise AssertionError(
+                    f"{process}: crash leg per-op counters differ on {cls}"
+                )
+        if not np.array_equal(clean.per_partition, crashed.per_partition):
+            raise AssertionError(f"{process}: crash leg per_partition differs")
+        if not np.array_equal(clean.per_vertex, crashed.per_vertex):
+            raise AssertionError(f"{process}: crash leg per_vertex differs")
+        if clean.latency != crashed.latency:
+            raise AssertionError(f"{process}: crash leg latency report differs")
+
+        # -- gate: online == offline replay of the epoch record --------------
+        for leg_name, leg in (("clean", clean), ("crash", crashed)):
+            off_op, off_pp, off_pv = offline_replay(graph, leg.epochs, k,
+                                                    t_counts)
+            for cls in classes:
+                if not np.array_equal(leg.per_op[cls], off_op[cls]):
+                    raise AssertionError(
+                        f"{process}/{leg_name}: online != offline per-op "
+                        f"counters on {cls} — smoke void"
+                    )
+            if not np.array_equal(leg.per_partition, off_pp):
+                raise AssertionError(
+                    f"{process}/{leg_name}: online != offline per_partition"
+                )
+            if not np.array_equal(leg.per_vertex, off_pv):
+                raise AssertionError(
+                    f"{process}/{leg_name}: online != offline per_vertex"
+                )
+
+        per_class = {}
+        for cls in classes:
+            lat = clean.latency[cls]
+            per_class[cls] = {
+                "count": lat["count"],
+                "queue_wait_p50": lat["queue_wait_p50"],
+                "queue_wait_p99": lat["queue_wait_p99"],
+                "total_p50": lat["total_p50"],
+                "total_p99": lat["total_p99"],
+                "slo_budget": lat.get("slo_budget"),
+            }
+        update[process] = {
+            "ops": clean.ops_served,
+            "batches": clean.batches_served,
+            "ticks": clean.ticks,
+            "epochs": len(clean.epochs),
+            "shards": shards,
+            "batch_slots": slots,
+            "throughput_ops_per_s": round(clean.ops_served / wall, 1),
+            "slo_violations": clean.health["slo_violations"],
+            "classes": per_class,
+            "crash_leg": {
+                "recoveries": crashed.health["recoveries"],
+                "degraded_replays": crashed.health["degraded_replays"],
+            },
+        }
+        rows.append(
+            f"serve/{process}/ops,{clean.ops_served},"
+            f"{clean.batches_served} batches over {clean.ticks} ticks "
+            f"({len(clean.epochs)} parts epochs, shards={shards}, "
+            f"0 compiles on every tick, online == offline bit-exact, "
+            f"crash leg bit-exact with {crashed.health['recoveries']} "
+            f"recoveries / {crashed.health['degraded_replays']} degraded "
+            "replays)"
+        )
+    return rows, update
+
+
 def fault_smoke(scale: Optional[float] = None) -> List[str]:
     """Fault-tolerance smoke on a mesh over every visible device (the
     Makefile target forces 8 CPU devices) — the ISSUE 6 acceptance gate.
@@ -858,6 +1057,11 @@ def main() -> None:
                          "schedule, zero XLA compiles after slice 1 and "
                          "resident == cold bit-equality per slice, both "
                          "insert policies")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="online-serving gate: all three arrival processes, "
+                         "online == offline bit-exactness, crash-leg "
+                         "bit-exactness, zero XLA compiles on every "
+                         "admission tick; writes serve-latency.json")
     # None = per-mode default (0.004 everywhere except the insert smoke,
     # which pins 0.002 — see insert_smoke); an explicit value wins always.
     ap.add_argument("--scale", type=float, default=None)
@@ -922,6 +1126,19 @@ def main() -> None:
             # numbers (and any sibling sections) intact.
             dyn.setdefault("growth_steady", {}).update(update)
             write_baseline({"dynamic": dyn})
+    elif args.serve_smoke:
+        rows, update = serve_smoke(scale=args.scale)
+        for row in rows:
+            print(row)
+        # Always write the latency report artifact (lint-report style:
+        # cwd-relative, uploaded by CI) — smoke runs included, so every
+        # CI run carries the measured serving latencies.
+        with open("serve-latency.json", "w") as f:
+            json.dump({"serving": update}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print("# latency report written to serve-latency.json")
+        if args.write_baseline:
+            write_baseline({"serving": update})
     elif args.dynamic_resident_smoke:
         for row in dynamic_resident_smoke(scale=scale):
             print(row)

@@ -30,6 +30,14 @@ sum float32 in a different association (per-shard segment-sums + psum vs
 one global segment-sum), so results are quality-equivalent, not
 bit-equal; callers needing bit-parity with the host loop use the
 single-device refine (see ``PartitionedGraphService(maintenance=...)``).
+
+Store-backed graphs (the delta-overlay growth path) refine through a
+**capacity mesh program** instead: halo tables padded to the store's
+capacity, cached on the store lineage with the jitted step taking them
+as arguments (:class:`_CapacityMeshProgram`), so vertex growth within a
+standing capacity re-pads host-side and retraces nothing — the same
+contract as ``get_replayer``/``get_engine`` and the single-device
+overlay step of :mod:`repro.core.didic`.
 """
 
 from __future__ import annotations
@@ -42,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.didic import (
+    _BENEFIT,
+    _INIT_LOAD,
     DidicConfig,
     DidicState,
     _init_state,
@@ -81,27 +91,6 @@ def _mesh_program(graph: Graph, mesh, data_axes: Tuple[str, ...],
     n_shards = 1
     for a in data_axes:
         n_shards *= mesh.shape[a]
-
-    # Store-backed graphs key the program on the store (which outlives any
-    # one grown graph object) tagged with the structural extents: a pure
-    # partition move reuses the program across graph objects, growth
-    # rebuilds it lazily. The halo layout itself is extent-shaped (block
-    # tables track n/edges), so a growth rebuild does retrace — the
-    # sharded maintenance mode trades that for mesh scalability and sits
-    # outside the steady-state sentinel bar (which runs "shared" mode).
-    store = graph.store
-    if store is not None and bootstrap_parts is None:
-        key = ("mesh_program", mesh, tuple(data_axes))
-        ent = store.caches.get(key)
-        extents = (graph.n_nodes, graph.n_edges)
-        if ent is not None and ent[0] == extents:
-            return ent[1]
-        out = _mesh_program_build(
-            graph, mesh, data_axes, n_shards, None,
-            build_halo_program, make_partitioned_spmm, build_layout,
-        )
-        store.caches[key] = (extents, out)
-        return out
 
     cache = graph.__dict__.setdefault("_didic_mesh_cache", {})
     key = (mesh, tuple(data_axes)) if bootstrap_parts is None else None
@@ -149,6 +138,288 @@ def _sharded_state(layout, k: int, parts_padded: np.ndarray, mesh, data_axes):
         parts=jax.device_put(state.parts, shard1),
         beta=state.beta,
     )
+
+
+# ===========================================================================
+# Capacity-keyed mesh program (ISSUE 9 satellite): store-backed graphs run
+# sharded maintenance through halo tables padded to the store's *capacity*,
+# cached on the store lineage like ``get_replayer``/``get_engine`` — so
+# delta-overlay growth re-pads host-side but never rebuilds the layout and
+# never retraces the jitted step. The legacy extent-shaped program above
+# remains for storeless graphs and explicit bootstraps.
+# ===========================================================================
+_MESH_OVERLAY_STEP_CACHE: dict = {}
+
+
+class _CapacityMeshProgram:
+    """Halo tables + DiDiC coefficients at capacity shapes for one store.
+
+    The layout places the store's full capacity (``n_cap`` rows) linearly
+    over the shards once; every grown graph sharing the store adopts into
+    the same shapes: edge tables are right-padded with masked entries
+    (weight/mask 0 → zero contribution), the coefficient degree and the
+    live-row mask are scattered over the padded rows, and ``ghost_src``
+    is re-strided from the fresh program's boundary width to the fixed
+    capacity width. Dead rows are inert by construction — no live edge
+    references them, their coefficient degree is 0, and the overlay step
+    masks every reduction to the live rows.
+    """
+
+    def __init__(self, store, mesh, data_axes: Tuple[str, ...], n_shards: int):
+        from types import SimpleNamespace
+
+        from repro.distributed.placement import build_layout
+
+        boot = partitioners.linear_partition(store.n_cap, n_shards)
+        # build_layout reads the graph only for n_nodes — a capacity shim
+        # lays out n_cap rows without materializing a capacity graph.
+        self.layout = build_layout(
+            SimpleNamespace(n_nodes=store.n_cap), boot, n_shards
+        )
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.e_max = max(1, 2 * store.e_cap)  # symmetrized edges ≤ 2·e_cap
+        self.b_max = max(1, self.layout.block)
+        self.g_max = max(1, min(self.e_max, (n_shards - 1) * self.b_max))
+        self.extents: Optional[Tuple[int, int]] = None
+        self.tables = None
+        self.degc = None
+        self.live = None
+
+    def adopt(self, graph: Graph) -> None:
+        """Re-pad the tables for ``graph``'s extents (no-op when current)."""
+        extents = (graph.n_nodes, graph.n_edges)
+        if extents == self.extents:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.halo import build_halo_program
+
+        layout = self.layout
+        S = layout.n_shards
+        prog = build_halo_program(
+            graph, layout, edge_weights=_distributed_coefficients(graph)
+        )
+        if prog.e_max > self.e_max or prog.g_max > self.g_max:
+            raise ValueError(
+                f"graph exceeds the capacity program "
+                f"(edges {prog.e_max} > {self.e_max} or ghosts "
+                f"{prog.g_max} > {self.g_max})"
+            )
+
+        def pad(tab: np.ndarray, width: int, fill) -> np.ndarray:
+            out = np.full((S, width), fill, dtype=tab.dtype)
+            out[:, : tab.shape[1]] = tab
+            return out
+
+        # ghost_src indexes the flattened [S · b_max] all-gather; restride
+        # from the fresh program's boundary width to the capacity width.
+        g_shard = prog.ghost_src // prog.b_max
+        g_pos = prog.ghost_src % prog.b_max
+        ghost_src = (g_shard * self.b_max + g_pos).astype(np.int32)
+
+        n = graph.n_nodes
+        rows = layout.old_to_new[:n]
+        s, _, _ = graph.undirected
+        ce = _distributed_coefficients(graph)
+        degc_host = np.zeros(n, dtype=np.float64)
+        np.add.at(degc_host, s, ce)
+        degc = np.zeros(layout.padded_n, dtype=np.float32)
+        degc[rows] = degc_host.astype(np.float32)
+        live = np.zeros(layout.padded_n, dtype=bool)
+        live[rows] = True
+
+        mesh, axes = self.mesh, self.data_axes
+        tab_shard = NamedSharding(mesh, P(axes, None))
+        row_shard = NamedSharding(mesh, P(axes))
+        self.tables = tuple(
+            jax.device_put(jnp.asarray(t), tab_shard)
+            for t in (
+                pad(prog.edge_src, self.e_max, 0),
+                pad(prog.edge_dst, self.e_max, 0),
+                pad(prog.edge_w, self.e_max, 0.0),
+                pad(prog.edge_mask, self.e_max, 0.0),
+                pad(prog.boundary_idx, self.b_max, 0),
+                pad(ghost_src, self.g_max, 0),
+            )
+        )
+        self.degc = jax.device_put(jnp.asarray(degc), row_shard)
+        self.live = jax.device_put(jnp.asarray(live), row_shard)
+        self.extents = extents
+
+
+def _capacity_mesh_program(graph: Graph, mesh,
+                           data_axes: Tuple[str, ...]) -> _CapacityMeshProgram:
+    """The store-lineage cache: one program per (store, mesh, axes), with
+    no extents in the key — growth adopts, only a compaction (a new store
+    object, hence a fresh ``caches`` dict) rebuilds."""
+    store = graph.store
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    key = ("mesh_program", mesh, tuple(data_axes))
+    prog = store.caches.get(key)
+    if prog is None:
+        prog = _CapacityMeshProgram(store, mesh, data_axes, n_shards)
+        store.caches[key] = prog
+    prog.adopt(graph)
+    return prog
+
+
+def _make_mesh_overlay_step(mesh, data_axes: Tuple[str, ...],
+                            config: DidicConfig, block: int):
+    """Jitted sharded overlay iteration with the graph as arguments.
+
+    The mesh twin of :func:`repro.core.didic._make_overlay_step`: halo
+    tables, coefficient degrees, the live mask, and the live count are
+    arguments, so one compiled program (module-cached per mesh/axes/
+    config/block) serves every grown graph sharing a capacity. Numerics
+    are the overlay live-masking on top of the halo-exchange SpMM — the
+    sharded pass stays quality-equivalent, not bit-equal, to the
+    single-device refine (different float32 reduction association).
+    """
+    cache_key = (mesh, tuple(data_axes), config, block)
+    step = _MESH_OVERLAY_STEP_CACHE.get(cache_key)
+    if step is not None:
+        return step
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    k = config.k
+    spec_x = P(data_axes, None)
+    spec_tab = P(data_axes, None)
+
+    def body(x_l, esrc, edst, ew, emask, bidx, gsrc):
+        x_l = x_l.reshape(block, -1)
+        boundary = x_l[bidx[0]]
+        all_b = jax.lax.all_gather(boundary, data_axes, tiled=False)
+        all_b = all_b.reshape(-1, x_l.shape[1])
+        ghosts = all_b[gsrc[0]]
+        xx = jnp.concatenate([x_l, ghosts], axis=0)
+        contrib = (ew[0] * emask[0])[:, None] * xx[esrc[0]]
+        return jax.ops.segment_sum(contrib, edst[0], num_segments=block)
+
+    smapped = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_x,) + (spec_tab,) * 6,
+        out_specs=spec_x,
+        check_rep=False,
+    )
+
+    @jax.jit
+    def step(w, l, parts, beta, key, smooth_steps,
+             esrc, edst, ew, emask, bidx, gsrc, degc, live, live_n):
+        n_rows = w.shape[0]
+        livef = live.astype(w.dtype)
+
+        def spmm(x):
+            return smapped(x, esrc, edst, ew, emask, bidx, gsrc)
+
+        onehot = (
+            parts[:, None] == jnp.arange(k, dtype=parts.dtype)[None, :]
+        ).astype(w.dtype) * livef[:, None]
+        l = (_INIT_LOAD * onehot + 0.01) * livef[:, None]
+        benefit = jnp.where(onehot > 0, _BENEFIT, 1.0).astype(w.dtype)
+
+        def secondary(l, _):
+            lb = l / benefit
+            return l - degc[:, None] * lb + spmm(lb), None
+
+        def primary(carry, _):
+            w, l = carry
+            l, _ = jax.lax.scan(secondary, l, None, length=config.secondary_steps)
+            w_new = w + l - degc[:, None] * w + spmm(w)
+            return (w_new, l), None
+
+        (w, l), _ = jax.lax.scan(primary, (w, l), None, length=config.primary_steps)
+        livef_n = live_n.astype(w.dtype)
+        w = w / jnp.maximum(w.sum() / (livef_n * k), 1e-6)
+
+        safe_deg = jnp.maximum(degc, 1e-6)
+
+        def smooth_body(_, x):
+            return 0.5 * x + 0.5 * spmm(x) / safe_deg[:, None]
+
+        smoothed = jax.lax.fori_loop(0, smooth_steps, smooth_body, w)
+
+        tgt = livef_n / k
+
+        def bal(_, beta):
+            p = jnp.argmax(smoothed * beta[None, :], axis=1)
+            sizes = jnp.bincount(
+                jnp.where(live, p, k), length=k + 1
+            )[:k].astype(w.dtype)
+            return jnp.clip(
+                beta * (tgt / jnp.maximum(sizes, 1.0)) ** config.balance_exp,
+                1e-3, 1e3,
+            )
+
+        beta = jax.lax.fori_loop(0, config.balance_iters, bal, beta)
+        new_parts = jnp.argmax(smoothed * beta[None, :], axis=1).astype(jnp.int32)
+        commit = jax.random.bernoulli(key, config.commit_prob, (n_rows,))
+        parts = jnp.where(commit & live, new_parts, parts)
+        return w, l, parts, beta
+
+    _MESH_OVERLAY_STEP_CACHE[cache_key] = step
+    return step
+
+
+def _refine_capacity(
+    graph: Graph,
+    parts: np.ndarray,
+    config: DidicConfig,
+    mesh,
+    data_axes: Tuple[str, ...],
+    state: Optional[DidicState],
+    iterations: int,
+    seed: int,
+) -> Tuple[np.ndarray, DidicState]:
+    """Sharded maintenance through the capacity mesh program."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    prog = _capacity_mesh_program(graph, mesh, data_axes)
+    layout = prog.layout
+    if config.k % layout.n_shards:
+        raise ValueError(
+            f"k={config.k} must be a multiple of shards={layout.n_shards}"
+        )
+    n = graph.n_nodes
+    rows = layout.old_to_new[:n]
+    parts_pad = np.zeros(layout.padded_n, dtype=np.int32)
+    parts_pad[rows] = np.asarray(parts, dtype=np.int32)
+    row_shard = NamedSharding(mesh, P(data_axes))
+    mat_shard = NamedSharding(mesh, P(data_axes, None))
+    parts_j = jax.device_put(jnp.asarray(parts_pad), row_shard)
+    if state is None or state.w.shape[0] != layout.padded_n:
+        live = np.zeros(layout.padded_n, dtype=bool)
+        live[rows] = True
+        onehot = (
+            parts_pad[:, None] == np.arange(config.k, dtype=np.int32)[None, :]
+        ) & live[:, None]
+        load = jax.device_put(
+            jnp.asarray(_INIT_LOAD * onehot.astype(np.float32)), mat_shard
+        )
+        state = DidicState(
+            w=load, l=load, parts=parts_j,
+            beta=jnp.ones((config.k,), jnp.float32),
+        )
+    w, l, beta = state.w, state.l, state.beta
+    parts_cur = parts_j
+
+    step = _make_mesh_overlay_step(mesh, tuple(data_axes), config, layout.block)
+    schedule = _smooth_schedule(config, iterations, start_wide=True)
+    key = jax.random.PRNGKey(seed)
+    live_n = jnp.int32(n)
+    for it in range(iterations):
+        key, sub = jax.random.split(key)
+        w, l, parts_cur, beta = step(
+            w, l, parts_cur, beta, sub, jnp.int32(schedule[it]),
+            *prog.tables, prog.degc, prog.live, live_n,
+        )
+    new_state = DidicState(w=w, l=l, parts=parts_cur, beta=beta)
+    return np.asarray(parts_cur)[rows].copy(), new_state
 
 
 def didic_partition_distributed(
@@ -208,6 +479,14 @@ def didic_refine_distributed(
     Dynamic experiment never moves the diffusion system off the mesh.
     """
     config = dataclasses.replace(config, commit_prob=1.0)
+    if graph.store is not None:
+        # Store-backed graphs run the capacity program: cached on the
+        # store lineage, so growth under a standing capacity reuses the
+        # layout, the halo tables' shapes, and the compiled step.
+        return _refine_capacity(
+            graph, parts, config, mesh, tuple(data_axes),
+            state, iterations, seed,
+        )
     layout, spmm_halo, degc = _mesh_program(graph, mesh, data_axes)
     if config.k % layout.n_shards:
         raise ValueError(

@@ -36,6 +36,16 @@ fuses the legs into one mesh-native pipeline:
 :class:`~repro.core.framework.PartitionedGraphService`; the service's
 ``mesh`` decides host vs device for every leg behind the same interface.
 
+The maintenance leg is decomposed (ISSUE 9): the service exposes
+``propose_maintenance`` (run refinement iterations on a working map,
+carrying the resumable DiDiC state) and ``commit_migration`` (adopt a
+proposal through the Migration-Scheduler) separately, and
+``maintain_migrate`` — which this runtime still calls, bit-identically —
+is their stop-the-world composition. The online front-end
+(:mod:`repro.core.online`) uses the halves to run the same maintenance
+as *background* work, budgeted iterations interleaved between admission
+batches, while the service keeps serving the committed map.
+
 Parity contract: with ``maintenance="shared"`` (both engines calling the
 same single-device DiDiC refine) the device runtime reproduces the
 host-loop reference **bit-identically** on all four traffic counters for

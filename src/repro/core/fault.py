@@ -64,6 +64,13 @@ test that schedules a fault at it; remove in reverse order.
 ``maintain``           start of a maintenance attempt (timeout events
                        fire here; crashes are also honoured)
 ``replay``             start of an evaluation-log replay
+``serve:admit``        online admission loop, top of a tick — before
+                       arrivals are pulled or any server state mutates,
+                       so a supervised retry of the tick is bit-identical
+``serve:commit``       online admission loop, after the batch replay and
+                       before served counters fold into the server
+                       aggregates — the replay is pure, so a retried
+                       tick re-serves the identical batch and folds once
 ====================== ====================================================
 """
 
@@ -116,6 +123,16 @@ FAULT_SITES: Dict[str, str] = {
         "the deterministic DiDiC pass, so a retry is bit-identical"
     ),
     "replay": "start of an evaluation-log replay",
+    "serve:admit": (
+        "online admission loop, top of a tick — before arrivals are "
+        "pulled or any server state mutates, so a supervised retry of "
+        "the tick is bit-identical"
+    ),
+    "serve:commit": (
+        "online admission loop, after the batch replay and before served "
+        "counters fold into the server aggregates — the replay is pure, "
+        "so a retried tick re-serves the identical batch and folds once"
+    ),
 }
 
 

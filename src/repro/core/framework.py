@@ -129,7 +129,10 @@ class InsertPartitioner:
 class RuntimeLogger:
     """Runtime-Logging component: accumulates InstanceInfo per partition,
     plus the service-health counters of the fault-tolerance layer
-    (degraded replays, maintenance retries, recovery time)."""
+    (degraded replays, maintenance retries, recovery time) and the online
+    front-end's latency subsystem (per-op-class queue-wait/service-time
+    samples on the server's deterministic simulated clock — integer ticks,
+    never wall-clock reads, which repro-lint would reject)."""
 
     def __init__(self, k: int):
         self.k = k
@@ -148,6 +151,14 @@ class RuntimeLogger:
         self.maintenance_retry_time_s = 0.0
         self.recoveries = 0
         self.recovery_time_s = 0.0
+        # Latency subsystem. Samples are Python ints (simulated-clock
+        # ticks), accumulated in unbounded Python arithmetic so
+        # long-horizon counters cannot wrap (the int64-overflow bug class);
+        # SLO budgets survive reset — they are configuration, not state.
+        self.slo_violations = 0
+        self._latency: Dict[str, Dict[str, List[int]]] = {}
+        if not hasattr(self, "_slo_budgets"):
+            self._slo_budgets: Dict[str, int] = {}
 
     def observe_structure(self, graph: Graph, parts: np.ndarray) -> None:
         counts = metrics.partition_counts(graph, parts, self.k)
@@ -202,6 +213,62 @@ class RuntimeLogger:
         self.recoveries += 1
         self.recovery_time_s += float(elapsed_s)
 
+    # -- latency subsystem (online front-end) --------------------------------
+    def set_slo(self, op_class: str, budget_ticks: int) -> None:
+        """Set a per-op-class SLO budget: an op violates when its total
+        latency (queue wait + service time, in simulated-clock ticks)
+        exceeds the budget."""
+        self._slo_budgets[op_class] = int(budget_ticks)
+
+    def record_latency(self, op_class: str, queue_wait: int,
+                       service_time: int) -> None:
+        """Record one served op's latency sample (simulated-clock ticks)."""
+        wait, service = int(queue_wait), int(service_time)
+        bucket = self._latency.setdefault(op_class, {"wait": [], "service": []})
+        bucket["wait"].append(wait)
+        bucket["service"].append(service)
+        budget = self._slo_budgets.get(op_class)
+        if budget is not None and wait + service > budget:
+            self.slo_violations += 1
+
+    @staticmethod
+    def _percentile(samples: List[int], q: float) -> int:
+        """Nearest-rank percentile: ``sorted[ceil(q/100 * n) - 1]``.
+
+        Exact on integer tick samples — no interpolation, so p50 of a
+        single sample is that sample and tied values report the tie."""
+        n = len(samples)
+        if n == 0:
+            raise ValueError("percentile of empty sample set")
+        rank = max(1, -(-int(q * n) // 100))  # ceil(q*n/100), floor 1
+        return sorted(samples)[rank - 1]
+
+    def latency_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-op-class latency summary on the simulated clock (ticks)."""
+        report: Dict[str, Dict[str, float]] = {}
+        for cls, bucket in sorted(self._latency.items()):
+            waits, services = bucket["wait"], bucket["service"]
+            totals = [w + s for w, s in zip(waits, services)]
+            n = len(waits)
+            report[cls] = {
+                "count": n,
+                "queue_wait_p50": self._percentile(waits, 50),
+                "queue_wait_p95": self._percentile(waits, 95),
+                "queue_wait_p99": self._percentile(waits, 99),
+                "queue_wait_max": max(waits),
+                "queue_wait_mean": sum(waits) / n,
+                "total_p50": self._percentile(totals, 50),
+                "total_p95": self._percentile(totals, 95),
+                "total_p99": self._percentile(totals, 99),
+                "total_max": max(totals),
+                "total_mean": sum(totals) / n,
+                "service_mean": sum(services) / n,
+            }
+            budget = self._slo_budgets.get(cls)
+            if budget is not None:
+                report[cls]["slo_budget"] = budget
+        return report
+
     def health_report(self) -> Dict[str, float]:
         return {
             "degraded_replays": self.degraded_replays,
@@ -210,6 +277,7 @@ class RuntimeLogger:
             "maintenance_retry_time_s": self.maintenance_retry_time_s,
             "recoveries": self.recoveries,
             "recovery_time_s": self.recovery_time_s,
+            "slo_violations": self.slo_violations,
         }
 
     def load_balance_cv(self) -> Dict[str, float]:
@@ -478,26 +546,40 @@ class PartitionedGraphService:
         )
         self.logger.observe_structure(self.graph, self.parts)
 
-    def maintain_migrate(self, scheduler: MigrationScheduler, step: int,
-                         iterations: int = 1) -> int:
-        """Maintenance pass applied through the Migration-Scheduler.
+    def propose_maintenance(self, iterations: int = 1,
+                            parts: Optional[np.ndarray] = None) -> np.ndarray:
+        """Run a maintenance refinement and return the proposed map
+        without adopting it.
 
-        Runtime partitioning proposes a new map; the scheduler turns the
-        delta into per-target migration commands (recorded against the
-        logical ``step``) and applies them. Returns the number of
-        migrated vertices — the dynamic experiment's migration-volume
-        metric.
-
-        If the scheduler rejects a non-trivial plan (below its move
-        threshold), the partitioner's diffusion state is rolled back too:
-        keeping state from a refinement that was never adopted would make
-        later maintenance diffuse from a map the service never served.
+        ``parts`` defaults to the served map; the online front-end passes
+        its background round's working copy so a multi-tick budgeted
+        round diffuses from its own intermediate map while the service
+        keeps serving the committed one. Advances ``runtime.state`` — a
+        caller that may discard the proposal snapshots the state first
+        and hands it to :meth:`commit_migration` for rollback.
         """
-        prev_state = self.runtime.state
-        new_parts = self._maintain_attempt(
-            lambda: self.runtime.maintain(self.graph, self.parts,
+        src = self.parts if parts is None else parts
+        return self._maintain_attempt(
+            lambda: self.runtime.maintain(self.graph, src,
                                           iterations=iterations)
         )
+
+    def commit_migration(self, scheduler: MigrationScheduler,
+                         new_parts: np.ndarray, step: int,
+                         prev_state=None) -> int:
+        """Adopt a proposed map through the Migration-Scheduler.
+
+        The scheduler turns the delta into per-target migration commands
+        (recorded against the logical ``step``) and applies them. Returns
+        the number of migrated vertices — the dynamic experiment's
+        migration-volume metric.
+
+        If the scheduler rejects a non-trivial plan (below its move
+        threshold), the partitioner's diffusion state is rolled back to
+        ``prev_state``: keeping state from a refinement that was never
+        adopted would make later maintenance diffuse from a map the
+        service never served.
+        """
         cmds = scheduler.plan(self.parts, new_parts.astype(np.int32), step=step)
         if not cmds and (self.parts != new_parts).any():
             self.runtime.state = prev_state
@@ -505,6 +587,18 @@ class PartitionedGraphService:
         self.parts = scheduler.apply(self.parts, cmds)
         self.logger.observe_structure(self.graph, self.parts)
         return int(sum(c.vertices.shape[0] for c in cmds))
+
+    def maintain_migrate(self, scheduler: MigrationScheduler, step: int,
+                         iterations: int = 1) -> int:
+        """Stop-the-world maintenance pass applied through the
+        Migration-Scheduler: propose then commit in one call (the dynamic
+        experiment's per-slice cycle). The online front-end uses the two
+        halves separately to spread the proposal over budgeted background
+        ticks (:class:`repro.core.online.BackgroundMaintenance`)."""
+        prev_state = self.runtime.state
+        new_parts = self.propose_maintenance(iterations=iterations)
+        return self.commit_migration(scheduler, new_parts, step,
+                                     prev_state=prev_state)
 
     # -- workload -----------------------------------------------------------
     def run_ops(self, ops: OpLog, engine: str = "auto",
@@ -746,6 +840,16 @@ class PartitionedGraphService:
             # populate the store-cached coefficient tables.
             didic_refine(
                 self.graph, self.parts, self.runtime.config,
+                state=None, iterations=1, seed=0,
+            )
+        else:
+            # Same idea for sharded maintenance: trace the capacity-shaped
+            # mesh program (store-lineage-cached) during warmup.
+            from repro.core.didic_distributed import didic_refine_distributed
+
+            didic_refine_distributed(
+                self.graph, self.parts, self.runtime.config,
+                self.runtime.mesh, self.runtime.data_axes,
                 state=None, iterations=1, seed=0,
             )
 

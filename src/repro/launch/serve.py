@@ -1,11 +1,16 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Spins up the batched serving engine (KV cache + continuous batching) for a
-reduced-config LM arch, or the DIN scoring path for recsys, and reports
-throughput. Full-config decode shards are exercised via the dry-run.
+reduced-config LM arch, the DIN scoring path for recsys, or the online
+graph request front-end (``--arch graph``: simulated clients over the
+partitioned graph service, fixed-slot admission batches, background DiDiC
+maintenance), and reports throughput. Full-config decode shards are
+exercised via the dry-run.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-34b --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch din --requests 4096
+    PYTHONPATH=src python -m repro.launch.serve --arch graph --requests 256 \
+        --arrival bursty
 """
 
 from __future__ import annotations
@@ -71,11 +76,60 @@ def serve_din(n_requests: int) -> None:
           f"{(time.perf_counter()-t0)*1e3:.1f} ms")
 
 
+def serve_graph(n_requests: int, arrival: str, seed: int = 0) -> None:
+    """Online graph serving: seeded clients → admission loop → report."""
+    from repro.core.didic import DidicConfig
+    from repro.core.framework import PartitionedGraphService
+    from repro.core.online import (
+        BackgroundMaintenance,
+        OnlineServer,
+        make_arrival_stream,
+    )
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    graph = datasets.load("gis", scale=0.002, seed=seed)
+    mesh = make_replay_mesh()
+    k = 4
+    svc = PartitionedGraphService(
+        graph, k, DidicConfig(k=k, iterations=12),
+        mesh=mesh, maintenance="shared",
+    ).partition_didic(seed=seed)
+    arrivals, t_counts = make_arrival_stream(
+        graph, ("gis_short", "gis_long"), n_requests,
+        seed=seed, process=arrival,
+    )
+    server = OnlineServer(
+        svc, batch_slots=8, queue_limit=64,
+        maintenance=BackgroundMaintenance(svc, every=8),
+        slo={"gis_short": 8, "gis_long": 16},
+    )
+    server.submit_stream(arrivals, t_counts)
+    t0 = time.perf_counter()
+    result = server.run()
+    dt = time.perf_counter() - t0
+    print(f"[serve] graph/{arrival}: {result.ops_served} ops in "
+          f"{result.batches_served} batches over {result.ticks} ticks, "
+          f"{result.ops_served / dt:.1f} ops/s")
+    for cls, rep in result.latency.items():
+        print(f"[serve]   {cls}: wait p50={rep['queue_wait_p50']} "
+              f"p99={rep['queue_wait_p99']} ticks "
+              f"(count={rep['count']})")
+    print(f"[serve]   slo_violations={result.health['slo_violations']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arrival", default="uniform",
+                    choices=("uniform", "bursty", "skewed_hot"),
+                    help="arrival process for --arch graph")
     args = ap.parse_args()
+
+    if args.arch == "graph":
+        serve_graph(args.requests, args.arrival)
+        return
 
     from repro.configs import get
 

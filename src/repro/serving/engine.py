@@ -1,15 +1,31 @@
-"""Batched serving engine with KV cache + continuous batching.
+"""Fixed-slot continuous batching — the repo's serving pattern reference.
 
-Serves the LM inference shapes: prefill (chunked), decode (one token per
-step for the whole active batch), and a request queue that back-fills
-finished slots (continuous batching à la vLLM/Orca, simplified to
-fixed-slot semantics so the jitted decode step never re-compiles).
+The pattern: a jitted step compiled for a **fixed number of batch slots**;
+a FIFO request queue back-fills slots the moment they free (continuous
+batching à la vLLM/Orca, simplified to fixed-slot semantics), and partial
+occupancy is padded rather than reshaped — so the compiled step sees one
+shape forever and never re-compiles, no matter how requests arrive.
+
+Two subsystems instantiate it:
+
+* **LM inference** (this module): slots hold decoding requests over a
+  shared KV cache; prefill runs as one jitted scan over the prompt and
+  decode emits one token per step for all active slots.
+* **Online graph serving** (:mod:`repro.core.online`): slots hold graph
+  ops packed into fixed-shape replay batches, with *inert no-op pads*
+  (zero-counter traversals) filling partial batches so the sharded
+  replay never recompiles across admission rounds.
+
+The LM engine is the original, CPU-sized reference of the pattern; the
+graph front-end ports the slot/backfill idea onto ``OpLog`` batches
+without wrapping this engine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +53,33 @@ class ServingEngine:
         self.cache = tf.init_kv_cache(cfg, batch_slots, max_len)
         self.positions = np.zeros(batch_slots, dtype=np.int64)
         self.active: List[Optional[Request]] = [None] * batch_slots
-        self.queue: List[Request] = []
+        # FIFO admission queue. A deque: admission pops from the head, and
+        # list.pop(0) is O(n) per admit — O(n²) across a long backlog.
+        self.queue: Deque[Request] = deque()
         self._decode = jax.jit(
             lambda params, token, cache, pos: tf.serve_step(cfg, params, token, cache, pos)
         )
+
+        def prefill(params, tokens, cache):
+            # One jitted scan over the prompt instead of one host→device
+            # dispatch per token; each scan step runs the identical
+            # serve_step arithmetic (token broadcast to every slot at
+            # position t), so the cache it produces is bit-identical to
+            # the old token-by-token loop. Traced once per prompt length.
+            positions = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+
+            def body(cache, tok_pos):
+                tok, pos = tok_pos
+                _, cache = tf.serve_step(
+                    cfg, params,
+                    jnp.full((batch_slots,), tok, jnp.int32), cache, pos,
+                )
+                return cache, None
+
+            cache, _ = jax.lax.scan(body, cache, (tokens, positions))
+            return cache
+
+        self._prefill = jax.jit(prefill)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -48,15 +87,13 @@ class ServingEngine:
     def _admit(self) -> None:
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.active[i] = req
-                # prefill token-by-token (CPU-sized; chunked prefill on TPU)
-                for t, tok in enumerate(req.prompt):
-                    _, self.cache = self._decode(
+                if len(req.prompt):
+                    self.cache = self._prefill(
                         self.params,
-                        jnp.full((self.slots,), int(tok), jnp.int32),
+                        jnp.asarray(np.asarray(req.prompt, dtype=np.int32)),
                         self.cache,
-                        jnp.int32(t),
                     )
                 self.positions[i] = len(req.prompt)
 

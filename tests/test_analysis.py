@@ -349,6 +349,14 @@ class TestRepoIsClean:
                             root=REPO_ROOT, rules=["determinism/wall-clock"])
         assert found == []
 
+    def test_online_admission_loop_is_simulated_clock_only(self):
+        """ISSUE 9: the online server's bit-exactness contract requires the
+        admission loop to run on the simulated tick clock — no wall-clock
+        reads anywhere in core/online."""
+        found = A.lint_file(REPO_ROOT / "src" / "repro" / "core" / "online.py",
+                            root=REPO_ROOT, rules=["determinism/wall-clock"])
+        assert found == []
+
 
 class TestSerializationDeterminismRegressions:
     """Regressions for determinism/unordered-serialization findings in

@@ -224,6 +224,76 @@ class TestDistributedDidic:
         assert res["cut_repaired2"] < res["cut_damaged"]
 
 
+_CAPACITY_MESH_PROGRAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    import jax
+    from repro.graphs import generators
+    from repro.core.didic import DidicConfig
+    from repro.core.didic_distributed import didic_refine_distributed
+    from repro.analysis.recompile import capture_compiles
+
+    mesh = jax.make_mesh((4,), ("data",))
+    g = generators.two_cluster(n_per=60, p_in=0.2, p_out=0.05, seed=0)
+    g.ensure_store()
+    cfg = DidicConfig(k=4, iterations=3)
+    parts = np.arange(g.n_nodes, dtype=np.int32) % 4
+
+    p1, state = didic_refine_distributed(g, parts, cfg, mesh, ("data",),
+                                         iterations=2, seed=0)
+    key = ("mesh_program", mesh, ("data",))
+    prog1 = g.store.caches.get(key)
+
+    # Grow within the store's capacity: the program must be reused and
+    # the post-growth refine must not compile anything new.
+    n0 = g.n_nodes
+    senders = np.array([0, 1, 2, 3, n0, n0 + 1, n0 + 2, n0 + 3])
+    receivers = np.array([n0, n0 + 1, n0 + 2, n0 + 3, 4, 5, 6, 7])
+    g2 = g.with_vertices(8, None, senders, receivers)
+    parts2 = np.concatenate([p1, np.arange(8, dtype=np.int32) % 4])
+    with capture_compiles() as cap:
+        cap.slice_label = "post-growth"
+        p2, _ = didic_refine_distributed(g2, parts2, cfg, mesh, ("data",),
+                                         state=state, iterations=2, seed=0)
+    prog2 = g2.store.caches.get(key)
+    p1b, _ = didic_refine_distributed(g, parts, cfg, mesh, ("data",),
+                                      iterations=2, seed=0)
+    print(json.dumps({
+        "carried_store": g2.store is g.store,
+        "cache_hit": prog2 is prog1,
+        "post_growth_compiles": len(cap.events),
+        "compile_names": sorted({e.name for e in cap.events})[:8],
+        "grown_len": int(p2.shape[0]),
+        "deterministic": bool(np.array_equal(p1, p1b)),
+        "valid_range": bool(0 <= p2.min() and p2.max() < 4),
+    }))
+""")
+
+
+class TestCapacityMeshProgram:
+    def test_mesh_maintenance_cache_hits_across_growth(self):
+        """ISSUE 9 satellite: ``didic_refine_distributed`` on a
+        store-backed graph runs the capacity mesh program — keyed on the
+        store lineage like ``get_replayer``/``get_engine`` — so growth
+        within capacity reuses the halo layout AND the compiled step:
+        zero XLA compiles on the post-growth refine (pre-fix the mesh
+        program was rebuilt per graph object and retraced)."""
+        out = subprocess.run(
+            [sys.executable, "-c", _CAPACITY_MESH_PROGRAM],
+            capture_output=True, text=True, timeout=500,
+            env={**__import__("os").environ, "PYTHONPATH": "src"},
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        assert res["carried_store"], "growth within capacity must carry the store"
+        assert res["cache_hit"], "capacity mesh program must be reused"
+        assert res["post_growth_compiles"] == 0, res["compile_names"]
+        assert res["grown_len"] == 128
+        assert res["deterministic"] and res["valid_range"]
+
+
 class TestExpertPlacement:
     def test_didic_colocates_correlated_experts(self):
         """Beyond-paper: DiDiC over the expert co-activation graph must

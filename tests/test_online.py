@@ -1,0 +1,408 @@
+"""Online request front-end tests (ISSUE 9).
+
+Covers the serving tentpole on the tier-1 single-device CPU: arrival
+stream determinism, inert-pad zero-counter guarantees (the fixed-slot
+batching invariant), online-vs-offline bit-exactness of every served
+counter, admission-queue bounds and order preservation, the latency
+subsystem (exact nearest-rank percentiles, reset semantics, unbounded
+integer accumulation, SLO violation counting), background maintenance
+round scheduling, and serving across structural growth. The mesh legs
+(sharded replay, zero-recompile sentinel, crash legs on all three
+arrival processes) run in ``make serve-smoke``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.didic import DidicConfig
+from repro.core.framework import PartitionedGraphService, RuntimeLogger
+from repro.core.online import (
+    ARRIVAL_PROCESSES,
+    BackgroundMaintenance,
+    OnlineServer,
+    inert_pad_op,
+    make_arrival_stream,
+    offline_replay,
+)
+from repro.core.traffic import OpLog, execute_ops
+from repro.graphs import datasets
+
+FAST_DIDIC = DidicConfig(k=4, iterations=6)
+CLASSES = ("filesystem", "twitter")
+
+
+def _graph():
+    # with_vertices(1): the filesystem graph links files back to their
+    # parents, so the twitter inert pad needs an appended parking vertex.
+    return datasets.load("filesystem", scale=0.001, seed=1).with_vertices(1)
+
+
+def _service(g, parts=None):
+    svc = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+    if parts is None:
+        svc.partition_didic(seed=0)
+    else:
+        svc.partition_with(parts.copy())
+    return svc
+
+
+# ===========================================================================
+# Arrival streams
+# ===========================================================================
+class TestArrivalStreams:
+    @pytest.mark.parametrize("process", ARRIVAL_PROCESSES)
+    def test_deterministic_and_sorted(self, process):
+        g = _graph()
+        a1, t1 = make_arrival_stream(g, CLASSES, 48, seed=3, process=process)
+        a2, t2 = make_arrival_stream(g, CLASSES, 48, seed=3, process=process)
+        assert a1 == a2 and t1 == t2
+        assert len(a1) == 48
+        for x, y in zip(a1, a1[1:]):
+            assert (x.arrival, x.seq) <= (y.arrival, y.seq)
+        # round-robin interleave: both classes present in every window
+        assert {op.op_class for op in a1} == set(CLASSES)
+
+    def test_seed_changes_stream(self):
+        g = _graph()
+        a1, _ = make_arrival_stream(g, CLASSES, 48, seed=0)
+        a2, _ = make_arrival_stream(g, CLASSES, 48, seed=1)
+        assert a1 != a2
+
+    def test_skewed_hot_concentrates_starts(self):
+        g = _graph()
+        n_hot = 4
+        uni, _ = make_arrival_stream(g, CLASSES, 200, seed=0,
+                                     process="uniform")
+        hot, _ = make_arrival_stream(g, CLASSES, 200, seed=0,
+                                     process="skewed_hot", n_hot=n_hot)
+
+        def top_share(stream):
+            # hot sets are per-class, so the stream concentrates on up to
+            # 2·n_hot distinct vertices overall
+            starts = np.asarray([op.start for op in stream])
+            _, counts = np.unique(starts, return_counts=True)
+            counts.sort()
+            return counts[-2 * n_hot:].sum() / starts.shape[0]
+
+        assert top_share(hot) > top_share(uni)
+        assert top_share(hot) >= 0.6  # hot_fraction=0.75 of restarts
+
+    def test_unknown_process_rejected(self):
+        with pytest.raises(ValueError, match="unknown arrival process"):
+            make_arrival_stream(_graph(), CLASSES, 8, process="poisson")
+
+
+# ===========================================================================
+# Inert pads — the fixed-slot invariant
+# ===========================================================================
+class TestInertPads:
+    @pytest.mark.parametrize("engine", ["scalar", "batched"])
+    @pytest.mark.parametrize("cls", CLASSES)
+    def test_pad_only_log_counts_zero(self, engine, cls):
+        g = _graph()
+        parts = _service(g).parts
+        s, e = inert_pad_op(g, cls)
+        log = OpLog(cls, np.full(8, s, np.int64), np.full(8, e, np.int64),
+                    t_l=2, t_pg=1)
+        r = execute_ops(g, log, parts, 4, engine=engine)
+        assert int(np.abs(r.per_op_total).sum()) == 0
+        assert int(np.abs(r.per_op_global).sum()) == 0
+        assert int(np.abs(r.per_partition).sum()) == 0
+        assert int(np.abs(r.per_vertex).sum()) == 0
+
+    def test_gis_pad_is_zero_too(self):
+        g = datasets.load("gis", scale=0.001, seed=0)
+        parts = np.arange(g.n_nodes, dtype=np.int32) % 4
+        s, e = inert_pad_op(g, "gis_short")
+        log = OpLog("gis_short", np.full(4, s, np.int64),
+                    np.full(4, e, np.int64), t_l=8, t_pg=1)
+        for engine in ("scalar", "batched"):
+            r = execute_ops(g, log, parts, 4, engine=engine)
+            assert int(np.abs(r.per_op_total).sum()) == 0, engine
+            assert int(np.abs(r.per_partition).sum()) == 0, engine
+
+    def test_sinkless_graph_rejected_for_twitter(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1)  # no parking vertex
+        assert (g.out_degree > 0).all()
+        with pytest.raises(ValueError, match="parking vertex"):
+            inert_pad_op(g, "twitter")
+
+
+# ===========================================================================
+# Online == offline bit-exactness (host engine)
+# ===========================================================================
+class TestOnlineOfflineBitExact:
+    @pytest.mark.parametrize("process", ARRIVAL_PROCESSES)
+    def test_served_counters_match_offline_replay(self, process):
+        g = _graph()
+        parts0 = _service(g).parts
+        svc = _service(g, parts0)
+        server = OnlineServer(
+            svc, batch_slots=4, queue_limit=16,
+            maintenance=BackgroundMaintenance(svc, every=3,
+                                              budget_iterations=1,
+                                              round_iterations=2),
+        )
+        arrivals, t_counts = make_arrival_stream(
+            g, CLASSES, 36, seed=0, process=process, ops_per_tick=3)
+        server.submit_stream(arrivals, t_counts)
+        res = server.run()
+        assert res.ops_served == 36
+        off_op, off_pp, off_pv = offline_replay(g, res.epochs, 4, t_counts)
+        for cls in CLASSES:
+            np.testing.assert_array_equal(
+                res.per_op[cls], off_op[cls],
+                err_msg=f"{process}/{cls}: per-op counters",
+            )
+        np.testing.assert_array_equal(res.per_partition, off_pp)
+        np.testing.assert_array_equal(res.per_vertex, off_pv)
+        # maintenance actually migrated at least once → multiple epochs
+        assert len(res.epochs) >= 1
+        assert sum(len(ops) for e in res.epochs
+                   for ops in e["ops"].values()) == 36
+
+    def test_batch_slot_count_does_not_change_counters(self):
+        """Fixed-slot invariant end-to-end: the same stream served in
+        2-slot and 8-slot batches folds identical aggregate counters
+        (pads contribute zero; per-op rows are order-preserved)."""
+        g = _graph()
+        parts0 = _service(g).parts
+        results = []
+        for slots in (2, 8):
+            svc = _service(g, parts0)
+            server = OnlineServer(svc, batch_slots=slots, queue_limit=16)
+            arrivals, t_counts = make_arrival_stream(g, CLASSES, 24, seed=0)
+            server.submit_stream(arrivals, t_counts)
+            results.append(server.run())
+        a, b = results
+        for cls in CLASSES:
+            np.testing.assert_array_equal(a.per_op[cls], b.per_op[cls])
+        np.testing.assert_array_equal(a.per_partition, b.per_partition)
+        np.testing.assert_array_equal(a.per_vertex, b.per_vertex)
+
+
+# ===========================================================================
+# Admission queue semantics
+# ===========================================================================
+class TestAdmissionQueue:
+    def test_queue_bound_holds_and_nothing_drops(self):
+        g = _graph()
+        svc = _service(g)
+        server = OnlineServer(svc, batch_slots=2, queue_limit=4)
+        # Everything arrives at tick 0 — far beyond the bound.
+        arrivals, t_counts = make_arrival_stream(
+            g, CLASSES, 20, seed=0, ops_per_tick=1000)
+        assert all(op.arrival == 0 for op in arrivals)
+        server.submit_stream(arrivals, t_counts)
+        peak = 0
+        while not server.drained:
+            server.tick()
+            peak = max(peak, server._queued)
+            assert server._queued <= 4
+        assert peak > 0
+        assert server.ops_served == 20  # bounded admission never drops
+
+    def test_service_order_is_fifo_per_class(self):
+        g = _graph()
+        svc = _service(g)
+        server = OnlineServer(svc, batch_slots=4, queue_limit=16)
+        arrivals, t_counts = make_arrival_stream(g, CLASSES, 24, seed=0)
+        server.submit_stream(arrivals, t_counts)
+        server.run()
+        submitted = {
+            cls: [(op.start, op.end) for op in arrivals if op.op_class == cls]
+            for cls in CLASSES
+        }
+        served = {
+            cls: [p for e in server.epochs for p in e["ops"].get(cls, [])]
+            for cls in CLASSES
+        }
+        assert served == submitted  # same ops, same order, none dropped
+
+    def test_invalid_configuration_rejected(self):
+        g = _graph()
+        svc = _service(g)
+        with pytest.raises(ValueError, match="batch_slots"):
+            OnlineServer(svc, batch_slots=0)
+        with pytest.raises(ValueError, match="queue_limit"):
+            OnlineServer(svc, batch_slots=8, queue_limit=4)
+        server = OnlineServer(svc, batch_slots=2, queue_limit=4)
+        arrivals, t_counts = make_arrival_stream(g, CLASSES, 4, seed=0)
+        server.submit_stream(arrivals, t_counts)
+        with pytest.raises(RuntimeError, match="already submitted"):
+            server.submit_stream(arrivals, t_counts)
+        with pytest.raises(ValueError, match="sorted"):
+            s2 = OnlineServer(svc, batch_slots=2, queue_limit=4)
+            s2.submit_stream(list(reversed(arrivals)), t_counts)
+
+
+# ===========================================================================
+# Latency subsystem (RuntimeLogger)
+# ===========================================================================
+class TestLatencyMetrics:
+    def test_single_sample_percentiles_are_that_sample(self):
+        lg = RuntimeLogger(2)
+        lg.record_latency("fs", queue_wait=7, service_time=1)
+        rep = lg.latency_report()["fs"]
+        assert rep["count"] == 1
+        for q in ("p50", "p95", "p99"):
+            assert rep[f"queue_wait_{q}"] == 7
+            assert rep[f"total_{q}"] == 8
+        assert rep["queue_wait_max"] == 7 and rep["total_max"] == 8
+        assert rep["queue_wait_mean"] == 7.0 and rep["service_mean"] == 1.0
+
+    def test_tied_values_report_the_tie(self):
+        lg = RuntimeLogger(2)
+        for _ in range(10):
+            lg.record_latency("fs", queue_wait=3, service_time=1)
+        rep = lg.latency_report()["fs"]
+        assert (rep["queue_wait_p50"], rep["queue_wait_p95"],
+                rep["queue_wait_p99"]) == (3, 3, 3)
+
+    def test_nearest_rank_exact_fixture(self):
+        """p-th percentile = sorted[ceil(p·n/100) − 1], no interpolation:
+        for [1..10], p50 → rank 5 → 5; p95/p99 → rank 10 → 10."""
+        lg = RuntimeLogger(2)
+        for w in [10, 1, 7, 3, 9, 5, 2, 8, 4, 6]:
+            lg.record_latency("fs", queue_wait=w, service_time=1)
+        rep = lg.latency_report()["fs"]
+        assert rep["queue_wait_p50"] == 5
+        assert rep["queue_wait_p95"] == 10
+        assert rep["queue_wait_p99"] == 10
+        assert RuntimeLogger._percentile([1, 2, 3, 4], 25) == 1
+        assert RuntimeLogger._percentile([1, 2, 3, 4], 26) == 2
+        with pytest.raises(ValueError, match="empty"):
+            RuntimeLogger._percentile([], 50)
+
+    def test_reset_clears_latency_but_keeps_slo_budgets(self):
+        lg = RuntimeLogger(2)
+        lg.set_slo("fs", 4)
+        lg.record_latency("fs", queue_wait=10, service_time=1)
+        assert lg.slo_violations == 1
+        lg.reset()
+        assert lg.latency_report() == {}
+        assert lg.slo_violations == 0
+        assert lg.health_report()["slo_violations"] == 0
+        # budgets are configuration, not state: they survive reset
+        lg.record_latency("fs", queue_wait=10, service_time=1)
+        assert lg.slo_violations == 1
+
+    def test_long_horizon_counters_do_not_overflow(self):
+        """Samples accumulate in Python ints — sums beyond int64 stay
+        exact (the counter-dtype bug class repro-lint hunts)."""
+        lg = RuntimeLogger(2)
+        big = 2**62
+        for _ in range(8):
+            lg.record_latency("fs", queue_wait=big, service_time=1)
+        rep = lg.latency_report()["fs"]
+        assert rep["queue_wait_max"] == big
+        assert rep["total_max"] == big + 1
+        assert rep["queue_wait_mean"] == float(big)
+
+    def test_slo_violation_counting_boundary(self):
+        lg = RuntimeLogger(2)
+        lg.set_slo("fs", 5)
+        lg.record_latency("fs", queue_wait=4, service_time=1)  # == budget: ok
+        assert lg.slo_violations == 0
+        lg.record_latency("fs", queue_wait=5, service_time=1)  # > budget
+        assert lg.slo_violations == 1
+        lg.record_latency("tw", queue_wait=100, service_time=1)  # no budget set
+        assert lg.slo_violations == 1
+        assert lg.latency_report()["fs"]["slo_budget"] == 5
+        assert "slo_budget" not in lg.latency_report()["tw"]
+
+    def test_server_latency_is_queue_wait_on_simulated_clock(self):
+        """End-to-end: with 1 op/tick and 1-slot batches, the i-th op of
+        a same-tick burst waits exactly i ticks."""
+        g = _graph()
+        svc = _service(g)
+        server = OnlineServer(svc, batch_slots=1, queue_limit=8,
+                              slo={"filesystem": 2})
+        arrivals, t_counts = make_arrival_stream(
+            g, ("filesystem",), 6, seed=0, ops_per_tick=1000)
+        server.submit_stream(arrivals, t_counts)
+        res = server.run()
+        rep = res.latency["filesystem"]
+        assert rep["count"] == 6
+        assert rep["queue_wait_max"] == 5  # 6th op waited 5 ticks
+        assert rep["service_mean"] == 1.0
+        # waits are 0..5; totals 1..6; budget 2 → totals 3,4,5,6 violate
+        assert res.health["slo_violations"] == 4
+
+
+# ===========================================================================
+# Background maintenance
+# ===========================================================================
+class TestBackgroundMaintenance:
+    def test_round_spreads_over_budgeted_ticks_then_commits(self):
+        g = _graph()
+        svc = _service(g)
+        bg = BackgroundMaintenance(svc, every=4, budget_iterations=1,
+                                   round_iterations=3)
+        moved = {}
+        for now in range(11):
+            moved[now] = bg.tick(now)
+        # round starts so it's active on ticks 3,4,5 (every=4), commits
+        # after 3 budgeted iterations, then the next round at 7,8,9.
+        assert bg.rounds_completed == 2
+        assert bg.iterations_run == 6
+        assert bg.first_iteration_tick == 3
+        commit_ticks = [t for t, m in moved.items() if m is not None]
+        assert commit_ticks == [5, 9]
+
+    def test_growth_mid_round_restarts_from_grown_map(self):
+        g = _graph()
+        svc = _service(g)
+        bg = BackgroundMaintenance(svc, every=2, budget_iterations=1,
+                                   round_iterations=4)
+        assert bg.tick(1) is None          # round active
+        assert bg._working is not None
+        n0 = g.n_nodes
+        grown = g.with_vertices(4, None,
+                                np.array([0, 1, 2, 3], np.int64),
+                                np.array([n0, n0 + 1, n0 + 2, n0 + 3], np.int64))
+        svc.graph = grown
+        svc.parts = np.concatenate(
+            [svc.parts, np.arange(4, dtype=np.int32) % 4])
+        svc.runtime.state = None  # what apply_dynamism does on growth
+        bg.tick(2)                          # stale working map detected
+        assert bg._working is None or bg._working.shape[0] == grown.n_nodes
+        for now in range(3, 12):
+            bg.tick(now)
+        assert bg.rounds_completed >= 1     # restarted and completed
+
+    def test_serving_continues_across_structural_growth(self):
+        """Ops arriving mid-maintenance keep serving while the journaled
+        dynamism grows the graph: counters stay consistent per epoch and
+        the grown run still drains (WAL + degraded mode untouched)."""
+        from repro.core.framework import InsertPartitioner
+        from repro.core.recovery import DynamismJournal
+
+        g = _graph()
+        svc = _service(g)
+        svc.journal = DynamismJournal()
+        server = OnlineServer(
+            svc, batch_slots=4, queue_limit=16,
+            maintenance=BackgroundMaintenance(svc, every=3,
+                                              round_iterations=2),
+        )
+        arrivals, t_counts = make_arrival_stream(
+            g, CLASSES, 24, seed=0, ops_per_tick=2)
+        server.submit_stream(arrivals, t_counts)
+        ip = InsertPartitioner("random", 4, seed=0)
+        grew = False
+        while not server.drained:
+            server.tick()
+            if server.clock == 4:  # structural growth mid-serving
+                log = ip.allocate(svc.parts, 0.05, insert_rate=0.5,
+                                  graph=svc.graph)
+                svc.apply_dynamism(log)
+                grew = log.n_new_vertices > 0
+        assert grew
+        assert server.ops_served == 24
+        res = server.result()
+        assert res.per_vertex.shape[0] == svc.graph.n_nodes
+        assert svc.journal.entries  # WAL recorded the mid-serving growth
+        # epochs recorded across the growth boundary carry consistent maps
+        for e in res.epochs:
+            assert e["parts"].min() >= 0 and e["parts"].max() < 4

@@ -164,6 +164,7 @@ class TestFaultPrimitives:
         assert set(FAULT_SITES) == {
             "apply:pre_validate", "apply:pre_commit", "apply:compact",
             "apply:post_commit", "maintain", "replay",
+            "serve:admit", "serve:commit",
         }
 
     def test_retry_policy_backoff_then_deadline(self):
@@ -606,6 +607,81 @@ class TestCompactionBoundaries:
             _assert_results_equal(base[i], got[i], f"slice {i}")
         np.testing.assert_array_equal(ref_result.parts, out.parts)
         assert ref_result.records == out.records
+
+
+# ===========================================================================
+# Online admission-loop crash sites (ISSUE 9)
+# ===========================================================================
+class TestOnlineServingCrash:
+    """The new ``serve:admit`` / ``serve:commit`` fault sites: a crashed
+    admission tick must retry bit-identically under the supervised
+    :meth:`OnlineServer.run` loop (counters AND latency — the commit-site
+    crash happens after the pure replay, so the retried fold lands the
+    same queue-wait samples exactly once)."""
+
+    def _served(self, g, parts0, plan=None):
+        from repro.core.online import BackgroundMaintenance, OnlineServer, make_arrival_stream
+
+        svc = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        svc.partition_with(parts0.copy())
+        svc.fault_plan = plan
+        server = OnlineServer(
+            svc, batch_slots=4, queue_limit=16,
+            maintenance=BackgroundMaintenance(svc, every=4,
+                                              budget_iterations=1,
+                                              round_iterations=2),
+        )
+        arrivals, t_counts = make_arrival_stream(
+            g, ("filesystem", "twitter"), 32, seed=0, process="uniform",
+            ops_per_tick=3,
+        )
+        server.submit_stream(arrivals, t_counts)
+        return server.run()
+
+    def test_admit_and_commit_crashes_retry_bit_exact(self):
+        g = datasets.load("filesystem", scale=0.001, seed=1).with_vertices(1)
+        svc0 = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        parts0 = svc0.partition_didic(seed=0).parts
+
+        clean = self._served(g, parts0)
+        plan = (FaultPlan()
+                .crash(2, site="serve:admit")
+                .crash(4, site="serve:commit"))
+        crashed = self._served(g, parts0, plan=plan)
+
+        assert crashed.health["recoveries"] == 2
+        for cls in ("filesystem", "twitter"):
+            np.testing.assert_array_equal(
+                clean.per_op[cls], crashed.per_op[cls],
+                err_msg=f"per-op counters diverged after crash retry ({cls})",
+            )
+        np.testing.assert_array_equal(clean.per_partition,
+                                      crashed.per_partition)
+        np.testing.assert_array_equal(clean.per_vertex, crashed.per_vertex)
+        assert clean.latency == crashed.latency
+        assert clean.ticks == crashed.ticks
+        assert len(clean.epochs) == len(crashed.epochs)
+
+    def test_admit_crash_leaves_tick_unstarted(self):
+        """A ``serve:admit`` crash fires before any state mutates — the
+        server's queues, cursor, clock, and counters are exactly the
+        pre-tick state, so an unsupervised caller can retry by hand."""
+        from repro.core.online import OnlineServer, make_arrival_stream
+
+        g = datasets.load("filesystem", scale=0.001, seed=1).with_vertices(1)
+        svc = PartitionedGraphService(g, 4, didic=FAST_DIDIC)
+        svc.partition_didic(seed=0)
+        svc.fault_plan = FaultPlan().crash(0, site="serve:admit")
+        server = OnlineServer(svc, batch_slots=4, queue_limit=16)
+        arrivals, t_counts = make_arrival_stream(
+            g, ("filesystem",), 8, seed=0, process="uniform")
+        server.submit_stream(arrivals, t_counts)
+        with pytest.raises(SimulatedCrash):
+            server.tick()
+        assert server.clock == 0 and server.ops_served == 0
+        assert server._cursor == 0 and server._queued == 0
+        served = server.tick()  # crash fired once; retry serves normally
+        assert served is not None and server.ops_served == served[1]
 
 
 # ===========================================================================

@@ -162,6 +162,63 @@ class TestServing:
         assert all(len(r.generated) == 3 for r in reqs)
         assert all(0 <= t < 64 for r in reqs for t in r.generated)
 
+    def test_scanned_prefill_matches_token_loop_and_order(self):
+        """ISSUE 9 satellite regression: the deque admission queue and the
+        scanned prefill must not change behavior — generated tokens are
+        bit-identical to a reference engine whose prefill is the old
+        token-by-token serve_step loop, and FIFO admission order holds."""
+        from repro.models import transformer as tf
+        from repro.serving.engine import Request, ServingEngine
+
+        cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                                d_ff=64, vocab=64)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+
+        class LoopPrefillEngine(ServingEngine):
+            """The pre-fix prefill: one jitted serve_step dispatch per
+            prompt token."""
+
+            def _admit(self):
+                for i in range(self.slots):
+                    if self.active[i] is None and self.queue:
+                        req = self.queue.popleft()
+                        self.active[i] = req
+                        for t, tok in enumerate(req.prompt):
+                            _, self.cache = self._decode(
+                                self.params,
+                                jnp.full((self.slots,), int(tok), jnp.int32),
+                                self.cache, jnp.int32(t),
+                            )
+                        self.positions[i] = len(req.prompt)
+
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, 64, size=rng.integers(2, 6)) for _ in range(6)]
+
+        def serve(engine_cls):
+            eng = engine_cls(cfg, params, batch_slots=2, max_len=32)
+            order = []
+            orig = eng._admit
+
+            def admit_spy():
+                before = {id(r) for r in eng.active if r is not None}
+                orig()
+                for i, r in enumerate(eng.active):
+                    if r is not None and id(r) not in before:
+                        order.append(id(r))
+            eng._admit = admit_spy
+            reqs = [Request(prompt=p.copy(), max_new_tokens=4) for p in prompts]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+            ids = {id(r): i for i, r in enumerate(reqs)}
+            return [r.generated for r in reqs], [ids[x] for x in order]
+
+        new_tokens, new_order = serve(ServingEngine)
+        ref_tokens, ref_order = serve(LoopPrefillEngine)
+        assert new_tokens == ref_tokens  # bit-identical generations
+        assert new_order == ref_order    # same FIFO admission order
+        assert new_order == sorted(new_order)  # and it IS submission order
+
 
 class TestDataPipeline:
     def test_lm_stream_learnable(self):
