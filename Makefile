@@ -49,6 +49,17 @@
 #                            admission tick, and serve-latency.json with
 #                            p50/p99 per op class (WRITE=--write-baseline
 #                            records the BENCH_traffic.json serving section)
+#   make skew-smoke          skew-aware placement gate, 8-shard CPU mesh:
+#                            hot-vertex exception-table sweep (0/8/32/128
+#                            replicas) on the skewed twitter pattern plus
+#                            uniform filesystem control — scalar == batched
+#                            == sharded bit-exact at every capacity, empty
+#                            table bit-exact to the pre-placement engines,
+#                            zero XLA compiles during the sweep, >= 20%
+#                            twitter global-traffic reduction at 128
+#                            replicas, <= 1% uniform regression
+#                            (WRITE=--write-baseline records the
+#                            BENCH_traffic.json skew section)
 #   make traffic-bench       full single-device traffic benchmark
 #   make traffic-bench-dist  full sharded benchmark, 8-shard CPU mesh
 #   make dynamic-bench-dist  full dynamic-experiment benchmark, 8-shard mesh
@@ -57,7 +68,7 @@
 #   make check               test + lint + traffic-smoke + traffic-smoke-dist
 #                            + dynamic-smoke-dist + dynamic-resident-smoke
 #                            + insert-smoke-dist + fault-smoke
-#                            + grow-steady-smoke + serve-smoke
+#                            + grow-steady-smoke + serve-smoke + skew-smoke
 
 PY := PYTHONPATH=src python
 WRITE :=
@@ -65,7 +76,8 @@ PYTEST_ARGS :=
 
 .PHONY: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
 	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke \
-	serve-smoke traffic-bench traffic-bench-dist dynamic-bench-dist check
+	serve-smoke skew-smoke traffic-bench traffic-bench-dist \
+	dynamic-bench-dist check
 
 test:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -104,6 +116,10 @@ serve-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	$(PY) -m benchmarks.kernel_bench --serve-smoke $(WRITE)
 
+skew-smoke:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	$(PY) -m benchmarks.kernel_bench --skew-smoke $(WRITE)
+
 traffic-bench:
 	$(PY) -m benchmarks.kernel_bench --traffic $(WRITE)
 
@@ -117,4 +133,4 @@ dynamic-bench-dist:
 
 check: test lint traffic-smoke traffic-smoke-dist dynamic-smoke-dist \
 	dynamic-resident-smoke insert-smoke-dist fault-smoke grow-steady-smoke \
-	serve-smoke
+	serve-smoke skew-smoke

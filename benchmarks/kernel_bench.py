@@ -29,6 +29,11 @@ Usage:
       three arrival processes — online == offline bit-exactness (crash
       legs included), zero XLA compiles on every admission tick, and a
       serve-latency.json report (p50/p99 per op class)
+  python -m benchmarks.kernel_bench --skew-smoke    # skew-aware placement
+      gate: hot-vertex exception-table sweep (0/8/32/128 replicas) on the
+      skewed twitter pattern + uniform filesystem control — three-engine
+      bit-exactness at every capacity, zero compiles during the sweep,
+      >= 20% global-traffic reduction on twitter at 128 replicas
   python -m benchmarks.kernel_bench --traffic --write-baseline       # refresh
   python -m benchmarks.kernel_bench --traffic-dist --write-baseline  # merge
       benchmarks/BENCH_traffic.json ("sharded" section)
@@ -907,6 +912,126 @@ def serve_smoke(scale: Optional[float] = None, n_ops: int = 96):
     return rows, update
 
 
+def skew_smoke(scale: Optional[float] = None, n_ops: int = 96):
+    """Skew-aware placement smoke on a mesh over every visible device (the
+    Makefile target forces 8 CPU devices) — the ISSUE 10 acceptance gate.
+
+    Sweeps the hot-vertex exception-table size over 0/8/32/128 replicated
+    vertices on a DiDiC partitioning of two workloads: the skewed twitter
+    pattern (hub reads dominate) and the filesystem pattern as uniform
+    control. Per capacity the hot set is chosen from the baseline
+    per-vertex traffic via ``select_hot_vertices`` (the same signal the
+    runtime's ``refresh_placement`` uses). Gates, each fatal:
+
+    * **parity** — scalar == batched == sharded on all four counters at
+      every capacity (replica routing is host-side in every engine);
+    * **empty table** — capacity 0 is bit-exact to the pre-placement
+      engines (``replicated=None``);
+    * **steady state** — after one warm-up replay per graph, the whole
+      sweep triggers zero XLA compiles (masks never enter jitted code);
+    * **skew win** — >= 20 % global-traffic reduction on twitter at
+      <= 128 replicated vertices;
+    * **uniform control** — filesystem global traffic never regresses
+      (> +1 %) at any capacity.
+
+    Returns ``(rows, update)``; ``update`` is the ``skew`` section of
+    BENCH_traffic.json (``--write-baseline`` merges it).
+    """
+    from repro.analysis.recompile import capture_compiles
+    from repro.core.didic import DidicConfig, didic_partition
+    from repro.core.partitioners import select_hot_vertices
+    from repro.core.traffic import execute_ops, generate_ops
+    from repro.core.traffic_sharded import replay_sharded
+    from repro.graphs import datasets
+    from repro.launch.mesh import make_replay_mesh
+
+    scale = 0.05 if scale is None else scale
+    mesh = make_replay_mesh()
+    shards = len(mesh.devices.flat)
+    k = 8
+    capacities = (0, 8, 32, 128)
+    fields = ("per_op_total", "per_op_global", "per_partition", "per_vertex")
+    rows: List[str] = []
+    update: Dict[str, Dict] = {}
+
+    def cv(per_partition: np.ndarray) -> float:
+        per_partition = np.asarray(per_partition, dtype=np.float64)
+        mean = per_partition.mean()
+        return float(per_partition.std() / mean) if mean else 0.0
+
+    for name, pattern in (("twitter", "twitter"), ("filesystem", "filesystem")):
+        g = datasets.load(name, scale=scale, seed=0)
+        parts, _ = didic_partition(g, DidicConfig(k=k, iterations=25), seed=0)
+        parts = np.asarray(parts, dtype=np.int32)
+        ops = generate_ops(g, n_ops=n_ops, seed=2, pattern=pattern)
+        base = execute_ops(g, ops, parts, k, engine="batched")
+        replay_sharded(g, ops, mesh, parts, k)  # warm-up: traces programs
+
+        sweep = {}
+        with capture_compiles() as cap:
+            for capacity in capacities:
+                hot = select_hot_vertices(base.per_vertex, capacity)
+                replicated = None
+                if hot.size:
+                    replicated = np.zeros(g.n_nodes, dtype=bool)
+                    replicated[hot] = True
+                sc = execute_ops(g, ops, parts, k, engine="scalar",
+                                 replicated=replicated)
+                bt = execute_ops(g, ops, parts, k, engine="batched",
+                                 replicated=replicated)
+                sh = replay_sharded(g, ops, mesh, parts, k,
+                                    replicated=replicated)
+                for f in fields:
+                    if not np.array_equal(getattr(sc, f), getattr(bt, f)):
+                        raise AssertionError(
+                            f"{name}/cap{capacity}: scalar != batched on {f}")
+                    if not np.array_equal(getattr(bt, f), getattr(sh, f)):
+                        raise AssertionError(
+                            f"{name}/cap{capacity}: batched != sharded on {f}")
+                if capacity == 0:
+                    for f in fields:
+                        if not np.array_equal(getattr(bt, f), getattr(base, f)):
+                            raise AssertionError(
+                                f"{name}: empty exception table is not "
+                                f"bit-exact to the pre-placement engine ({f})")
+                sweep[capacity] = {
+                    "replicated": int(hot.size),
+                    "global_traffic": float(bt.per_op_global.sum()),
+                    "load_cv": round(cv(bt.per_partition), 4),
+                }
+        if cap.events:
+            raise AssertionError(
+                f"{name}: {len(cap.events)} XLA compiles during the capacity "
+                "sweep — replica masks must stay host-side")
+
+        g0 = sweep[0]["global_traffic"]
+        g128 = sweep[128]["global_traffic"]
+        reduction = (g0 - g128) / g0 if g0 else 0.0
+        if name == "twitter" and reduction < 0.20:
+            raise AssertionError(
+                f"twitter: {reduction:.1%} global-traffic reduction at 128 "
+                "replicas — need >= 20% vs pure DiDiC")
+        worst = max(s["global_traffic"] for s in sweep.values())
+        if worst > g0 * 1.01:
+            raise AssertionError(
+                f"{name}: global traffic regressed {worst / g0 - 1:.2%} "
+                "under replication — must stay <= +1%")
+        update[name] = {
+            "scale": scale, "n_ops": n_ops, "k": k, "shards": shards,
+            "didic_iterations": 25,
+            "sweep": {str(c): sweep[c] for c in capacities},
+            "reduction_at_128": round(reduction, 4),
+        }
+        rows.append(
+            f"skew/{name}/reduction_at_128,{reduction:.3f},"
+            f"global {g0:.0f} -> {g128:.0f} over capacities "
+            f"{list(capacities)} (load CV {sweep[0]['load_cv']:.3f} -> "
+            f"{sweep[128]['load_cv']:.3f}, scalar == batched == sharded at "
+            "every capacity, 0 compiles during sweep)"
+        )
+    return rows, update
+
+
 def fault_smoke(scale: Optional[float] = None) -> List[str]:
     """Fault-tolerance smoke on a mesh over every visible device (the
     Makefile target forces 8 CPU devices) — the ISSUE 6 acceptance gate.
@@ -1062,6 +1187,12 @@ def main() -> None:
                          "online == offline bit-exactness, crash-leg "
                          "bit-exactness, zero XLA compiles on every "
                          "admission tick; writes serve-latency.json")
+    ap.add_argument("--skew-smoke", action="store_true",
+                    help="skew-aware placement gate: exception-table sweep "
+                         "0/8/32/128 on twitter (skewed) + filesystem "
+                         "(uniform control), 3-engine bit-exactness, zero "
+                         "compiles during the sweep, >= 20% twitter traffic "
+                         "reduction at 128 replicas")
     # None = per-mode default (0.004 everywhere except the insert smoke,
     # which pins 0.002 — see insert_smoke); an explicit value wins always.
     ap.add_argument("--scale", type=float, default=None)
@@ -1139,6 +1270,12 @@ def main() -> None:
         print("# latency report written to serve-latency.json")
         if args.write_baseline:
             write_baseline({"serving": update})
+    elif args.skew_smoke:
+        rows, update = skew_smoke(scale=args.scale)
+        for row in rows:
+            print(row)
+        if args.write_baseline:
+            write_baseline({"skew": update})
     elif args.dynamic_resident_smoke:
         for row in dynamic_resident_smoke(scale=scale):
             print(row)

@@ -19,6 +19,10 @@ package makes them machine-checked:
 * ``fault-sites/*``  (:mod:`~repro.analysis.faultsites`, repo scope) —
   every site fired via ``FaultPlan.fire`` must exist in
   ``core.fault.FAULT_SITES`` and be exercised by a recovery test.
+* ``placement/*``    (:mod:`~repro.analysis.placement`, repo scope) —
+  partition ownership is only mutated through the ``Placement`` API;
+  direct ``parts[...]`` writes outside the allowlisted modules leave
+  stale hot-vertex replicas behind.
 
 **Recompile sentinel** (:mod:`~repro.analysis.recompile`) — drives a
 real growth schedule with ``jax_log_compiles`` on and reports which
@@ -59,3 +63,4 @@ from repro.analysis import counterdtype  # noqa: E402,F401
 from repro.analysis import determinism  # noqa: E402,F401
 from repro.analysis import faultsites  # noqa: E402,F401
 from repro.analysis import hostsync  # noqa: E402,F401
+from repro.analysis import placement  # noqa: E402,F401

@@ -474,6 +474,7 @@ def didic_refine(
     state: Optional[DidicState] = None,
     iterations: int = 1,
     seed: int = 0,
+    pinned: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, DidicState]:
     """Repair/maintain an existing partitioning (paper Stress/Dynamic exps).
 
@@ -485,6 +486,14 @@ def didic_refine(
     iterations, but within the paper's one-iteration maintenance budget it
     only strands a random ~10 % of damaged vertices unrepaired.
 
+    ``pinned`` vertices (the placement layer's replicated hot set) keep
+    their incoming assignment: diffusion runs unchanged — the pin is a
+    host-side restore on the returned map, *outside* every compiled step,
+    so pinning neither retraces the overlay closure nor perturbs the
+    diffusion numerics of unpinned vertices. The next refine re-seeds the
+    carried state's assignment from the input map (the input always
+    wins), so the restored pins propagate instead of fighting the state.
+
     Store-backed graphs (a :class:`~repro.graphs.structure.GraphStore`
     attached) route through the capacity-overlay step instead: same
     algorithm on capacity-padded state, compiled once per (config,
@@ -493,8 +502,10 @@ def didic_refine(
     is extent-shaped).
     """
     config = dataclasses.replace(config, commit_prob=1.0)
+    pinned, before = _capture_pins(parts, pinned)
     if graph.store is not None and not config.use_kernel:
-        return _overlay_refine(graph, parts, config, state, iterations, seed)
+        out, state = _overlay_refine(graph, parts, config, state, iterations, seed)
+        return _restore_pins(out, pinned, before), state
     parts_j = jnp.asarray(np.asarray(parts, dtype=np.int32))
     spmm, degc = make_spmm(graph, config)
     if state is None:
@@ -502,4 +513,30 @@ def didic_refine(
     else:
         state = DidicState(w=state.w, l=state.l, parts=parts_j, beta=state.beta)
     state = _run_iterations(state, spmm, degc, config, iterations, seed, start_wide=True)
-    return np.asarray(state.parts), state
+    return _restore_pins(np.asarray(state.parts), pinned, before), state
+
+
+def _capture_pins(
+    parts: np.ndarray, pinned: Optional[np.ndarray]
+) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+    """Snapshot pinned vertices' assignments before a refine pass."""
+    if pinned is None:
+        return None, None
+    pinned = np.asarray(pinned, dtype=np.int64)
+    if pinned.size == 0:
+        return None, None
+    return pinned, np.asarray(parts)[pinned].copy()
+
+
+def _restore_pins(
+    new_parts: np.ndarray,
+    pinned: Optional[np.ndarray],
+    before: Optional[np.ndarray],
+) -> np.ndarray:
+    """Re-apply pinned assignments to a refined map (host-side, after
+    every compiled step has run — empty pin set is an exact no-op)."""
+    if pinned is None:
+        return new_parts
+    out = np.asarray(new_parts).copy()
+    out[pinned] = before
+    return out

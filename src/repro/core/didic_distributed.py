@@ -466,6 +466,7 @@ def didic_refine_distributed(
     state: Optional[DidicState] = None,
     iterations: int = 1,
     seed: int = 0,
+    pinned: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, DidicState]:
     """Maintenance pass on the mesh (the sharded twin of ``didic_refine``).
 
@@ -477,16 +478,25 @@ def didic_refine_distributed(
     balance scalars live sharded over ``mesh``'s data axes; feed the
     state back on the next call and the intermittent maintenance of the
     Dynamic experiment never moves the diffusion system off the mesh.
+
+    ``pinned`` (the placement exception table) is honored exactly as in
+    the single-device refine: a host-side restore on the returned map,
+    outside every compiled/sharded step, so pinning never retraces the
+    mesh program.
     """
+    from repro.core.didic import _capture_pins, _restore_pins
+
     config = dataclasses.replace(config, commit_prob=1.0)
+    pinned, before = _capture_pins(parts, pinned)
     if graph.store is not None:
         # Store-backed graphs run the capacity program: cached on the
         # store lineage, so growth under a standing capacity reuses the
         # layout, the halo tables' shapes, and the compiled step.
-        return _refine_capacity(
+        out, new_state = _refine_capacity(
             graph, parts, config, mesh, tuple(data_axes),
             state, iterations, seed,
         )
+        return _restore_pins(out, pinned, before), new_state
     layout, spmm_halo, degc = _mesh_program(graph, mesh, data_axes)
     if config.k % layout.n_shards:
         raise ValueError(
@@ -513,4 +523,6 @@ def didic_refine_distributed(
         key, sub = jax.random.split(key)
         w, l, parts_cur, beta = step(w, l, parts_cur, beta, sub, jnp.int32(schedule[it]))
     new_state = DidicState(w=w, l=l, parts=parts_cur, beta=beta)
-    return np.asarray(parts_cur)[layout.old_to_new], new_state
+    return _restore_pins(
+        np.asarray(parts_cur)[layout.old_to_new], pinned, before
+    ), new_state

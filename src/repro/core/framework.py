@@ -5,17 +5,45 @@ Four components compose the runtime:
 * :class:`InsertPartitioner`    — allocates entities to partitions at write
   time (policies: random / fewest-vertices / least-traffic, §6.4),
 * :class:`RuntimeLogger`        — per-partition ``InstanceInfo`` metrics
-  (vertices, edges, local vs global traffic — §5.2),
+  (vertices, edges, local vs global traffic — §5.2), per-vertex traffic
+  accumulation (the hot-vertex selection signal), and service-health
+  counters,
 * :class:`RuntimePartitioner`   — re-partitions at runtime (wraps DiDiC),
 * :class:`MigrationScheduler`   — decides *when* migration runs and emits
   migration commands (vertex→partition deltas).
 
 :class:`PartitionedGraphService` is the emulator-style facade (§5.3.2): one
-logical graph + a partition map, serving the same measurements as the
+logical graph + a placement, serving the same measurements as the
 thesis's ``PGraphDatabaseServiceEmulator``. The distributed runtime
 (`repro.distributed.placement`) consumes the same partition map to place
 GNN shards on mesh devices — the framework is shared between the paper
 reproduction and the large-scale training path.
+
+**Placement: ownership + read replicas.** Where the thesis assigns every
+vertex to exactly one partition, the service holds a
+:class:`repro.core.placement.Placement`: an *owner array* (the classic
+``parts`` map, still exposed as :attr:`PartitionedGraphService.parts`)
+plus a fixed-capacity *exception table* of hot vertices replicated
+read-only on every partition. Routing rules:
+
+* **Reads** of a replicated vertex are served by the local replica at the
+  reading partition — a traversal step into it is not global traffic, and
+  its potentially-global action books to the *reader* (see
+  ``_ScalarCounters.step`` / ``BatchedTrafficEngine.cross_degree``).
+* **Writes** — partition moves, structural inserts, deletes — always
+  resolve the owner, never a replica (the ``placement/single-owner``
+  repro-lint rule guards this), and :meth:`apply_dynamism` *invalidates*
+  the replicas of every written vertex, bumping the placement's
+  ``replica_epoch``.
+* **Maintenance** pins exception vertices out of DiDiC diffusion so a
+  refine pass cannot thrash a vertex the traffic log proved hot; the hot
+  set itself is chosen from the logger's accumulated per-vertex traffic
+  with promotion hysteresis (:meth:`PartitionedGraphService.refresh_placement`).
+
+The exception table is padded to a static capacity, so everything derived
+from it keeps its shape and compiled closures never retrace when the hot
+set churns. An *empty* table (capacity 0, the default) is bit-identical
+to the single-assignment model on all four traffic counters.
 
 **Engine dispatch.** Every component runs behind one interface on either
 the host reference engines or the mesh-native device engines: construct
@@ -40,6 +68,7 @@ import numpy as np
 from repro.core import metrics
 from repro.core.didic import DidicConfig, DidicState, didic_partition, didic_refine
 from repro.core.dynamism import DynamismLog, apply_dynamism, generate_dynamism
+from repro.core.placement import Placement
 from repro.core.traffic import OpLog, TrafficResult, execute_ops, generate_ops
 from repro.graphs.structure import Graph
 
@@ -151,6 +180,14 @@ class RuntimeLogger:
         self.maintenance_retry_time_s = 0.0
         self.recoveries = 0
         self.recovery_time_s = 0.0
+        # Device-resident replay-state footprint (bytes) of the owning
+        # service, refreshed after each sharded replay — the observability
+        # hook for the ROADMAP resident-memory ceiling.
+        self.resident_state_bytes = 0
+        # Accumulated per-vertex served traffic across observations — the
+        # hot-vertex selection signal for the placement exception table.
+        # Growable: observations from a grown graph extend it.
+        self.vertex_traffic = np.zeros(0, dtype=np.int64)
         # Latency subsystem. Samples are Python ints (simulated-clock
         # ticks), accumulated in unbounded Python arithmetic so
         # long-horizon counters cannot wrap (the int64-overflow bug class);
@@ -193,6 +230,13 @@ class RuntimeLogger:
         for i in range(self.k):
             self.infos[i].global_traffic += int(g[i])
             self.infos[i].local_traffic += int(served[i]) - int(g[i])
+        pv = np.asarray(result.per_vertex, dtype=np.int64)
+        if pv.shape[0] > self.vertex_traffic.shape[0]:
+            self.vertex_traffic = np.concatenate([
+                self.vertex_traffic,
+                np.zeros(pv.shape[0] - self.vertex_traffic.shape[0], np.int64),
+            ])
+        self.vertex_traffic[: pv.shape[0]] += pv
         # store aggregate for degradation detection
         self._last_percent_global = result.percent_global
 
@@ -278,6 +322,7 @@ class RuntimeLogger:
             "recoveries": self.recoveries,
             "recovery_time_s": self.recovery_time_s,
             "slo_violations": self.slo_violations,
+            "resident_state_bytes": self.resident_state_bytes,
         }
 
     def load_balance_cv(self) -> Dict[str, float]:
@@ -327,17 +372,22 @@ class RuntimePartitioner:
         parts, self.state = didic_partition(graph, self.config, seed=seed)
         return parts
 
-    def maintain(self, graph: Graph, parts: np.ndarray, iterations: int = 1) -> np.ndarray:
+    def maintain(self, graph: Graph, parts: np.ndarray, iterations: int = 1,
+                 pinned: Optional[np.ndarray] = None) -> np.ndarray:
+        """One maintenance refinement; ``pinned`` vertices (the placement
+        exception table) keep their assignment — diffusion must not thrash
+        a vertex the traffic log proved hot."""
         if self.mesh is not None:
             from repro.core.didic_distributed import didic_refine_distributed
 
             parts, self.state = didic_refine_distributed(
                 graph, parts, self.config, self.mesh, self.data_axes,
-                state=self.state, iterations=iterations,
+                state=self.state, iterations=iterations, pinned=pinned,
             )
             return parts
         parts, self.state = didic_refine(
-            graph, parts, self.config, state=self.state, iterations=iterations
+            graph, parts, self.config, state=self.state, iterations=iterations,
+            pinned=pinned,
         )
         return parts
 
@@ -449,6 +499,7 @@ class PartitionedGraphService:
         mesh=None,
         data_axes: Tuple[str, ...] = ("data",),
         maintenance: str = "auto",
+        exception_capacity: int = 0,
     ):
         if maintenance not in ("auto", "sharded", "shared"):
             raise ValueError(f"unknown maintenance mode {maintenance!r}")
@@ -458,7 +509,14 @@ class PartitionedGraphService:
         self.k = k
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
-        self.parts = np.zeros(graph.n_nodes, dtype=np.int32)
+        # Placement = owner array + fixed-capacity exception table of
+        # replicated hot vertices (module docstring). ``parts`` stays the
+        # public name for the owner array; capacity 0 (the default) is
+        # bit-identical to the pre-placement single-assignment service.
+        self.placement = Placement(
+            owner=np.zeros(graph.n_nodes, dtype=np.int32),
+            capacity=int(exception_capacity),
+        )
         # Evaluation logs served so far, keyed by content fingerprint (the
         # same identity contract as ``get_replayer``'s cache): structural
         # dynamism must migrate their device-resident replay state onto
@@ -496,6 +554,42 @@ class PartitionedGraphService:
     def engine(self) -> str:
         """Which engine family serves this service: ``host`` or ``device``."""
         return "device" if self.mesh is not None else "host"
+
+    # -- placement ----------------------------------------------------------
+    @property
+    def parts(self) -> np.ndarray:
+        """The owner array of the service placement.
+
+        Kept as the public partition-map interface: every consumer of the
+        single-assignment model (engines, scheduler, snapshots, the
+        distributed placement layer) reads and replaces whole owner maps
+        through this property. In-place element writes would bypass
+        replica invalidation — route vertex moves through
+        :meth:`apply_dynamism` or :meth:`commit_migration` instead (the
+        ``placement/single-owner`` lint rule flags violations).
+        """
+        return self.placement.owner
+
+    @parts.setter
+    def parts(self, value: np.ndarray) -> None:
+        self.placement.replace_owner(np.asarray(value))
+
+    def refresh_placement(self, hysteresis: float = 1.25) -> np.ndarray:
+        """Re-select the exception table from accumulated per-vertex
+        traffic (promotion with hysteresis — see
+        :func:`repro.core.partitioners.select_hot_vertices`). Returns the
+        new hot-vertex array. No-op on a capacity-0 placement.
+        """
+        from repro.core.partitioners import select_hot_vertices
+
+        if self.placement.capacity == 0:
+            return self.placement.hot_vertices()
+        hot = select_hot_vertices(
+            self.logger.vertex_traffic, self.placement.capacity,
+            current_hot=self.placement.hot_vertices(), hysteresis=hysteresis,
+        )
+        self.placement.set_hot(hot)
+        return self.placement.hot_vertices()
 
     # -- partitioning -------------------------------------------------------
     def partition_with(self, parts: np.ndarray) -> "PartitionedGraphService":
@@ -542,7 +636,8 @@ class PartitionedGraphService:
     def maintain(self, iterations: int = 1) -> None:
         self.parts = self._maintain_attempt(
             lambda: self.runtime.maintain(self.graph, self.parts,
-                                          iterations=iterations)
+                                          iterations=iterations,
+                                          pinned=self.placement.hot_vertices())
         )
         self.logger.observe_structure(self.graph, self.parts)
 
@@ -561,7 +656,8 @@ class PartitionedGraphService:
         src = self.parts if parts is None else parts
         return self._maintain_attempt(
             lambda: self.runtime.maintain(self.graph, src,
-                                          iterations=iterations)
+                                          iterations=iterations,
+                                          pinned=self.placement.hot_vertices())
         )
 
     def commit_migration(self, scheduler: MigrationScheduler,
@@ -585,6 +681,14 @@ class PartitionedGraphService:
             self.runtime.state = prev_state
             return 0
         self.parts = scheduler.apply(self.parts, cmds)
+        if cmds and self.placement.n_hot:
+            # A migration is an ownership write: replicas of moved
+            # vertices are stale and must drop. (Pinned maintenance never
+            # proposes such moves, but migration commands can originate
+            # elsewhere.)
+            self.placement.invalidate(
+                np.concatenate([c.vertices for c in cmds])
+            )
         self.logger.observe_structure(self.graph, self.parts)
         return int(sum(c.vertices.shape[0] for c in cmds))
 
@@ -631,11 +735,12 @@ class PartitionedGraphService:
             self.fault_plan.fire("replay")
         if engine == "sharded" and self.mesh is None:
             raise ValueError("engine='sharded' requires a service mesh")
+        replicated = self.placement.replicated_mask()
         if engine == "sharded" or (engine == "auto" and self.mesh is not None):
             failed = self._currently_failed_shards()
             if failed:
                 result = execute_ops(self.graph, ops, self.parts, self.k,
-                                     engine="batched")
+                                     engine="batched", replicated=replicated)
                 self.logger.record_degraded(self._degraded_op_count(ops, failed))
             else:
                 from repro.core.traffic_sharded import replay_sharded  # lazy: jax mesh
@@ -644,11 +749,23 @@ class PartitionedGraphService:
                 result = replay_sharded(
                     self.graph, ops, self.mesh, self.parts, self.k,
                     data_axes=self.data_axes, resident=resident,
+                    replicated=replicated,
                 )
+                self.logger.resident_state_bytes = self._resident_state_bytes()
         else:
-            result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine)
+            result = execute_ops(self.graph, ops, self.parts, self.k, engine=engine,
+                                 replicated=replicated)
         self.logger.observe_traffic(result)
         return result
+
+    def _resident_state_bytes(self) -> int:
+        """Sum the device-resident replay-state footprint across the
+        service's registered evaluation logs (all replayers)."""
+        total = 0
+        for ops in self._replayed_logs.values():
+            for state in ops.__dict__.get("_resident_replay", {}).values():
+                total += state.state_bytes()
+        return total
 
     # -- shard health --------------------------------------------------------
     def mark_shard_failed(self, shard: int) -> None:
@@ -769,6 +886,9 @@ class PartitionedGraphService:
             if plan is not None:
                 plan.fire("apply:pre_commit")
             self.parts = new_parts
+            # A partition move is an ownership write: replicas of moved
+            # vertices are invalidated (single-owner write rule).
+            self.placement.invalidate(log.vertices)
             self.logger.observe_structure(self.graph, self.parts)
             return
         old_graph = self.graph
@@ -807,6 +927,14 @@ class PartitionedGraphService:
         # -- commit (nothing below may raise) ------------------------------
         self.parts = new_parts
         self.graph = new_graph
+        # Writes route through ownership: moved vertices and vertices whose
+        # structure this log touches (insert endpoints, growth anchors)
+        # drop their read replicas.
+        self.placement.invalidate(
+            np.concatenate([
+                np.asarray(log.vertices, dtype=np.int64), log.dirty_vertices(),
+            ])
+        )
         if log.n_new_vertices:
             # Carried diffusion state is per-vertex; growth invalidates it.
             # The next maintenance pass re-seeds from the (grown) parts.

@@ -35,12 +35,15 @@ serving system:
 **Bit-exactness contract.** Per-op counters are per-op independent and
 the aggregate counters are additive integer sums over ops with pads
 contributing exactly zero, so the online-served totals equal an offline
-replay of the live ops alone — *per partition-map epoch*: the
-per-partition counter depends on ``parts`` at serve time, so the server
-records an epoch (parts snapshot + the ops each class served under it)
-whenever migration changes the map. :func:`offline_replay` replays the
-epochs against a static graph and must reproduce all four counters
-bit-for-bit (``make serve-smoke`` enforces this, crash legs included).
+replay of the live ops alone — *per placement epoch*: the per-partition
+and global counters depend on the placement at serve time (owner map
+*and* the replicated hot-vertex exception table), so the server records
+an epoch (parts snapshot + hot-vertex table + the ops each class served
+under it) whenever migration changes the map or the exception table
+churns. :func:`offline_replay` replays the epochs against a static graph
+and must reproduce all four counters bit-for-bit (``make serve-smoke``
+enforces this, crash legs included; ``make skew-smoke`` adds the
+non-empty-exception-table legs).
 
 **Crash safety.** Each tick runs in a fixed order — fire ``serve:admit``
 (no state mutated yet) → pull arrivals (cursor-guarded, idempotent) →
@@ -344,6 +347,7 @@ class OnlineServer:
         self._baseline_pending = False
         self.epochs: List[Dict] = [
             {"parts": service.parts.copy(),
+             "hot": service.placement.hot_vertices(),
              "ops": {}}
         ]
         if slo:
@@ -431,10 +435,17 @@ class OnlineServer:
         if self.maintenance is not None:
             if self.maintenance.tick(self.clock) is not None:
                 self._baseline_pending = True
-            cur = self.epochs[-1]["parts"]
-            if (cur.shape[0] != svc.parts.shape[0]
-                    or (cur != svc.parts).any()):
-                self.epochs.append({"parts": svc.parts.copy(), "ops": {}})
+        # A new epoch opens whenever the *placement* changes — a migrated
+        # owner map or a churned exception table (replica invalidation /
+        # re-selection both change counter attribution at serve time).
+        cur = self.epochs[-1]
+        hot = svc.placement.hot_vertices()
+        if (cur["parts"].shape[0] != svc.parts.shape[0]
+                or (cur["parts"] != svc.parts).any()
+                or not np.array_equal(cur["hot"], hot)):
+            self.epochs.append(
+                {"parts": svc.parts.copy(), "hot": hot, "ops": {}}
+            )
         self.clock += 1
         return served
 
@@ -543,6 +554,11 @@ def offline_replay(
     per_vertex = np.zeros(graph.n_nodes, dtype=np.int64)
     for epoch in epochs:
         parts = np.asarray(epoch["parts"], dtype=np.int32)
+        hot = np.asarray(epoch.get("hot", ()), dtype=np.int64)
+        replicated = None
+        if hot.size:
+            replicated = np.zeros(graph.n_nodes, dtype=bool)
+            replicated[hot] = True
         for cls, pairs in epoch["ops"].items():
             if not pairs:
                 continue
@@ -550,7 +566,8 @@ def offline_replay(
             ends = np.asarray([e for _, e in pairs], dtype=np.int64)
             t_l, t_pg = t_counts[cls]
             ops = OpLog(cls, starts, ends, t_l=t_l, t_pg=t_pg)
-            result = execute_ops(graph, ops, parts, k, engine=engine)
+            result = execute_ops(graph, ops, parts, k, engine=engine,
+                                 replicated=replicated)
             per_op.setdefault(cls, []).append(
                 np.stack([result.per_op_total.astype(np.int64),
                           result.per_op_global.astype(np.int64)], axis=1)

@@ -231,6 +231,10 @@ class ServiceSnapshot:
                 "base_nodes": int(graph.store.base_nodes),
                 "base_edges": int(graph.store.base_edges),
                 "compactions": int(graph.store.compactions),
+                # Lineage-configured growth headroom: a post-restore
+                # compaction must re-derive capacity with the pre-crash
+                # multiplier, not the process default.
+                "headroom": float(graph.store.headroom),
             },
             "has_didic": svc.runtime.state is not None,
             "has_baseline": runtime._baseline is not None,
@@ -240,6 +244,10 @@ class ServiceSnapshot:
             "insert_n_spawned": runtime.insert.rng_state()[2],
             "applied_fingerprints": list(svc._applied_dynamism),
             "last_percent_global": float(svc.logger._last_percent_global),
+            # Placement exception table: capacity and replica epoch here,
+            # the (-1-padded) hot table itself in arrays. A restored
+            # service must serve the same replica generation bit-for-bit.
+            "placement": svc.placement.to_meta(),
             "health": svc.logger.health_report(),
             "scheduler_history": [
                 [int(hh["step"]), int(hh["n_moved"])]
@@ -261,6 +269,13 @@ class ServiceSnapshot:
             "logger_infos": np.array(
                 [[i.n_vertices, i.n_edges, i.local_traffic, i.global_traffic]
                  for i in svc.logger.infos], dtype=np.int64),
+            "placement_hot": np.ascontiguousarray(svc.placement.hot),
+            # The hot-selection signal must survive recovery, or the
+            # restored trajectory's next refresh_placement would select
+            # from a cold accumulator and diverge from the uninterrupted
+            # run.
+            "logger_vertex_traffic": np.ascontiguousarray(
+                svc.logger.vertex_traffic),
         }
         attr_delta_keys = []
         # sorted: the npz member order is part of the serialized bytes, so
@@ -383,12 +398,27 @@ class ServiceSnapshot:
                     base_nodes=int(sm["base_nodes"]),
                     base_edges=int(sm["base_edges"]),
                     compactions=int(sm["compactions"]),
+                    headroom=sm.get("headroom"),
                 )
             else:
                 st.base_nodes = int(sm["base_nodes"])
                 st.base_edges = int(sm["base_edges"])
                 st.compactions = int(sm["compactions"])
+                if sm.get("headroom") is not None:
+                    st.headroom = float(sm["headroom"])
         svc.parts = self.arrays["parts"].copy()
+        pm = self.meta.get("placement")  # absent in pre-placement snapshots
+        if pm is not None:
+            from repro.core.placement import Placement
+
+            svc.placement = Placement(
+                owner=svc.parts, capacity=int(pm["capacity"]),
+                hot=self.arrays["placement_hot"].copy(),
+                replica_epoch=int(pm["replica_epoch"]),
+            )
+        vt = self.arrays.get("logger_vertex_traffic")
+        if vt is not None:
+            svc.logger.vertex_traffic = vt.astype(np.int64).copy()
         # Drop any resident replay state: it belongs to the pre-crash
         # graph objects. Lazy rebuild restores it on first replay.
         for ops in svc._replayed_logs.values():

@@ -263,21 +263,39 @@ def _csr_from_edges(s: np.ndarray, r: np.ndarray, n_nodes: int) -> Tuple[np.ndar
 # Scalar oracle execution (one op at a time — the semantic reference)
 # ===========================================================================
 class _ScalarCounters:
-    def __init__(self, n_ops: int, k: int, n_nodes: int, t_l: int, t_pg: int):
+    def __init__(
+        self,
+        n_ops: int,
+        k: int,
+        n_nodes: int,
+        t_l: int,
+        t_pg: int,
+        replicated: Optional[np.ndarray] = None,
+    ):
         self.per_op_total = np.zeros(n_ops, dtype=np.int64)
         self.per_op_global = np.zeros(n_ops, dtype=np.int64)
         self.per_partition = np.zeros(k, dtype=np.int64)
         self.per_vertex = np.zeros(n_nodes, dtype=np.int64)
         self.t_l, self.t_pg = t_l, t_pg
+        self.replicated = replicated
 
     def step(self, i: int, u: int, v: int, parts: np.ndarray) -> None:
-        """One traversal step: op i expands edge u → v."""
+        """One traversal step: op i expands edge u → v.
+
+        With a placement exception table, a step into a replicated vertex
+        is served from the local read-only copy at ``parts[u]``: it is not
+        global traffic, and its potentially-global action books to the
+        *reading* partition. Per-vertex attribution is unchanged — the
+        replica serves ``v``'s data, so ``v`` stays the hot vertex in the
+        ``least_traffic`` / hot-selection signal.
+        """
         self.per_op_total[i] += self.t_l + self.t_pg
         pu, pv = parts[u], parts[v]
-        if pu != pv:
+        rep_v = self.replicated is not None and self.replicated[v]
+        if pu != pv and not rep_v:
             self.per_op_global[i] += 1
         self.per_partition[pu] += self.t_l
-        self.per_partition[pv] += self.t_pg
+        self.per_partition[pu if rep_v else pv] += self.t_pg
         self.per_vertex[u] += self.t_l
         self.per_vertex[v] += self.t_pg
 
@@ -287,12 +305,18 @@ class _ScalarCounters:
         )
 
 
-def _execute_bfs_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+def _execute_bfs_scalar(
+    graph: Graph,
+    ops: OpLog,
+    parts: np.ndarray,
+    k: int,
+    replicated: Optional[np.ndarray] = None,
+) -> TrafficResult:
     """Per-op level-by-level BFS down the filtered filesystem tree."""
     s, r = _filtered_children_csr_edges(graph)
     indptr, indices = _csr_from_edges(s, r, graph.n_nodes)
     max_levels = int(graph.node_attrs["depth"].max()) + 2
-    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg, replicated)
     for i in range(ops.n_ops):
         end = int(ops.ends[i])
         frontier = [int(ops.starts[i])]
@@ -312,10 +336,16 @@ def _execute_bfs_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> 
     return ctr.result()
 
 
-def _execute_twitter_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+def _execute_twitter_scalar(
+    graph: Graph,
+    ops: OpLog,
+    parts: np.ndarray,
+    k: int,
+    replicated: Optional[np.ndarray] = None,
+) -> TrafficResult:
     """Per-op 2-hop friend-of-a-friend expansion with path multiplicity."""
     indptr, indices, _ = graph.csr
-    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg, replicated)
     for i in range(ops.n_ops):
         frontier = [int(ops.starts[i])]
         for _hop in range(2):
@@ -330,7 +360,12 @@ def _execute_twitter_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int)
 
 
 def _execute_gis_scalar(
-    graph: Graph, ops: OpLog, parts: np.ndarray, k: int, max_expansions: int = 50_000
+    graph: Graph,
+    ops: OpLog,
+    parts: np.ndarray,
+    k: int,
+    max_expansions: int = 50_000,
+    replicated: Optional[np.ndarray] = None,
 ) -> TrafficResult:
     """Per-op heapq shortest paths + A*-expansion-set accounting.
 
@@ -346,7 +381,7 @@ def _execute_gis_scalar(
     weights = weights.astype(np.float32)
     lon = graph.node_attrs["lon"].astype(np.float32)
     lat = graph.node_attrs["lat"].astype(np.float32)
-    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg)
+    ctr = _ScalarCounters(ops.n_ops, k, graph.n_nodes, ops.t_l, ops.t_pg, replicated)
 
     for i in range(ops.n_ops):
         src, dst = int(ops.starts[i]), int(ops.ends[i])
@@ -391,13 +426,19 @@ def _execute_gis_scalar(
     return ctr.result()
 
 
-def _execute_scalar(graph: Graph, ops: OpLog, parts: np.ndarray, k: int) -> TrafficResult:
+def _execute_scalar(
+    graph: Graph,
+    ops: OpLog,
+    parts: np.ndarray,
+    k: int,
+    replicated: Optional[np.ndarray] = None,
+) -> TrafficResult:
     if ops.pattern == "filesystem":
-        return _execute_bfs_scalar(graph, ops, parts, k)
+        return _execute_bfs_scalar(graph, ops, parts, k, replicated=replicated)
     if ops.pattern in ("gis_short", "gis_long"):
-        return _execute_gis_scalar(graph, ops, parts, k)
+        return _execute_gis_scalar(graph, ops, parts, k, replicated=replicated)
     if ops.pattern == "twitter":
-        return _execute_twitter_scalar(graph, ops, parts, k)
+        return _execute_twitter_scalar(graph, ops, parts, k, replicated=replicated)
     raise ValueError(f"unknown pattern {ops.pattern!r}")
 
 
@@ -410,21 +451,29 @@ def execute_ops(
     parts: np.ndarray,
     k: Optional[int] = None,
     engine: str = "auto",
+    replicated: Optional[np.ndarray] = None,
 ) -> TrafficResult:
     """Run an evaluation log against a partitioning and measure traffic.
 
     ``engine``: ``"batched"`` (JIT engine, default), ``"scalar"`` (NumPy
     oracle), or ``"auto"`` (batched unless ``REPRO_TRAFFIC_ENGINE``
     overrides). Both produce identical counters.
+
+    ``replicated`` is an optional bool[N] mask of hot vertices replicated
+    read-only on every partition (``Placement.replicated_mask()``): steps
+    into them are local reads. ``None`` (the empty exception table) is
+    bit-identical to the pre-placement behavior on all four counters.
     """
     k = int(parts.max()) + 1 if k is None else k
     parts = np.asarray(parts, dtype=np.int64)
+    if replicated is not None:
+        replicated = np.asarray(replicated, dtype=bool)
     if engine == "auto":
         engine = os.environ.get("REPRO_TRAFFIC_ENGINE", "batched")
     if engine == "scalar":
-        return _execute_scalar(graph, ops, parts, k)
+        return _execute_scalar(graph, ops, parts, k, replicated=replicated)
     if engine == "batched":
         from repro.core.traffic_batched import execute_ops_batched
 
-        return execute_ops_batched(graph, ops, parts, k)
+        return execute_ops_batched(graph, ops, parts, k, replicated=replicated)
     raise ValueError(f"unknown engine {engine!r}")

@@ -201,6 +201,24 @@ class ResidentReplayState:
         self.dirty_ops = None
         self.pending_dirty = None
 
+    def state_bytes(self) -> int:
+        """Total array footprint of the resident artifacts, in bytes.
+
+        Computed from shapes/dtypes only (no device→host transfer), so
+        it is safe to call every tick. Device-resident GIS round masks
+        dominate; the host counters are included for completeness. This
+        is the observability hook for the ROADMAP resident-memory
+        ceiling: :meth:`repro.core.framework.RuntimeLogger.health_report`
+        surfaces the per-service sum as ``resident_state_bytes``.
+        """
+        arrays = [self.per_op_edges, self.tm, self.bfs_starts,
+                  self.bfs_levels, self.dirty_ops, self.pending_dirty]
+        for rnd in self.rounds:
+            arrays.extend([rnd.ids, rnd.member, rnd.foot, rnd.opidx, rnd.ok])
+        return sum(
+            int(a.size) * int(a.dtype.itemsize) for a in arrays if a is not None
+        )
+
 
 class ShardedTrafficReplayer:
     """Replay evaluation logs sharded over a mesh's data axes.
@@ -859,22 +877,37 @@ class ShardedTrafficReplayer:
         ops.__dict__.setdefault("_resident_replay", {})[self] = state
 
     # ------------------------------------------------------------------ run
-    def replay(self, ops, parts: np.ndarray, k: int, resident: bool = True):
+    def replay(
+        self,
+        ops,
+        parts: np.ndarray,
+        k: int,
+        resident: bool = True,
+        replicated: Optional[np.ndarray] = None,
+    ):
         """Replay ``ops`` against ``parts``.
 
         ``resident=True`` keeps/uses the log's parts-independent solve
         artifacts across calls (bit-identical results, see module
         docstring); ``resident=False`` forces a full cold solve with no
         cache reads or writes — the comparator the parity smokes use.
+
+        ``replicated`` masks hot vertices served by local read replicas
+        (see ``BatchedTrafficEngine.cross_degree``). Replica-awareness
+        enters only through the host-side ``cross_deg`` input and the
+        host-side finalize — the sharded compiled closures and the
+        resident solve artifacts are untouched, so the hot set can churn
+        between replays without a retrace or a resident re-solve.
         """
         parts = np.asarray(parts, dtype=np.int64)
-        cross_deg = self.engine.cross_degree(parts)
+        cross_deg = self.engine.cross_degree(parts, replicated=replicated)
         state = self._resident_state(ops) if resident else None
         if self.engine.kind == "bfs":
             edges, cross, tm64 = self._run_bfs(ops, cross_deg, state)
         else:
             edges, cross, tm64 = self._run_sssp(ops, cross_deg, state)
-        return self.engine.finalize(edges, cross, tm64, parts, k, ops.t_l, ops.t_pg)
+        return self.engine.finalize(edges, cross, tm64, parts, k, ops.t_l, ops.t_pg,
+                                    replicated=replicated)
 
 
 def get_replayer(
@@ -988,6 +1021,7 @@ def replay_sharded(
     delta_scale: Optional[float] = None,
     use_kernel: Optional[bool] = None,
     resident: bool = True,
+    replicated: Optional[np.ndarray] = None,
 ):
     """Replay an evaluation log sharded over ``mesh``'s data axes.
 
@@ -1004,4 +1038,4 @@ def replay_sharded(
         max_expansions=max_expansions, delta_scale=delta_scale,
         use_kernel=use_kernel,
     )
-    return replayer.replay(log, parts, k, resident=resident)
+    return replayer.replay(log, parts, k, resident=resident, replicated=replicated)

@@ -33,6 +33,7 @@ device-side padding, so host-path results are unchanged bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import cached_property
 from typing import Dict, Optional, Tuple
 
@@ -52,7 +53,21 @@ __all__ = [
 # Capacity multiplier applied when a store is allocated (at growth onset and
 # at every compaction): a delta sized to ``headroom - 1`` times the current
 # extents absorbs that much relative growth before the next compaction.
+# Default only — override per store (``GraphStore(headroom=...)`` /
+# ``Graph.ensure_store(headroom=...)``) or process-wide via the
+# ``REPRO_GROWTH_HEADROOM`` env var, the HBM-calibration knob: padded
+# capacity costs device memory linearly, so an accelerator run that knows
+# its growth schedule can trade compaction frequency against footprint.
 GROWTH_HEADROOM = 2.0
+
+
+def _resolve_headroom(headroom: Optional[float] = None) -> float:
+    if headroom is None:
+        headroom = float(os.environ.get("REPRO_GROWTH_HEADROOM", GROWTH_HEADROOM))
+    headroom = float(headroom)
+    if headroom < 1.0:
+        raise ValueError(f"growth headroom must be >= 1.0, got {headroom}")
+    return headroom
 
 
 class GraphStore:
@@ -80,12 +95,17 @@ class GraphStore:
         base_nodes: int,
         base_edges: int,
         compactions: int = 0,
+        headroom: Optional[float] = None,
     ) -> None:
         self.n_cap = int(n_cap)
         self.e_cap = int(e_cap)
         self.base_nodes = int(base_nodes)
         self.base_edges = int(base_edges)
         self.compactions = int(compactions)
+        # The store remembers its headroom so a compaction re-derives
+        # capacity with the multiplier this lineage was configured with,
+        # not whatever the process default happens to be at that moment.
+        self.headroom = _resolve_headroom(headroom)
         self.caches: Dict = {}
 
     def would_overflow(self, graph: "Graph", n_new_vertices: int, n_new_edges: int) -> bool:
@@ -115,11 +135,12 @@ class GraphStore:
             new_graph.store = self
         else:
             new_graph.store = GraphStore(
-                n_cap=_with_headroom(new_graph.n_nodes),
-                e_cap=_with_headroom(new_graph.n_edges),
+                n_cap=_with_headroom(new_graph.n_nodes, self.headroom),
+                e_cap=_with_headroom(new_graph.n_edges, self.headroom),
                 base_nodes=old_graph.n_nodes,
                 base_edges=old_graph.n_edges,
                 compactions=self.compactions + 1,
+                headroom=self.headroom,
             )
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -130,8 +151,8 @@ class GraphStore:
         )
 
 
-def _with_headroom(extent: int) -> int:
-    return int(np.ceil(GROWTH_HEADROOM * max(int(extent), 1)))
+def _with_headroom(extent: int, headroom: Optional[float] = None) -> int:
+    return int(np.ceil(_resolve_headroom(headroom) * max(int(extent), 1)))
 
 
 def coalesce_edges(
@@ -356,18 +377,23 @@ class Graph:
 
     # ----------------------------------------------------- delta overlay
     def ensure_store(
-        self, n_cap: Optional[int] = None, e_cap: Optional[int] = None
+        self,
+        n_cap: Optional[int] = None,
+        e_cap: Optional[int] = None,
+        headroom: Optional[float] = None,
     ) -> GraphStore:
         """Attach (or return) the delta-overlay store for this lineage.
 
         Called once when growth begins; the default capacities reserve
-        :data:`GROWTH_HEADROOM` times the current extents. Explicit caps
-        (used by compaction-boundary tests) must cover the current graph.
+        ``headroom`` times the current extents (``headroom`` defaults to
+        the ``REPRO_GROWTH_HEADROOM`` env var, then
+        :data:`GROWTH_HEADROOM`). Explicit caps (used by
+        compaction-boundary tests) must cover the current graph.
         """
         if self.store is not None:
             return self.store
-        n_cap = _with_headroom(self.n_nodes) if n_cap is None else int(n_cap)
-        e_cap = _with_headroom(self.n_edges) if e_cap is None else int(e_cap)
+        n_cap = _with_headroom(self.n_nodes, headroom) if n_cap is None else int(n_cap)
+        e_cap = _with_headroom(self.n_edges, headroom) if e_cap is None else int(e_cap)
         if n_cap < self.n_nodes or e_cap < self.n_edges:
             raise ValueError(
                 f"store capacity ({n_cap}, {e_cap}) below current extents "
@@ -376,6 +402,7 @@ class Graph:
         self.store = GraphStore(
             n_cap=n_cap, e_cap=e_cap,
             base_nodes=self.n_nodes, base_edges=self.n_edges,
+            headroom=headroom,
         )
         return self.store
 

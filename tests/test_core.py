@@ -111,6 +111,103 @@ class TestPartitioners:
         assert partitioners.hardcoded_for(tw, 2) is None  # paper: none for Twitter
 
 
+class TestPlacement:
+    """ISSUE 10 tentpole: ownership + fixed-capacity exception table."""
+
+    def _placement(self, n=10, capacity=4):
+        from repro.core.placement import Placement
+        return Placement(owner=np.arange(n, dtype=np.int32) % 3,
+                         capacity=capacity)
+
+    def test_table_is_static_sorted_and_padded(self):
+        p = self._placement()
+        assert p.hot.shape == (4,) and (p.hot == -1).all()
+        assert p.replicated_mask() is None       # empty → engine fast path
+        p.set_hot([7, 2, 2])
+        assert list(p.hot) == [2, 7, -1, -1]     # unique, sorted, padded
+        assert p.n_hot == 2 and p.is_replicated(7)
+        mask = p.replicated_mask()
+        assert mask.dtype == bool and mask.sum() == 2 and mask[2] and mask[7]
+        with pytest.raises(ValueError, match="capacity"):
+            p.set_hot([0, 1, 2, 3, 4])
+
+    def test_epoch_bumps_only_on_change(self):
+        p = self._placement()
+        e0 = p.replica_epoch
+        p.set_hot([3, 5])
+        assert p.replica_epoch == e0 + 1
+        p.set_hot([5, 3])                        # same set — no bump
+        assert p.replica_epoch == e0 + 1
+
+    def test_invalidate_repacks_and_counts(self):
+        p = self._placement()
+        p.set_hot([1, 4, 8])
+        e = p.replica_epoch
+        assert p.invalidate([4, 9]) == 1         # 9 not in the table
+        assert list(p.hot_vertices()) == [1, 8]
+        assert list(p.hot) == [1, 8, -1, -1]     # repacked, still padded
+        assert p.replica_epoch == e + 1
+        assert p.invalidate([9]) == 0
+        assert p.replica_epoch == e + 1          # no-op → no bump
+
+    def test_replace_owner_evicts_out_of_range(self):
+        p = self._placement(n=10)
+        p.set_hot([2, 9])
+        p.replace_owner(np.zeros(5, dtype=np.int32))   # shrink: 9 invalid
+        assert list(p.hot_vertices()) == [2]
+        assert p.owner.shape == (5,)
+
+    def test_capacity_zero_is_inert(self):
+        p = self._placement(capacity=0)
+        assert p.hot.shape == (0,)
+        assert p.replicated_mask() is None
+        assert p.invalidate([1, 2]) == 0
+
+    def test_snapshot_meta_roundtrip(self):
+        from repro.core.placement import Placement
+        p = self._placement()
+        p.set_hot([3])
+        q = Placement(owner=p.owner.copy(), capacity=p.to_meta()["capacity"],
+                      hot=p.hot.copy(),
+                      replica_epoch=p.to_meta()["replica_epoch"])
+        assert np.array_equal(q.hot, p.hot)
+        assert q.replica_epoch == p.replica_epoch
+
+
+class TestSelectHotVertices:
+    def test_top_k_by_traffic_deterministic_ties(self):
+        traffic = np.array([5, 0, 9, 9, 1, 3])
+        got = partitioners.select_hot_vertices(traffic, 3)
+        assert list(got) == [0, 2, 3]            # ties break by lowest id
+        assert partitioners.select_hot_vertices(traffic, 0).size == 0
+        # zero-traffic vertices never promoted even with room
+        assert list(partitioners.select_hot_vertices(traffic, 6)) == [0, 2, 3, 4, 5]
+
+    def test_hysteresis_keeps_incumbents(self):
+        traffic = np.array([10, 11, 0, 0])
+        hot = partitioners.select_hot_vertices(traffic, 2)
+        assert list(hot) == [0, 1]
+        # challenger at 12 < 1.25 * weakest incumbent (10): no churn
+        traffic2 = np.array([10, 11, 12, 0])
+        assert list(partitioners.select_hot_vertices(
+            traffic2, 2, current_hot=hot)) == [0, 1]
+        # challenger at 13 > 12.5: displaces the weakest incumbent
+        traffic3 = np.array([10, 11, 13, 0])
+        assert list(partitioners.select_hot_vertices(
+            traffic3, 2, current_hot=hot)) == [1, 2]
+
+    def test_free_capacity_admits_without_hysteresis(self):
+        traffic = np.array([10, 0, 4, 0])
+        hot = partitioners.select_hot_vertices(traffic, 3, current_hot=[0])
+        assert list(hot) == [0, 2]               # room left → plain admit
+
+    def test_stale_incumbents_dropped(self):
+        traffic = np.array([1, 2, 3])
+        got = partitioners.select_hot_vertices(traffic, 2,
+                                               current_hot=[7, -1, 1])
+        assert list(got) == [1, 2]               # 7 out of range, -1 pad
+
+
 class TestDynamism:
     def test_units_and_replay(self, fs):
         parts = partitioners.random_partition(fs.n_nodes, 4, seed=0)

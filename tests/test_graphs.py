@@ -138,6 +138,53 @@ class TestStructure:
             gis.with_vertices(2, attrs={"lon": np.zeros(1)})
 
 
+class TestGrowthHeadroom:
+    """ISSUE 10 satellite: the delta-overlay capacity multiplier is
+    configurable per store and process-wide (REPRO_GROWTH_HEADROOM)."""
+
+    def test_default_and_explicit_param(self, monkeypatch):
+        from repro.graphs import structure
+
+        monkeypatch.delenv("REPRO_GROWTH_HEADROOM", raising=False)
+        g = generators.two_cluster(n_per=16, seed=0)
+        st = g.ensure_store()
+        assert st.headroom == structure.GROWTH_HEADROOM
+        assert st.n_cap == int(np.ceil(structure.GROWTH_HEADROOM * g.n_nodes))
+
+        g2 = generators.two_cluster(n_per=16, seed=0)
+        st2 = g2.ensure_store(headroom=1.25)
+        assert st2.headroom == 1.25
+        assert st2.n_cap == int(np.ceil(1.25 * g2.n_nodes))
+        assert st2.e_cap == int(np.ceil(1.25 * g2.n_edges))
+
+    def test_env_var_override_and_validation(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GROWTH_HEADROOM", "1.5")
+        g = generators.two_cluster(n_per=16, seed=0)
+        st = g.ensure_store()
+        assert st.headroom == 1.5
+        assert st.n_cap == int(np.ceil(1.5 * g.n_nodes))
+        # explicit param beats the env var
+        g2 = generators.two_cluster(n_per=16, seed=0)
+        assert g2.ensure_store(headroom=3.0).headroom == 3.0
+        with pytest.raises(ValueError, match=">= 1.0"):
+            generators.two_cluster(n_per=16, seed=0).ensure_store(headroom=0.5)
+
+    def test_compaction_inherits_lineage_headroom(self, monkeypatch):
+        """A compaction re-derives capacity with the headroom this lineage
+        was configured with, not the process default at that moment."""
+        g = generators.two_cluster(n_per=16, seed=0)
+        n0 = g.n_nodes
+        g.ensure_store(n_cap=n0 + 1, e_cap=g.n_edges + 8, headroom=1.25)
+        monkeypatch.setenv("REPRO_GROWTH_HEADROOM", "9.0")  # must be ignored
+        g2 = g.with_vertices(2, senders=np.array([n0]),
+                             receivers=np.array([0]),
+                             weights=np.array([1.0], np.float32))
+        assert g2.store is not g.store
+        assert g2.store.compactions == 1
+        assert g2.store.headroom == 1.25
+        assert g2.store.n_cap == int(np.ceil(1.25 * g2.n_nodes))
+
+
 class TestSampler:
     def test_shapes_static(self, tw):
         ns = NeighborSampler(tw, (5, 3), seed=0)
